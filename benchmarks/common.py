@@ -1,0 +1,22 @@
+"""Shared benchmark helpers. Output convention: ``name,us_per_call,derived``
+CSV rows (derived carries the benchmark-specific payload)."""
+
+from __future__ import annotations
+
+import time
+from collections.abc import Callable
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kwargs):
+    """(result, us_per_call) with a warmup call."""
+    fn(*args, **kwargs)
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

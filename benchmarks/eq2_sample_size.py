@@ -1,0 +1,25 @@
+"""Paper Eq. 2: Cochran sample-size worked example + grid.
+
+Asserts the paper's number exactly (99% CI, p=.5, e=5% -> 664) and sweeps
+the (confidence, error) grid the paper names as the common choices.
+"""
+
+from __future__ import annotations
+
+from repro.core import cochran_sample_size
+
+from .common import emit, timed
+
+
+def run() -> None:
+    plan, us = timed(cochran_sample_size, 0.99, 0.50, 0.05)
+    assert plan.size == 664, f"Eq.2 mismatch: {plan.size} != 664"
+    emit("eq2/paper_example", us, f"s={plan.size};raw={plan.raw:.2f}")
+    for ci in (0.90, 0.95, 0.99):
+        for e in (0.01, 0.03, 0.05):
+            p = cochran_sample_size(ci, 0.50, e)
+            emit(f"eq2/ci{int(ci * 100)}_e{int(e * 100)}", 0.0,
+                 f"s={p.size}")
+    # finite-population correction (beyond-paper robustness)
+    p = cochran_sample_size(0.99, 0.50, 0.05, population=1000)
+    emit("eq2/fpc_X1000", 0.0, f"s={p.size}")

@@ -1,0 +1,86 @@
+"""Paper Fig. 2: required cores — D&A_REAL vs the Lemma-2 bound.
+
+For each benchmark dataset and a grid of query counts X, runs the REAL
+pipeline: measured per-query FORA times (JAX engine, wall clock) feed
+D&A_REAL (Alg. 2) with the paper's per-dataset scaling factor d; the
+Lemma-2 Hoeffding bound on the same sample is the baseline. Reports the
+core reduction percentage (paper maxima: 62.50 / 66.67 / 38.89 / 73.68%
+for Web-Stanford / DBLP / Pokec / LiveJournal).
+
+Deadlines are set per dataset from the measured average query time
+(T ~= X * t_avg / target_parallelism), mirroring the paper's choice of T
+"based on the processing time per query".
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import InfeasibleDeadline, dna_real, fraction_sample_size
+from repro.ppr import ForaExecutor, ForaParams, PprWorkload
+from repro.ppr.datasets import TABLE1, synthesize
+
+from .common import emit
+
+# X grids: paper uses dataset-specific grids (its Fig. 2 x-axes); ours are
+# scaled to the 1-core CPU container. --full widens them.
+DEFAULT_GRID = (48, 96)
+FULL_GRID = (64, 128, 192, 256)
+TARGET_PARALLELISM = 4           # sets T so that ~4 cores would be busy
+# Deadline floors keep preprocessing a small fraction of T (the paper's
+# regime: X in the tens of thousands makes t_pre << T; at CPU scale we
+# enforce it explicitly, t_pre <= T/8).
+T_PRE_FLOOR = 8.0
+T_MAX_FLOOR = 6.0
+
+
+def run(scale: int = 512, grid=DEFAULT_GRID, epsilon: float = 0.5,
+        seed: int = 0) -> None:
+    for name, spec in TABLE1.items():
+        graph = synthesize(spec, scale=scale, seed=seed)
+        for X in grid:
+            workload = PprWorkload(graph=graph, num_queries=X, seed=seed)
+            executor = ForaExecutor(workload=workload,
+                                    params=ForaParams(epsilon=epsilon))
+            # §IV-A: web-stanford uses the (conservative) Eq.-1 sample size,
+            # the larger graphs use 5% of the smallest query count. At CPU
+            # scale Eq.1+FPC at X<=256 would sample nearly everything, so we
+            # use a 25% fraction for web-stanford — same intent (its per-
+            # source fluctuation is too heavy for a 5% probe), documented in
+            # EXPERIMENTS.md.
+            frac = 0.25 if name == "web-stanford" else 0.05
+            s = fraction_sample_size(X, frac)
+            # calibrate T from a steady-state probe of the sample queries
+            # (second run — the first absorbs any residual jit variants)
+            executor(list(range(s)))
+            probe = executor(list(range(s)))
+            deadline = max(X * probe.t_avg / TARGET_PARALLELISM,
+                           probe.t_max * T_MAX_FLOOR,
+                           probe.t_pre * T_PRE_FLOOR)
+            # paper §III-A: on infeasibility "we prolong the duration to
+            # ensure that a feasible solution can always be obtained"
+            res = None
+            for attempt in range(3):
+                try:
+                    res = dna_real(X, deadline, executor, max_cores=64,
+                                   sample_size=s,
+                                   scaling_factor=spec.scaling_factor_d)
+                    break
+                except InfeasibleDeadline:
+                    deadline *= 2.0
+            if res is None:
+                emit(f"fig2/{name}/X{X}", 0.0,
+                     f"rejected_after_extensions;T={deadline:.2f}s")
+                continue
+            emit(f"fig2/{name}/X{X}",
+                 res.sample_stats.t_avg * 1e6,
+                 f"cores={res.cores};lemma2={res.bounds.lemma2_cores};"
+                 f"reduction={res.reduction_vs_lemma2_pct:.2f}%;"
+                 f"T={deadline:.2f}s;d={spec.scaling_factor_d};"
+                 f"completion={res.completion_time:.2f}s;"
+                 f"accepted={res.accepted}")
+            # paper's empirical finding, with +1 core slack for CPU
+            # wall-clock jitter (single measurement, shared host)
+            assert res.cores <= res.bounds.lemma2_cores + 1, \
+                (f"D&A_REAL ({res.cores}) far above Lemma-2 baseline "
+                 f"({res.bounds.lemma2_cores})")

@@ -1,0 +1,44 @@
+"""§Roofline aggregation: per-cell three-term table from the dry-run reports.
+
+Reads reports/dryrun/*.json (written by repro.launch.sweep / dryrun) and
+emits one CSV row per (arch, shape, mesh) with compute/memory/collective
+seconds, the dominant term under both memory views, MODEL_FLOPS ratio and
+roofline MFU. This is the generator for EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+REPORT_DIR = Path(__file__).resolve().parents[1] / "reports" / "dryrun"
+
+
+def run(mesh: str | None = None) -> None:
+    if not REPORT_DIR.exists():
+        emit("roofline/missing", 0.0, "run repro.launch.sweep first")
+        return
+    rows = 0
+    for path in sorted(REPORT_DIR.glob("*.json")):
+        r = json.loads(path.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            emit(tag, 0.0, "skipped=" + r["reason"][:60].replace(",", ";"))
+            continue
+        if r["status"] != "ok":
+            emit(tag, 0.0, "error=" + r["error"][:60].replace(",", ";"))
+            continue
+        rf = r["roofline"]
+        emit(tag, rf["step_s"] * 1e6,
+             f"compute_s={rf['compute_s']:.4g};memory_s={rf['memory_s']:.4g};"
+             f"collective_s={rf['collective_s']:.4g};"
+             f"memory_model_s={rf['memory_model_s']:.4g};"
+             f"dominant={rf['dominant']};dominant_fused={rf['dominant_fused']};"
+             f"useful_ratio={rf['useful_flops_ratio']:.3f};"
+             f"mfu={rf['mfu']:.3f};mfu_fused={rf['mfu_fused']:.3f}")
+        rows += 1
+    emit("roofline/total_rows", 0.0, f"rows={rows}")

@@ -1,0 +1,56 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only eq2,fig2] [--full]
+
+Output: ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: eq2,table1,fig2,fig3,kernels,roofline")
+    ap.add_argument("--full", action="store_true",
+                    help="wider Fig.2 grid (slower)")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from . import (eq2_sample_size, fig2_cores, fig3_scaling, kernels_bench,
+                   roofline, table1_datasets)
+
+    suites = [
+        ("eq2", eq2_sample_size.run, {}),
+        ("table1", table1_datasets.run, {}),
+        ("kernels", kernels_bench.run, {}),
+        ("fig2", fig2_cores.run,
+         {"grid": fig2_cores.FULL_GRID if args.full else
+          fig2_cores.DEFAULT_GRID}),
+        ("fig3", fig3_scaling.run, {}),
+        ("roofline", roofline.run, {}),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn, kw in suites:
+        if want and name not in want:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn(**kw)
+            print(f"suite/{name},{(time.perf_counter() - t0) * 1e6:.0f},ok")
+        except Exception as e:      # noqa: BLE001
+            failures += 1
+            print(f"suite/{name},0,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Table I: benchmark dataset summary.
+
+Builds the four synthetic stand-in graphs at 1/64 scale (offline container —
+DESIGN.md §7) and reports generated vs paper-target order/size/type plus the
+graph-build throughput.
+"""
+
+from __future__ import annotations
+
+from repro.ppr.datasets import TABLE1, synthesize
+
+from .common import emit, timed
+
+
+def run(scale: int = 64) -> None:
+    for name, spec in TABLE1.items():
+        g, us = timed(synthesize, spec, scale, repeats=1)
+        tn, tm = spec.scaled(scale)
+        emit(f"table1/{name}", us,
+             f"n={g.n};m={g.m};type={'dir' if g.directed else 'undir'};"
+             f"paper_n={spec.n};paper_m={spec.m};scale=1/{scale};"
+             f"avg_deg={g.avg_out_degree:.1f}")

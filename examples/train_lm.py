@@ -1,0 +1,24 @@
+"""End-to-end training example: ~100M-parameter LM, few hundred steps.
+
+Wraps the production driver (launch/train.py): token pipeline ->
+sharded-step -> AdamW -> async checkpoints -> elastic restart on an
+injected failure. On CPU this takes a few minutes at the default 200 steps
+(use --steps 50 for a smoke run).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--arch", "stablelm-1.6b", "--preset", "lm100m",
+                "--batch", "4", "--seq", "128",
+                "--ckpt-dir", "/tmp/repro_lm100m",
+                "--ckpt-every", "50", "--fail-at", "120:3"]
+    if "--steps" not in " ".join(args):
+        defaults += ["--steps", "200"]
+    sys.argv = [sys.argv[0]] + defaults + args
+    main()

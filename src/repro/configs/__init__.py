@@ -1,0 +1,52 @@
+"""Architecture registry: ``--arch <id>`` resolution for all launchers.
+
+Ten assigned architectures + the paper's own PPR/FORA workload. Each entry is
+an ``ArchDef`` (see base.py) exposing abstract inputs, partition specs, step
+builders, useful-FLOPs estimates and a reduced smoke configuration.
+"""
+
+from __future__ import annotations
+
+from .base import ArchDef, DIN_SHAPES, GNN_SHAPES, LM_SHAPES
+from . import (dimenet_arch, din_arch, gcn_cora, gemma_2b, graphcast_arch,
+               moonshot_v1_16b_a3b, pna_arch, ppr_fora, qwen1_5_32b,
+               qwen2_moe_a2_7b, stablelm_1_6b)
+
+REGISTRY: dict[str, ArchDef] = {
+    a.arch_id: a for a in [
+        moonshot_v1_16b_a3b.ARCH,
+        qwen2_moe_a2_7b.ARCH,
+        stablelm_1_6b.ARCH,
+        qwen1_5_32b.ARCH,
+        gemma_2b.ARCH,
+        pna_arch.ARCH,
+        gcn_cora.ARCH,
+        graphcast_arch.ARCH,
+        dimenet_arch.ARCH,
+        din_arch.ARCH,
+        ppr_fora.ARCH,
+    ]
+}
+
+ASSIGNED = [a for a in REGISTRY if a != "ppr-fora"]
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]
+
+
+def list_cells(include_ppr: bool = False):
+    """All (arch, shape, skip_reason) cells."""
+    out = []
+    for aid, arch in REGISTRY.items():
+        if aid == "ppr-fora" and not include_ppr:
+            continue
+        for sid in arch.shape_ids():
+            out.append((aid, sid, arch.skip_reason(sid)))
+    return out
+
+
+__all__ = ["ArchDef", "ASSIGNED", "DIN_SHAPES", "GNN_SHAPES", "LM_SHAPES",
+           "REGISTRY", "get_arch", "list_cells"]

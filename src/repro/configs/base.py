@@ -1,0 +1,619 @@
+"""Config registry plumbing: arch definitions, shape cells, input specs.
+
+Every assigned architecture registers an ``ArchDef`` subclass instance that
+can, for each of its shape cells:
+  * produce abstract inputs (ShapeDtypeStruct — no allocation),
+  * produce the matching input PartitionSpecs for a mesh,
+  * build the step function to lower (train_step / prefill / decode / serve),
+  * run a REDUCED smoke configuration with real arrays on CPU.
+
+The dry-run (launch/dryrun.py) iterates (arch x shape x mesh) through this
+interface; smoke tests call ``smoke_run``; benchmarks reuse the same steps.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ShapeDtypeStruct as SDS
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..distributed import sharding as shd
+from ..models import din, dimenet, gcn, graphcast, pna, transformer
+from ..models.gnn.common import GraphBatch
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+I32, F32 = jnp.int32, jnp.float32
+
+
+@dataclass(frozen=True)
+class CellReportMeta:
+    arch: str
+    shape: str
+    kind: str
+    model_flops_per_step: float      # 6*N*D-style useful-FLOPs estimate
+    notes: str = ""
+
+
+class ArchDef:
+    arch_id: str = ""
+    family: str = ""                 # key into sharding.FAMILY_RULES
+
+    # -- shape catalogue -----------------------------------------------------
+    def shape_ids(self) -> list[str]:
+        raise NotImplementedError
+
+    def skip_reason(self, shape_id: str) -> str | None:
+        return None
+
+    def kind(self, shape_id: str) -> str:
+        raise NotImplementedError
+
+    # -- dry-run interface -----------------------------------------------------
+    def abstract_params(self, shape_id: str | None = None) -> Any:
+        raise NotImplementedError
+
+    def abstract_inputs(self, shape_id: str) -> dict[str, Any]:
+        raise NotImplementedError
+
+    def input_partition_specs(self, mesh: Mesh, shape_id: str) -> dict[str, P]:
+        raise NotImplementedError
+
+    def build_step(self, shape_id: str) -> Callable:
+        """Step fn. Train kinds: (params, opt_state, **inputs) ->
+        (params, opt_state, loss); others: (params, **inputs) -> outputs."""
+        raise NotImplementedError
+
+    def model_flops(self, shape_id: str) -> float:
+        """Useful FLOPs per step (6*N*D for training, 2*N*D inference)."""
+        raise NotImplementedError
+
+    def model_bytes(self, shape_id: str) -> float:
+        """Analytic fusion-aware HBM traffic per step (whole job, bytes).
+        What a well-fused TPU execution streams: weights, optimizer state,
+        checkpointed activations, KV caches, embedding rows — NOT the
+        fusion-resident intermediates HLO bytes-accessed double-counts."""
+        raise NotImplementedError
+
+    # -- smoke interface ---------------------------------------------------------
+    def smoke_run(self, key: jax.Array) -> dict[str, float]:
+        """Reduced config, real arrays, one step; returns finite scalars."""
+        raise NotImplementedError
+
+    # -- shared helpers ------------------------------------------------------
+    def needs_optimizer(self, shape_id: str) -> bool:
+        return self.kind(shape_id) == "train"
+
+    def abstract_opt_state(self, shape_id: str | None = None):
+        return jax.eval_shape(adamw_init, self.abstract_params(shape_id))
+
+    def param_partition_specs(self, shape_id: str | None = None):
+        return shd.param_specs(self.abstract_params(shape_id), self.family)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+
+
+LM_SHAPES: dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+
+class LMArch(ArchDef):
+    family = "lm"
+
+    def __init__(self, arch_id: str, cfg: transformer.LMConfig,
+                 smoke_cfg: transformer.LMConfig,
+                 opt: AdamWConfig = AdamWConfig(),
+                 zero1_grad_hint: bool = False,
+                 grad_accum: int = 1):
+        self.arch_id = arch_id
+        self.cfg = cfg
+        self.smoke_cfg = smoke_cfg
+        self.opt = opt
+        # §Perf H3: explicitly reshard grads to the ZeRO-1 (data+model)
+        # layout before the optimizer — one reduce-scatter instead of the
+        # all-reduce + reshard chain GSPMD otherwise emits.
+        self.zero1_grad_hint = zero1_grad_hint
+        # §Perf H4 / HBM-fit lever: microbatched gradient accumulation —
+        # peak activation memory divides by grad_accum at the cost of one
+        # grads-sized accumulator.
+        self.grad_accum = grad_accum
+
+    def shape_ids(self):
+        return list(LM_SHAPES)
+
+    def kind(self, shape_id):
+        return LM_SHAPES[shape_id]["kind"]
+
+    def skip_reason(self, shape_id):
+        if shape_id == "long_500k":
+            return ("full-attention architecture: 524k dense attention is the "
+                    "sub-quadratic gate; skipped per assignment rules "
+                    "(DESIGN.md §6)")
+        return None
+
+    def abstract_params(self, shape_id: str | None = None):
+        return jax.eval_shape(lambda: transformer.init(
+            jax.random.PRNGKey(0), self.cfg))
+
+    def param_partition_specs(self, shape_id: str | None = None):
+        specs = super().param_partition_specs(shape_id)
+        if not self.cfg.attn_tp:
+            # data-parallel attention: replicate attention weights (perf
+            # variant for MoE archs with small d_model — §Perf)
+            def fix(path, spec):
+                return P() if "attn" in path else spec
+            specs = jax.tree_util.tree_map_with_path(
+                lambda kp, sp: fix(shd._path_str(kp), sp), specs,
+                is_leaf=lambda x: isinstance(x, P))
+        return specs
+
+    def abstract_inputs(self, shape_id):
+        s = LM_SHAPES[shape_id]
+        B, S = s["batch"], s["seq"]
+        cfg = self.cfg
+        if s["kind"] == "train":
+            return {"tokens": SDS((B, S), I32), "labels": SDS((B, S), I32)}
+        if s["kind"] == "prefill":
+            return {"tokens": SDS((B, S), I32)}
+        # decode: one new token against an S-long cache
+        cache = SDS((cfg.n_layers, 2, B, S, cfg.n_kv_heads, cfg.head_dim),
+                    cfg.jnp_dtype())
+        return {"token": SDS((B, 1), I32), "kv_cache": cache,
+                "cache_len": SDS((), I32)}
+
+    def input_partition_specs(self, mesh, shape_id):
+        s = LM_SHAPES[shape_id]
+        b = shd.batch_axes(mesh)
+        if s["kind"] == "train":
+            return {"tokens": P(b, None), "labels": P(b, None)}
+        if s["kind"] == "prefill":
+            return {"tokens": P(b, None)}
+        # KV cache (L, 2, B, S, Hkv, Dh): TP-shard heads when divisible by
+        # the model axis, else the head_dim (gemma MQA: 1 head, qwen: 40)
+        model_size = mesh.shape["model"]
+        if self.cfg.n_kv_heads % model_size == 0:
+            kv_spec = P(None, None, b, None, "model", None)
+        elif self.cfg.head_dim % model_size == 0:
+            kv_spec = P(None, None, b, None, None, "model")
+        else:
+            kv_spec = P(None, None, b, None, None, None)
+        return {"token": P(b, None), "kv_cache": kv_spec, "cache_len": P()}
+
+    def build_step(self, shape_id):
+        cfg, opt = self.cfg, self.opt
+        kind = self.kind(shape_id)
+        if kind == "train":
+            hint = self.zero1_grad_hint
+            accum = self.grad_accum
+            arch = self
+
+            def train_step(params, opt_state, batch):
+                if accum > 1:
+                    B = batch["tokens"].shape[0]
+                    mb = B // accum
+                    toks = batch["tokens"].reshape(accum, mb, -1)
+                    labs = batch["labels"].reshape(accum, mb, -1)
+
+                    def micro(carry, xs):
+                        g_acc, l_acc = carry
+                        t, l = xs
+                        loss_i, g_i = jax.value_and_grad(
+                            transformer.loss_fn)(params, cfg, t, l)
+                        g_acc = jax.tree.map(jnp.add, g_acc, g_i)
+                        return (g_acc, l_acc + loss_i), None
+
+                    g0 = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, p.dtype), params)
+                    (grads, loss), _ = jax.lax.scan(
+                        micro, (g0, jnp.zeros((), jnp.float32)), (toks, labs))
+                    grads = jax.tree.map(lambda g: g / accum, grads)
+                    loss = loss / accum
+                else:
+                    loss, grads = jax.value_and_grad(transformer.loss_fn)(
+                        params, cfg, batch["tokens"], batch["labels"])
+                if hint:
+                    from jax.sharding import NamedSharding
+                    from ..distributed.ctx import active_mesh
+                    mesh = active_mesh()
+                    if mesh is not None:
+                        p_specs = arch.param_partition_specs(shape_id)
+                        z_specs = shd.opt_state_specs(p_specs, grads, mesh)
+                        grads = jax.tree.map(
+                            lambda g, sp: jax.lax.with_sharding_constraint(
+                                g, NamedSharding(mesh, sp)), grads, z_specs,
+                            is_leaf=lambda x: hasattr(x, "shape"))
+                params, opt_state, _ = adamw_update(opt, params, grads, opt_state)
+                return params, opt_state, loss
+            return train_step
+        if kind == "prefill":
+            def prefill(params, batch):
+                return transformer.prefill_step(params, cfg, batch["tokens"])
+            return prefill
+
+        def decode(params, batch):
+            return transformer.decode_step(params, cfg, batch["token"],
+                                           batch["kv_cache"],
+                                           batch["cache_len"])
+        return decode
+
+    def model_flops(self, shape_id):
+        s = LM_SHAPES[shape_id]
+        tokens = s["batch"] * (s["seq"] if s["kind"] != "decode" else 1)
+        n_active = self.cfg.flops_param_count
+        mult = 6.0 if s["kind"] == "train" else 2.0
+        flops = mult * n_active * tokens
+        if s["kind"] != "decode":
+            # causal attention score+value FLOPs: 12 * B * S^2/2 * H * Dh
+            # (x3 for train bwd)
+            attn = (s["batch"] * s["seq"] ** 2 * self.cfg.n_heads
+                    * self.cfg.head_dim * 2 * self.cfg.n_layers)
+            flops += attn * (3.0 if s["kind"] == "train" else 1.0)
+        return flops
+
+    def model_bytes(self, shape_id):
+        s = LM_SHAPES[shape_id]
+        cfg = self.cfg
+        B, S = s["batch"], s["seq"]
+        N = cfg.param_count
+        P_b = 2.0 * N                                  # bf16 weights
+        act = B * S * cfg.d_model * 2.0                # one activation tensor
+        L = cfg.n_layers
+        kv_block = cfg.attn_block_kv
+        if s["kind"] == "train":
+            weights = 3 * P_b + 2 * P_b + 20.0 * N     # fwd/remat/bwd + grads + opt fp32
+            acts = 15.0 * L * act                      # checkpointed streams
+            nq = -(-S // kv_block)
+            kv_stream = L * B * nq * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+            logits = 3.0 * B * S * cfg.vocab * 2
+            return weights + acts + kv_stream + logits
+        if s["kind"] == "prefill":
+            nq = -(-S // kv_block)
+            kv = L * B * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+            kv_stream = L * B * nq * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+            return P_b + 6.0 * L * act + kv + kv_stream + B * cfg.vocab * 4
+        # decode: read all weights once + full KV cache scan + tiny acts
+        kv_read = L * B * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+        return P_b + kv_read + B * cfg.vocab * 4
+
+    def smoke_run(self, key):
+        cfg = self.smoke_cfg
+        params = transformer.init(key, cfg)
+        B, S = 2, 32
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        labels = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        opt_state = adamw_init(params)
+        loss, grads = jax.value_and_grad(transformer.loss_fn)(
+            params, cfg, toks, labels)
+        params2, _, m = adamw_update(self.opt, params, grads, opt_state)
+        logits, kv = transformer.prefill_step(params2, cfg, toks)
+        cache = transformer.make_kv_cache(cfg, B, S + 8)
+        cache = jax.lax.dynamic_update_slice(cache, kv, (0,) * 6)
+        lg, _ = transformer.decode_step(params2, cfg, toks[:, :1], cache,
+                                        jnp.int32(S))
+        return {"loss": float(loss), "grad_norm": float(m["grad_norm"]),
+                "prefill_logit_mean": float(jnp.mean(logits)),
+                "decode_logit_mean": float(jnp.mean(lg))}
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+
+
+GNN_SHAPES: dict[str, dict] = {
+    "full_graph_sm": dict(n=2_708, m=10_556, d=1_433, classes=7, graphs=1),
+    "minibatch_lg": dict(n=180_224, m=179_200, d=602, classes=41, graphs=1,
+                         sampled=True),
+    "ogb_products": dict(n=2_449_029, m=61_859_140, d=100, classes=47,
+                         graphs=1),
+    "molecule": dict(n=30 * 128, m=64 * 128, d=16, classes=1, graphs=128),
+}
+
+
+def _pad(x: int, mult: int = 128) -> int:
+    """Pad a logical size to a mesh-divisible multiple. Explicit pjit
+    in_shardings require divisibility (GSPMD does not auto-pad arguments);
+    node/edge masks make padding semantically transparent. 128 covers every
+    batch-axes product used (32) plus lane alignment."""
+    return -(-x // mult) * mult
+
+
+def _triplet_budget(m: int) -> int:
+    return _pad(int(min(8 * m, 1 << 25)))
+
+
+class GNNArch(ArchDef):
+    family = "gnn"
+
+    def __init__(self, arch_id: str, model, make_cfg: Callable[[dict], Any],
+                 make_smoke_cfg: Callable[[], Any],
+                 opt: AdamWConfig = AdamWConfig()):
+        self.arch_id = arch_id
+        self.model = model
+        self.make_cfg = make_cfg          # (shape meta dict) -> model config
+        self.make_smoke_cfg = make_smoke_cfg
+        self.opt = opt
+        self._is_dimenet = model is dimenet
+        self._is_graphcast = model is graphcast
+
+    def shape_ids(self):
+        return list(GNN_SHAPES)
+
+    def kind(self, shape_id):
+        return "train"
+
+    def _cfg(self, shape_id):
+        return self.make_cfg(GNN_SHAPES[shape_id])
+
+    def abstract_params(self, shape_id: str | None = None):
+        cfg = self._cfg(shape_id or "full_graph_sm")
+        return jax.eval_shape(lambda: self.model.init(jax.random.PRNGKey(0), cfg))
+
+    def abstract_inputs(self, shape_id):
+        s = GNN_SHAPES[shape_id]
+        n, m, d, g = _pad(s["n"]), _pad(s["m"]), s["d"], s["graphs"]
+        out = {"node_feat": SDS((n, d), F32),
+               "edge_index": SDS((2, m), I32),
+               "node_mask": SDS((n,), jnp.bool_),
+               "edge_mask": SDS((m,), jnp.bool_)}
+        if self._is_dimenet:
+            t = _triplet_budget(s["m"])
+            out.update(positions=SDS((n, 3), F32),
+                       triplet_kj=SDS((t,), I32), triplet_ji=SDS((t,), I32),
+                       graph_ids=SDS((n,), I32),
+                       labels=SDS((g, self._cfg(shape_id).n_out), F32))
+        elif self._is_graphcast:
+            out["labels"] = SDS((n, self._cfg(shape_id).n_out), F32)
+        else:
+            out["labels"] = SDS((n,), I32)
+        return out
+
+    def input_partition_specs(self, mesh, shape_id):
+        b = shd.batch_axes(mesh)
+        g = GNN_SHAPES[shape_id]["graphs"]
+        out = {"node_feat": P(b, None), "edge_index": P(None, b),
+               "node_mask": P(b), "edge_mask": P(b)}
+        if self._is_dimenet:
+            # per-graph labels: shard only when the graph count divides the
+            # batch axes (molecule: 128 graphs); single-graph cells replicate
+            glab = P(b, None) if g >= 128 else P(None, None)
+            out.update(positions=P(b, None), triplet_kj=P(b),
+                       triplet_ji=P(b), graph_ids=P(b), labels=glab)
+        elif self._is_graphcast:
+            out["labels"] = P(b, None)
+        else:
+            out["labels"] = P(b)
+        return out
+
+    def build_step(self, shape_id):
+        cfg = self._cfg(shape_id)
+        model, opt = self.model, self.opt
+        is_dime = self._is_dimenet
+        n_graphs = GNN_SHAPES[shape_id]["graphs"]
+
+        def loss_of(params, inputs):
+            batch = GraphBatch(
+                node_feat=inputs["node_feat"], edge_index=inputs["edge_index"],
+                node_mask=inputs["node_mask"], edge_mask=inputs["edge_mask"],
+                positions=inputs.get("positions"),
+                graph_ids=inputs.get("graph_ids"),
+                labels=inputs.get("labels"), num_graphs=n_graphs)
+            if is_dime:
+                return model.loss_fn(params, cfg, batch,
+                                     (inputs["triplet_kj"], inputs["triplet_ji"]))
+            return model.loss_fn(params, cfg, batch)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+            params, opt_state, _ = adamw_update(opt, params, grads, opt_state)
+            return params, opt_state, loss
+        return train_step
+
+    def model_flops(self, shape_id):
+        """Dominant useful FLOPs: per-edge message GEMMs + per-node MLPs."""
+        s = GNN_SHAPES[shape_id]
+        cfg = self._cfg(shape_id)
+        n, m, d = s["n"], s["m"], s["d"]
+        h = getattr(cfg, "d_hidden", 128)
+        L = getattr(cfg, "n_layers", getattr(cfg, "n_blocks", 2))
+        if self._is_dimenet:
+            t = _triplet_budget(m)
+            per = t * h * cfg.n_bilinear * h * 2 + m * 2 * h * h * 2
+            return 6.0 * L * per / 2.0        # fwd+bwd
+        if self.model is gcn:
+            return 6.0 * (n * d * h + (L - 1) * n * h * h + m * h)
+        if self.model is pna:
+            per = m * (2 * h) * h * 2 + n * (13 * h) * h * 2
+            return 6.0 * L * per / 2.0
+        # graphcast
+        per = m * (3 * h) * h * 2 + n * (2 * h) * h * 2
+        return 6.0 * (L * per + n * d * h * 2) / 2.0
+
+    def model_bytes(self, shape_id):
+        sh = GNN_SHAPES[shape_id]
+        cfg = self._cfg(shape_id)
+        n, m, d = sh["n"], sh["m"], sh["d"]
+        h = getattr(cfg, "d_hidden", 128)
+        L = getattr(cfg, "n_layers", getattr(cfg, "n_blocks", 2))
+        passes = 3.0                                   # fwd + bwd + remat-ish
+        node = 6.0 * n * h * 4
+        edge = 3.0 * m * h * 4                          # gather src, msg, scatter
+        total = passes * L * (node + edge) + n * d * 4
+        if self._is_dimenet:
+            t = _triplet_budget(m)
+            total += passes * L * t * (2 * h + cfg.n_bilinear) * 4
+        from ..distributed.sharding import params_bytes as pb
+        total += 12.0 * pb(self.abstract_params(shape_id))   # opt traffic
+        return total
+
+    def smoke_run(self, key):
+        cfg = self.make_smoke_cfg()
+        n, m, g = 64, 256, 4
+        d = cfg.d_in if hasattr(cfg, "d_in") else 16
+        from ..models.gnn.common import random_graph_batch
+        n_classes = getattr(cfg, "n_classes", 2)
+        batch = random_graph_batch(key, n, m, d, n_graphs=g,
+                                   with_positions=True, n_classes=n_classes)
+        params = self.model.init(key, cfg)
+        if self._is_dimenet:
+            kj, ji = dimenet.build_triplets(np.asarray(batch.edge_index), n,
+                                            max_triplets=512)
+            loss = self.model.loss_fn(params, cfg, batch,
+                                      (jnp.asarray(kj), jnp.asarray(ji)))
+            grads = jax.grad(lambda p: self.model.loss_fn(
+                p, cfg, batch, (jnp.asarray(kj), jnp.asarray(ji))))(params)
+        else:
+            loss = self.model.loss_fn(params, cfg, batch)
+            grads = jax.grad(lambda p: self.model.loss_fn(p, cfg, batch))(params)
+        from ..optim.adamw import global_norm
+        return {"loss": float(loss), "grad_norm": float(global_norm(grads))}
+
+
+# ---------------------------------------------------------------------------
+# RecSys family (DIN)
+
+
+DIN_SHAPES: dict[str, dict] = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, candidates=1_000_000),
+}
+
+
+class DINArch(ArchDef):
+    family = "recsys"
+
+    def __init__(self, arch_id: str, cfg: din.DINConfig,
+                 smoke_cfg: din.DINConfig, opt: AdamWConfig = AdamWConfig(),
+                 retrieval_factored: bool = False):
+        self.arch_id = arch_id
+        self.cfg = cfg
+        self.smoke_cfg = smoke_cfg
+        self.opt = opt
+        # §Perf D1: algebraically-factored attention MLP for retrieval
+        self.retrieval_factored = retrieval_factored
+
+    def shape_ids(self):
+        return list(DIN_SHAPES)
+
+    def kind(self, shape_id):
+        return DIN_SHAPES[shape_id]["kind"]
+
+    def abstract_params(self, shape_id: str | None = None):
+        return jax.eval_shape(lambda: din.init(jax.random.PRNGKey(0), self.cfg))
+
+    def abstract_inputs(self, shape_id):
+        s = DIN_SHAPES[shape_id]
+        L = self.cfg.seq_len
+        if s["kind"] == "retrieval":
+            n = s["candidates"]
+            return {"hist_items": SDS((1, L), I32), "hist_cats": SDS((1, L), I32),
+                    "hist_mask": SDS((1, L), jnp.bool_),
+                    "cand_items": SDS((n,), I32), "cand_cats": SDS((n,), I32)}
+        B = s["batch"]
+        out = {"hist_items": SDS((B, L), I32), "hist_cats": SDS((B, L), I32),
+               "hist_mask": SDS((B, L), jnp.bool_),
+               "target_item": SDS((B,), I32), "target_cat": SDS((B,), I32)}
+        if s["kind"] == "train":
+            out["label"] = SDS((B,), F32)
+        return out
+
+    def input_partition_specs(self, mesh, shape_id):
+        s = DIN_SHAPES[shape_id]
+        b = shd.batch_axes(mesh)
+        if s["kind"] == "retrieval":
+            return {"hist_items": P(None, None), "hist_cats": P(None, None),
+                    "hist_mask": P(None, None),
+                    "cand_items": P(b), "cand_cats": P(b)}
+        out = {"hist_items": P(b, None), "hist_cats": P(b, None),
+               "hist_mask": P(b, None), "target_item": P(b),
+               "target_cat": P(b)}
+        if s["kind"] == "train":
+            out["label"] = P(b)
+        return out
+
+    def build_step(self, shape_id):
+        cfg, opt = self.cfg, self.opt
+        kind = self.kind(shape_id)
+        if kind == "train":
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p: din.loss_fn(p, cfg, batch))(params)
+                params, opt_state, _ = adamw_update(opt, params, grads, opt_state)
+                return params, opt_state, loss
+            return train_step
+        if kind == "serve":
+            def serve(params, batch):
+                return din.score(params, cfg, batch)
+            return serve
+
+        factored = self.retrieval_factored
+
+        def retrieval(params, batch):
+            return din.score_candidates(params, cfg, batch,
+                                        factored=factored)
+        return retrieval
+
+    def model_flops(self, shape_id):
+        s = DIN_SHAPES[shape_id]
+        cfg = self.cfg
+        d = cfg.d_pair
+        L = cfg.seq_len
+        attn_d = [4 * d, *cfg.attn_mlp, 1]
+        mlp_d = [3 * d, *cfg.mlp, 1]
+        attn_f = sum(a * b for a, b in zip(attn_d[:-1], attn_d[1:])) * 2 * L
+        mlp_f = sum(a * b for a, b in zip(mlp_d[:-1], mlp_d[1:])) * 2
+        per_example = attn_f + mlp_f
+        if s["kind"] == "retrieval":
+            return per_example * s["candidates"]
+        mult = 3.0 if s["kind"] == "train" else 1.0
+        return mult * per_example * s["batch"]
+
+    def model_bytes(self, shape_id):
+        s = DIN_SHAPES[shape_id]
+        cfg = self.cfg
+        d = cfg.d_pair
+        L = cfg.seq_len
+        if s["kind"] == "retrieval":
+            n = s["candidates"]
+            # per candidate: target-row gather + attention feats stream
+            return n * (d * 4 + L * d * 4 * 2)
+        B = s["batch"]
+        gathers = B * (L + 1) * d * 4                   # history + target rows
+        acts = B * L * (4 * d) * 4 * 2                  # attention features r/w
+        if s["kind"] == "train":
+            return 3.0 * (gathers + acts) + 2.0 * gathers   # + table grad scatter
+        return gathers + acts
+
+    def smoke_run(self, key):
+        cfg = self.smoke_cfg
+        params = din.init(key, cfg)
+        B, L = 8, cfg.seq_len
+        ks = jax.random.split(key, 6)
+        batch = {"hist_items": jax.random.randint(ks[0], (B, L), 0, cfg.n_items),
+                 "hist_cats": jax.random.randint(ks[1], (B, L), 0, cfg.n_cats),
+                 "hist_mask": jnp.ones((B, L), bool),
+                 "target_item": jax.random.randint(ks[2], (B,), 0, cfg.n_items),
+                 "target_cat": jax.random.randint(ks[3], (B,), 0, cfg.n_cats),
+                 "label": jax.random.bernoulli(ks[4], 0.5, (B,)).astype(F32)}
+        loss, grads = jax.value_and_grad(
+            lambda p: din.loss_fn(p, cfg, batch))(params)
+        rb = {"hist_items": batch["hist_items"][:1],
+              "hist_cats": batch["hist_cats"][:1],
+              "hist_mask": batch["hist_mask"][:1],
+              "cand_items": jax.random.randint(ks[5], (256,), 0, cfg.n_items),
+              "cand_cats": jax.random.randint(ks[5], (256,), 0, cfg.n_cats)}
+        scores = din.score_candidates(params, cfg, rb, block=64)
+        from ..optim.adamw import global_norm
+        return {"loss": float(loss), "grad_norm": float(global_norm(grads)),
+                "retrieval_mean": float(scores.mean())}

@@ -1,0 +1,135 @@
+"""ppr-fora — the paper's own workload as a dry-runnable architecture.
+
+One "step" = one D&A slot: a block of B PPR queries through FORA
+(frontier-synchronous push + static-budget residual walks) on one of the
+paper's Table-I graphs at FULL published scale (shapes only — the dry-run
+never allocates). Queries are sharded over the batch axes; the residual /
+reserve node dimension is sharded over ``model`` (edge-partitioned push:
+each shard owns a node range, one psum per push sweep merges updates).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ShapeDtypeStruct as SDS
+from jax.sharding import PartitionSpec as P
+
+from ..distributed import sharding as shd
+from ..ppr.fora import ForaParams, fora_step
+from ..ppr.random_walk import walk_length_for_tail
+from .base import ArchDef, F32, I32
+
+# (n, m, query block B) at the paper's published scale; undirected graphs
+# carry symmetrised m.
+PPR_SHAPES: dict[str, dict] = {
+    "web_stanford": dict(n=281_903, m=2_312_497, batch=64),
+    "dblp": dict(n=613_586, m=7_960_636, batch=64),
+    "pokec": dict(n=1_632_803, m=30_622_564, batch=32),
+    "livejournal": dict(n=4_847_571, m=68_993_773, batch=16),
+}
+
+WALK_BUDGET = 1 << 18       # static per-block walk budget (TPU adaptation)
+
+
+class PprForaArch(ArchDef):
+    family = "gnn"           # replicated params; graph arrays carry parallelism
+    arch_id = "ppr-fora"
+
+    def __init__(self, params: ForaParams = ForaParams(alpha=0.2, epsilon=0.5),
+                 query_parallel: bool = False):
+        # query_parallel: replicate the graph per device, shard only the
+        # query batch — no collectives in push/walk at all (the multicore
+        # shared-memory regime of the paper, viable while edges fit HBM).
+        # Baseline (False) edge-shards over the model axis. §Perf variant.
+        self.params = params
+        self.query_parallel = query_parallel
+
+    def shape_ids(self):
+        return list(PPR_SHAPES)
+
+    def kind(self, shape_id):
+        return "serve"
+
+    def abstract_params(self, shape_id: str | None = None):
+        return {}            # FORA has no trainable parameters
+
+    def effective_batch(self, shape_id) -> int:
+        if self.query_parallel:
+            return 512        # one query per chip on the multi-pod mesh
+        return max(32, PPR_SHAPES[shape_id]["batch"])
+
+    def abstract_inputs(self, shape_id):
+        from .base import _pad
+        s = PPR_SHAPES[shape_id]
+        n, m = _pad(s["n"]), _pad(s["m"])
+        B = self.effective_batch(shape_id)
+        return {"edge_src": SDS((m,), I32), "edge_dst": SDS((m,), I32),
+                "out_offsets": SDS((n + 1,), I32), "out_degree": SDS((n,), I32),
+                "seeds": SDS((B, n), F32), "key": SDS((2,), jnp.uint32)}
+
+    def input_partition_specs(self, mesh, shape_id):
+        b = shd.batch_axes(mesh)
+        if self.query_parallel:
+            return {"edge_src": P(), "edge_dst": P(),
+                    "out_offsets": P(), "out_degree": P(),
+                    "seeds": P((*b, "model"), None), "key": P()}
+        return {"edge_src": P("model"), "edge_dst": P("model"),
+                "out_offsets": P(), "out_degree": P(),
+                "seeds": P(b, "model"), "key": P()}
+
+    def build_step(self, shape_id) -> Callable:
+        from .base import _pad
+        s = PPR_SHAPES[shape_id]
+        # n must match the padded seeds width (abstract_inputs pads to the
+        # mesh multiple); FORA parameters use the true published sizes.
+        n, m = _pad(s["n"]), s["m"]
+        delta = 1.0 / s["n"]
+        log_term = math.log(2.0 * s["n"])      # p_f = 1/n
+        rmax = self.params.epsilon * math.sqrt(delta / (3.0 * m * log_term))
+        steps = walk_length_for_tail(self.params.alpha, 1e-4)
+
+        def step(params, batch):
+            del params
+            return fora_step(batch["edge_src"], batch["edge_dst"],
+                             batch["out_offsets"], batch["out_degree"],
+                             batch["seeds"], batch["key"],
+                             alpha=self.params.alpha, rmax=rmax,
+                             n=n, num_walks=WALK_BUDGET, num_steps=steps,
+                             max_push_iters=64)
+        return step
+
+    def model_flops(self, shape_id):
+        # push sweeps ~ O(m) adds per iteration x typical iterations (~20) x B;
+        # walks: WALK_BUDGET x steps gathers. FLOP-light, memory-bound.
+        s = PPR_SHAPES[shape_id]
+        B = self.effective_batch(shape_id)
+        steps = walk_length_for_tail(self.params.alpha, 1e-4)
+        return (20 * s["m"] * B + WALK_BUDGET * steps * B) * 2.0
+
+    def model_bytes(self, shape_id):
+        s = PPR_SHAPES[shape_id]
+        n, m, B = s["n"], s["m"], self.effective_batch(shape_id)
+        steps = walk_length_for_tail(self.params.alpha, 1e-4)
+        sweeps = 20.0
+        push = sweeps * (B * n * 4 * 5 + B * m * 4 * 2 + m * 8)
+        walks = B * WALK_BUDGET * steps * 16.0
+        return push + walks + B * n * 4
+
+    def smoke_run(self, key):
+        from ..ppr import ForaParams as FP, fora, ppr_power_iteration, small_test_graph
+        g = small_test_graph(n=128, avg_deg=6, seed=3)
+        srcs = np.array([1, 5])
+        res = fora(g, srcs, FP(alpha=0.2, epsilon=0.5), key)
+        exact = ppr_power_iteration(g, srcs, alpha=0.2)
+        mask = exact >= 1.0 / g.n
+        rel = np.abs(res.pi - exact)[mask] / exact[mask]
+        return {"loss": float(rel.max()), "grad_norm": 0.0,
+                "mass": float(res.pi.sum(1).mean())}
+
+
+ARCH = PprForaArch()

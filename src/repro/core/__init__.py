@@ -1,0 +1,31 @@
+"""D&A core: the paper's resource-optimisation framework.
+
+Public API:
+    cochran_sample_size, fraction_sample_size   (paper Eq. 1 / §IV-A)
+    RuntimeStats, TimeSource family             (paper t_i statistics)
+    lemma1_lower_bound, lemma2_hoeffding_bound  (paper Lemma 1 / Lemma 2)
+    dna, dna_real                               (paper Alg. 1 / Alg. 2)
+    DeviceAllocator, StragglerMonitor           (TPU adaptation layer)
+"""
+
+from .allocator import Admission, DeviceAllocator, StragglerMonitor
+from .bounds import (BoundReport, InfeasibleDeadline, lemma1_lower_bound,
+                     lemma2_hoeffding_bound, required_cores)
+from .dna import DnaResult, dna, dna_real
+from .estimator import (MeasuredTimeSource, RooflineTerms, RooflineTimeSource,
+                        RuntimeStats, SimulatedTimeSource, TimeSource)
+from .sampling import (SamplePlan, Z_TABLE, cochran_sample_size,
+                       fraction_sample_size, z_score)
+from .slots import (SlotExecution, SlotPlan, build_slot_plan, execute_plan,
+                    num_slots, queries_per_slot)
+
+__all__ = [
+    "Admission", "BoundReport", "DeviceAllocator", "DnaResult",
+    "InfeasibleDeadline", "MeasuredTimeSource", "RooflineTerms",
+    "RooflineTimeSource", "RuntimeStats", "SamplePlan", "SimulatedTimeSource",
+    "SlotExecution", "SlotPlan", "StragglerMonitor", "TimeSource", "Z_TABLE",
+    "build_slot_plan", "cochran_sample_size", "dna", "dna_real",
+    "execute_plan", "fraction_sample_size", "lemma1_lower_bound",
+    "lemma2_hoeffding_bound", "num_slots", "queries_per_slot",
+    "required_cores", "z_score",
+]

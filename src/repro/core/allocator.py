@@ -1,0 +1,152 @@
+"""Device allocation, elastic rescaling and straggler mitigation.
+
+This is the layer that turns the paper's abstract "cores" into actual TPU
+devices of a ``jax`` mesh. At 1000+ node scale the interesting events are
+failures and stragglers; both are handled with the paper's own statistics:
+
+* **Admission / elastic rescale** — on any change in the healthy device set,
+  re-run the Lemma-1 admission check (Alg. 2 Lines 3-5). If the surviving
+  count is below the bound, extend the deadline (the paper's §III-A "prolong
+  the duration" rule) by exactly the factor that restores feasibility.
+* **Straggler detection** — a slot lane whose running query exceeds
+  ``t_hat * (2 - d)`` is presumed straggling (d<1 already encodes observed
+  fluctuation; the margin widens as d shrinks) and its query is re-issued to
+  a spare device; first finisher wins. This is speculative re-execution in
+  the MapReduce sense, driven by the paper's own fluctuation statistics.
+"""
+
+from __future__ import annotations
+
+import math
+from collections.abc import Sequence
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from .bounds import InfeasibleDeadline, lemma1_lower_bound, required_cores
+from .estimator import RuntimeStats
+
+
+@dataclass
+class DeviceAllocator:
+    """Tracks healthy devices and hands out slices for slot execution.
+
+    ``devices`` may be jax Device objects or plain ids — the allocator is
+    deliberately agnostic so it can be unit-tested without a TPU and reused
+    by the CPU benchmarks (ids) and the launcher (jax devices).
+    """
+
+    devices: list[Any]
+    failed: set[int] = field(default_factory=set)       # indices into devices
+    spares_fraction: float = 0.02                        # held back for re-issue
+
+    def __post_init__(self) -> None:
+        if not self.devices:
+            raise ValueError("need at least one device")
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def healthy(self) -> list[Any]:
+        return [d for i, d in enumerate(self.devices) if i not in self.failed]
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable device count (healthy minus reserved spares)."""
+        n = len(self.healthy)
+        spares = math.floor(n * self.spares_fraction)
+        return max(1, n - spares)
+
+    @property
+    def spares(self) -> int:
+        return len(self.healthy) - self.capacity
+
+    # -- allocation --------------------------------------------------------
+    def allocate(self, k: int) -> list[Any]:
+        """A slice of k healthy devices (deterministic order for mesh reuse)."""
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        healthy = self.healthy
+        if k > self.capacity:
+            raise InfeasibleDeadline(
+                f"requested {k} devices, capacity is {self.capacity} "
+                f"({len(healthy)} healthy, {self.spares} spares)")
+        return healthy[:k]
+
+    # -- failure handling ---------------------------------------------------
+    def mark_failed(self, device_index: int) -> None:
+        if not 0 <= device_index < len(self.devices):
+            raise IndexError(device_index)
+        self.failed.add(device_index)
+
+    def readmit(self, num_queries_left: int, deadline_left: float,
+                stats: RuntimeStats) -> "Admission":
+        """Re-run the Lemma-1 admission over the *remaining* work after a
+        failure. If infeasible, compute the minimal deadline extension that
+        restores feasibility (paper §III-A) instead of failing the job."""
+        if num_queries_left <= 0:
+            return Admission(feasible=True, cores=0, deadline=deadline_left,
+                             extended=False)
+        bound = num_queries_left * stats.t_max / max(deadline_left, 1e-12)
+        need = required_cores(bound)
+        if need <= self.capacity:
+            return Admission(feasible=True, cores=need,
+                             deadline=deadline_left, extended=False)
+        # Minimal T' with X * t_max / T' <= capacity:
+        new_deadline = num_queries_left * stats.t_max / self.capacity
+        return Admission(feasible=True, cores=self.capacity,
+                         deadline=new_deadline, extended=True)
+
+
+@dataclass(frozen=True)
+class Admission:
+    feasible: bool
+    cores: int
+    deadline: float
+    extended: bool
+
+
+@dataclass
+class StragglerMonitor:
+    """Deadline-derived speculative re-execution policy.
+
+    A lane is straggling once its elapsed time passes
+    ``threshold = t_hat * (2 - d)``; ``decide`` returns the lane indices to
+    re-issue. Re-issue count is capped by available spares.
+    """
+
+    t_hat: float
+    scaling_factor: float = 1.0
+    max_reissue: int = 1 << 30
+
+    def __post_init__(self) -> None:
+        if self.t_hat <= 0:
+            raise ValueError("t_hat must be > 0")
+        if not 0.0 < self.scaling_factor <= 1.0:
+            raise ValueError("scaling factor in (0,1]")
+
+    @property
+    def threshold(self) -> float:
+        return self.t_hat * (2.0 - self.scaling_factor)
+
+    def decide(self, elapsed: Sequence[float], done: Sequence[bool],
+               spares: int) -> list[int]:
+        """Lanes to re-issue, slowest first, at most ``spares``."""
+        spares = min(spares, self.max_reissue)
+        if spares <= 0:
+            return []
+        cand = [(e, i) for i, (e, d) in enumerate(zip(elapsed, done))
+                if not d and e > self.threshold]
+        cand.sort(reverse=True)
+        return [i for _, i in cand[:spares]]
+
+    def simulate_reissue(self, lane_times: np.ndarray,
+                         reissue_times: np.ndarray) -> np.ndarray:
+        """First-finisher-wins completion times for re-issued lanes: the
+        original lane finishes at t_orig; the copy, launched at threshold,
+        finishes at threshold + t_new. Used by the FT tests."""
+        lane_times = np.asarray(lane_times, dtype=np.float64)
+        reissue_times = np.asarray(reissue_times, dtype=np.float64)
+        if lane_times.shape != reissue_times.shape:
+            raise ValueError("shape mismatch")
+        return np.minimum(lane_times, self.threshold + reissue_times)

@@ -1,0 +1,190 @@
+"""Runtime statistics and pluggable time sources (paper Lines 2-3 / Alg. 2 Line 2).
+
+Everything the D&A arithmetic consumes is a statistic of per-query processing
+times: ``t_max`` (Alg. 1), ``t_pre = sum t_i`` and ``t_avg`` (Alg. 2), and the
+Hoeffding pair ``(t_bar_k, t_hat)`` (Lemma 2). ``RuntimeStats`` holds them.
+
+Because this container has no TPU (and wall-clock CPU timing is the *paper's*
+measurement, not the TPU deployment's), time acquisition is a strategy object:
+
+* ``MeasuredTimeSource``  — times a real executor callable per query block
+  (used by the CPU benchmarks, which run the JAX FORA engine for real).
+* ``SimulatedTimeSource`` — draws from a configurable distribution (property
+  tests; also models FORA's random-walk fluctuation for allocator tests).
+* ``RooflineTimeSource``  — derives per-query time from a compiled
+  executable's roofline terms (dry-run admission control on the TPU path).
+"""
+
+from __future__ import annotations
+
+import time
+from collections.abc import Callable, Sequence
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class RuntimeStats:
+    """Statistics of a set of per-query processing times (seconds)."""
+
+    times: np.ndarray
+
+    def __post_init__(self) -> None:
+        t = np.asarray(self.times, dtype=np.float64)
+        if t.ndim != 1 or t.size == 0:
+            raise ValueError("times must be a non-empty 1-D array")
+        if np.any(t < 0) or not np.all(np.isfinite(t)):
+            raise ValueError("times must be finite and non-negative")
+        object.__setattr__(self, "times", t)
+
+    @property
+    def n(self) -> int:
+        return int(self.times.size)
+
+    @property
+    def t_max(self) -> float:
+        """max_i t_i  (Alg. 1 Line 3)."""
+        return float(self.times.max())
+
+    @property
+    def t_avg(self) -> float:
+        """mean t_i  (Alg. 2 Line 2)."""
+        return float(self.times.mean())
+
+    @property
+    def t_pre(self) -> float:
+        """sum t_i — preprocessing wall time on c=1 core (Alg. 2 Line 2)."""
+        return float(self.times.sum())
+
+    def t_pre_on(self, c: int) -> float:
+        """Preprocessing wall time when the s samples run on ``c`` cores
+        (LPT makespan approximation: ceil-balanced greedy)."""
+        if c < 1:
+            raise ValueError("c must be >= 1")
+        if c == 1:
+            return self.t_pre
+        if c >= self.n:
+            return self.t_max
+        # Greedy longest-processing-time makespan (exact enough for stats).
+        loads = np.zeros(c)
+        for t in np.sort(self.times)[::-1]:
+            loads[np.argmin(loads)] += t
+        return float(loads.max())
+
+    def t_hat(self, safety: float = 1.0) -> float:
+        """Upper bound on query time for Lemma 2 (observed max x safety)."""
+        if safety < 1.0:
+            raise ValueError("safety factor must be >= 1")
+        return self.t_max * safety
+
+    def merged(self, other: "RuntimeStats") -> "RuntimeStats":
+        return RuntimeStats(np.concatenate([self.times, other.times]))
+
+
+class TimeSource:
+    """Strategy interface: produce per-query times for a set of query ids."""
+
+    def measure(self, query_ids: Sequence[int]) -> RuntimeStats:
+        raise NotImplementedError
+
+
+@dataclass
+class MeasuredTimeSource(TimeSource):
+    """Times a real executor. ``run_query(qid) -> None`` does the work; we
+    wall-clock it. ``warmup`` extra calls amortise jit compilation so the
+    sampled statistics reflect steady state (the paper's Xeon numbers are
+    steady-state too)."""
+
+    run_query: Callable[[int], None]
+    warmup: int = 1
+
+    def measure(self, query_ids: Sequence[int]) -> RuntimeStats:
+        ids = list(query_ids)
+        if not ids:
+            raise ValueError("need at least one query id")
+        for qid in ids[: self.warmup]:
+            self.run_query(qid)
+        out = np.empty(len(ids), dtype=np.float64)
+        for i, qid in enumerate(ids):
+            t0 = time.perf_counter()
+            self.run_query(qid)
+            out[i] = time.perf_counter() - t0
+        return RuntimeStats(out)
+
+
+@dataclass
+class SimulatedTimeSource(TimeSource):
+    """Draws times from ``base + Lognormal(mu, sigma)`` — heavy-tailed, like
+    FORA's random-walk fluctuation (paper §IV-B attributes the variance to
+    the random functions). Deterministic under a fixed seed."""
+
+    mean: float = 1.0
+    cv: float = 0.3          # coefficient of variation of the lognormal part
+    base: float = 0.0        # deterministic floor (push phase)
+    seed: int = 0
+    _rng: np.random.Generator = field(init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.mean <= 0 or self.cv < 0 or self.base < 0:
+            raise ValueError("mean>0, cv>=0, base>=0 required")
+        self._rng = np.random.default_rng(self.seed)
+
+    def measure(self, query_ids: Sequence[int]) -> RuntimeStats:
+        n = len(list(query_ids))
+        if n == 0:
+            raise ValueError("need at least one query id")
+        if self.cv == 0.0:
+            return RuntimeStats(np.full(n, self.base + self.mean))
+        sigma2 = np.log1p(self.cv**2)
+        mu = np.log(self.mean) - sigma2 / 2.0
+        draw = self._rng.lognormal(mean=mu, sigma=np.sqrt(sigma2), size=n)
+        return RuntimeStats(self.base + draw)
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    """Three-term roofline of one executed step (seconds each)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def step_time_s(self) -> float:
+        """Bound-limited step estimate: the dominant term (perfect overlap of
+        the other two is assumed; the no-overlap sum is the pessimistic dual
+        and is reported alongside in the roofline benchmark)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+
+@dataclass
+class RooflineTimeSource(TimeSource):
+    """Per-query time from a compiled executable's roofline terms.
+
+    ``terms`` describe one executed *block* of ``queries_per_block`` queries;
+    per-query time is the block step time divided down. Used for dry-run
+    admission control where no hardware exists to measure."""
+
+    terms: RooflineTerms
+    queries_per_block: int = 1
+    jitter_cv: float = 0.0   # optional modelled fluctuation
+    seed: int = 0
+
+    def measure(self, query_ids: Sequence[int]) -> RuntimeStats:
+        n = len(list(query_ids))
+        if n == 0:
+            raise ValueError("need at least one query id")
+        per_q = self.terms.step_time_s / max(1, self.queries_per_block)
+        if self.jitter_cv <= 0.0:
+            return RuntimeStats(np.full(n, per_q))
+        rng = np.random.default_rng(self.seed)
+        sigma2 = np.log1p(self.jitter_cv**2)
+        mu = np.log(per_q) - sigma2 / 2.0
+        return RuntimeStats(rng.lognormal(mu, np.sqrt(sigma2), size=n))

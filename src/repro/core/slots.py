@@ -1,0 +1,130 @@
+"""Slot assignment and execution (paper Alg. 1 Lines 4-7 / Alg. 2 Lines 7-10).
+
+The paper's execution model: after preprocessing, the remaining X-s queries
+are divided into ``ell`` slots of (up to) ``k`` queries each; within a slot
+all k queries run in parallel on k cores; core ``j`` runs the j-th query of
+every slot back-to-back, so its busy time is ``T_j = sum over slots of t``
+and completion is ``T_max = max_j T_j`` (no inter-slot barrier).
+
+``SlotPlan`` is the static assignment; ``execute_plan`` runs/simulates it and
+returns per-core totals. The executor is any callable mapping a list of query
+ids to their per-query times — the same interface serves the JAX FORA engine,
+LM serve steps, and simulated distributions.
+"""
+
+from __future__ import annotations
+
+import math
+from collections.abc import Callable, Sequence
+from dataclasses import dataclass
+
+import numpy as np
+
+from .estimator import RuntimeStats
+
+# executor(query_ids) -> per-query times, aligned with query_ids
+Executor = Callable[[Sequence[int]], RuntimeStats]
+
+
+@dataclass(frozen=True)
+class SlotPlan:
+    """Assignment of query ids to (slot, core) cells.
+
+    ``slots[i]`` is the list of query ids in slot i (len <= k); the j-th
+    entry of each slot belongs to core j.  Invariants (property-tested):
+    every remaining query appears exactly once; no slot exceeds k; the
+    number of slots is <= ell.
+    """
+
+    slots: tuple[tuple[int, ...], ...]
+    k: int
+    ell: int
+
+    @property
+    def num_queries(self) -> int:
+        return sum(len(s) for s in self.slots)
+
+    @property
+    def cores_used(self) -> int:
+        return max((len(s) for s in self.slots), default=0)
+
+    def core_queue(self, j: int) -> list[int]:
+        """Query ids processed by core j, in slot order."""
+        if not 0 <= j < self.k:
+            raise IndexError(f"core {j} out of range [0,{self.k})")
+        return [s[j] for s in self.slots if j < len(s)]
+
+
+def build_slot_plan(query_ids: Sequence[int], ell: int, k: int) -> SlotPlan:
+    """Round-robin fill: slot i holds queries [i*k, (i+1)*k) of the sequence.
+
+    Matches the paper's "assign k queries to each of the ell slots" with the
+    trailing slot(s) possibly short (the ceiling-function remark in §III-A).
+    """
+    ids = list(query_ids)
+    if ell < 1 or k < 1:
+        raise ValueError(f"ell and k must be >= 1 (got ell={ell}, k={k})")
+    if len(ids) > ell * k:
+        raise ValueError(
+            f"{len(ids)} queries do not fit ell*k = {ell}*{k} = {ell * k} cells")
+    slots = tuple(tuple(ids[i * k:(i + 1) * k]) for i in range(ell) if ids[i * k:(i + 1) * k])
+    return SlotPlan(slots=slots, k=k, ell=ell)
+
+
+@dataclass(frozen=True)
+class SlotExecution:
+    """Result of running a SlotPlan: per-core busy totals and timing."""
+
+    plan: SlotPlan
+    core_totals: np.ndarray        # T_j, shape (k,), zero for idle cores
+    per_query_times: dict[int, float]
+
+    @property
+    def t_max_core(self) -> float:
+        """T_max = max_j T_j (Alg. 1 Line 7)."""
+        return float(self.core_totals.max()) if self.core_totals.size else 0.0
+
+    @property
+    def slot_barrier_makespan(self) -> float:
+        """Completion under a per-slot barrier (sum of slot maxima) —
+        pessimistic alternative used by the straggler monitor."""
+        total = 0.0
+        for slot in self.plan.slots:
+            total += max((self.per_query_times[q] for q in slot), default=0.0)
+        return total
+
+
+def execute_plan(plan: SlotPlan, executor: Executor) -> SlotExecution:
+    """Run every slot through the executor and accumulate per-core totals.
+
+    Execution is slot-at-a-time (the paper's "process all k queries in each
+    slot in parallel"): one executor call per slot, so a JAX executor can
+    batch the whole slot into a single device step.
+    """
+    totals = np.zeros(plan.k, dtype=np.float64)
+    times: dict[int, float] = {}
+    for slot in plan.slots:
+        stats = executor(slot)
+        if stats.n != len(slot):
+            raise ValueError(
+                f"executor returned {stats.n} times for {len(slot)} queries")
+        for j, (qid, t) in enumerate(zip(slot, stats.times)):
+            totals[j] += t
+            times[qid] = float(t)
+    return SlotExecution(plan=plan, core_totals=totals, per_query_times=times)
+
+
+def num_slots(deadline_remaining: float, per_slot_time: float) -> int:
+    """ell = floor(remaining / per_slot_time)  (Alg. 1 Line 4 / Alg. 2 Line 7)."""
+    if per_slot_time <= 0:
+        raise ValueError("per-slot time must be > 0")
+    return int(math.floor(deadline_remaining / per_slot_time))
+
+
+def queries_per_slot(remaining_queries: int, ell: int) -> int:
+    """k = ceil((X - s) / ell)  (Alg. 1 Line 5 / Alg. 2 Line 8)."""
+    if remaining_queries < 0:
+        raise ValueError("remaining queries must be >= 0")
+    if ell < 1:
+        raise ValueError("ell must be >= 1")
+    return max(1, math.ceil(remaining_queries / ell))

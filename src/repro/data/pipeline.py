@@ -1,0 +1,108 @@
+"""Data pipelines: synthetic-but-shaped-right streams for every family.
+
+Offline container => no real corpora; generators are deterministic per seed,
+shard-aware (each data-parallel host pulls its own slice by ``shard``/
+``num_shards``), and double-buffered via a background thread so host->device
+transfer overlaps the step (the standard input-pipeline overlap trick).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from collections.abc import Iterator
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class TokenStream:
+    """LM token pipeline: Zipf-distributed synthetic tokens with documents
+    separated by EOS; labels = next-token shift. Sharded by host."""
+
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    shard: int = 0
+    num_shards: int = 1
+    eos_id: int = 1
+    zipf_a: float = 1.2
+
+    def __iter__(self) -> Iterator[dict]:
+        rng = np.random.default_rng(self.seed * 1009 + self.shard)
+        local_batch = max(1, self.batch // self.num_shards)
+        while True:
+            toks = rng.zipf(self.zipf_a, size=(local_batch, self.seq_len + 1))
+            toks = np.minimum(toks, self.vocab - 1).astype(np.int32)
+            # sprinkle EOS to fake document boundaries
+            doc_ends = rng.random((local_batch, self.seq_len + 1)) < 0.002
+            toks = np.where(doc_ends, self.eos_id, toks)
+            yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclass
+class RecsysStream:
+    """DIN batches: user histories with popularity-skewed item ids and a
+    click label correlated with history/target category overlap (so training
+    actually has signal to fit)."""
+
+    n_items: int
+    n_cats: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    shard: int = 0
+    num_shards: int = 1
+
+    def __iter__(self) -> Iterator[dict]:
+        rng = np.random.default_rng(self.seed * 2003 + self.shard)
+        b = max(1, self.batch // self.num_shards)
+        while True:
+            hist_items = (rng.zipf(1.3, (b, self.seq_len)) % self.n_items
+                          ).astype(np.int32)
+            hist_cats = (hist_items % self.n_cats).astype(np.int32)
+            lengths = rng.integers(1, self.seq_len + 1, size=b)
+            mask = np.arange(self.seq_len)[None, :] < lengths[:, None]
+            target_item = (rng.zipf(1.3, b) % self.n_items).astype(np.int32)
+            target_cat = (target_item % self.n_cats).astype(np.int32)
+            overlap = (hist_cats == target_cat[:, None]) & mask
+            p_click = 0.1 + 0.8 * (overlap.sum(1) / np.maximum(lengths, 1))
+            label = (rng.random(b) < p_click).astype(np.float32)
+            yield {"hist_items": hist_items, "hist_cats": hist_cats,
+                   "hist_mask": mask, "target_item": target_item,
+                   "target_cat": target_cat, "label": label}
+
+
+class Prefetcher:
+    """Background-thread double buffering: ``next()`` returns an already-
+    materialised batch while the producer builds the next one."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._done = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        try:
+            for item in self._it:
+                if self._done:
+                    return
+                self._q.put(item)
+        finally:
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        self._done = True

@@ -1,0 +1,3 @@
+from .ctx import active_mesh, constrain, resolve_spec, shard_ctx
+
+__all__ = ["active_mesh", "constrain", "resolve_spec", "shard_ctx"]

@@ -1,0 +1,175 @@
+"""Roofline-term extraction from compiled executables.
+
+``cost_analysis()`` gives HLO FLOPs and bytes accessed; collective traffic is
+NOT in there, so we parse the optimized HLO text and sum the output-shape
+bytes of every collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute), attributing all-reduce at 2x (ring
+reduce-scatter + all-gather phases).
+
+Terms (per instructions):
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+On the SPMD path cost_analysis numbers are per-device already (XLA reports
+the partitioned module); ``per_device=False`` callers divide by chips
+themselves — the dry-run records which convention the build used.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+# matches e.g.  bf16[256,4096]{1,0}  or  f32[]  inside an HLO line
+_SHAPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# result shape is the first shape on the line, right after "%name = "
+_RESULT_RE = re.compile(
+    r"=\s*\(?\s*(" + "|".join(DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int] = field(default_factory=dict)
+    count_by_kind: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def weighted_bytes(self) -> int:
+        """All-reduce counted 2x (RS+AG ring phases); others 1x."""
+        out = 0
+        for kind, b in self.bytes_by_kind.items():
+            out += 2 * b if kind == "all-reduce" else b
+        return out
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in an HLO module."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            # op name appears right after the result shape, e.g.
+            #   %ar = bf16[128]{0} all-reduce(...)
+            if re.search(r"\]\S*\s+" + k + r"[(.\-]", stripped) or \
+               re.search(r"\)\s+" + k + r"[(.\-]", stripped):
+                kind = k
+                break
+        if kind is None:
+            continue
+        m = _RESULT_RE.search(stripped)
+        if not m:
+            # tuple results: fall back to summing all shapes on the line
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(stripped))
+        else:
+            total = _shape_bytes(m.group(1), m.group(2))
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + total
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass(frozen=True)
+class Roofline:
+    flops: float                 # total HLO flops (whole-job)
+    hbm_bytes: float             # total bytes accessed (whole-job)
+    coll_bytes: float            # weighted collective bytes (whole-job)
+    chips: int
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+    model_flops: float = 0.0     # 6*N*D-style useful flops
+    model_bytes: float = 0.0     # analytic fusion-aware HBM traffic (whole-job)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * self.peak_flops)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / (self.chips * self.ici_bw)
+
+    @property
+    def memory_model_s(self) -> float:
+        """Fusion-aware analytic memory term. HLO bytes-accessed double-counts
+        every producer/consumer pair and charges fusion-resident attention
+        intermediates (the S^2 score tiles) as HBM traffic; this term instead
+        uses the per-family analytic traffic model (ArchDef.model_bytes) —
+        what a fused TPU execution actually streams."""
+        return self.model_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def dominant(self) -> str:
+        t = {"compute": self.compute_s, "memory": self.memory_s,
+             "collective": self.collective_s}
+        return max(t, key=t.get)
+
+    @property
+    def dominant_fused(self) -> str:
+        """Bottleneck when memory is modeled fusion-aware (hillclimb view)."""
+        t = {"compute": self.compute_s, "memory": self.memory_model_s,
+             "collective": self.collective_s}
+        return max(t, key=t.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_fused_s(self) -> float:
+        return max(self.compute_s, self.memory_model_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline-limited step time."""
+        denom = self.step_s * self.chips * self.peak_flops
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def mfu_fused(self) -> float:
+        denom = self.step_fused_s * self.chips * self.peak_flops
+        return self.model_flops / denom if denom else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_s": self.step_s, "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio, "mfu": self.mfu,
+            "model_bytes": self.model_bytes,
+            "memory_model_s": self.memory_model_s,
+            "dominant_fused": self.dominant_fused,
+            "step_fused_s": self.step_fused_s, "mfu_fused": self.mfu_fused,
+        }

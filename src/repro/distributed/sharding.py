@@ -1,0 +1,135 @@
+"""Parameter/optimizer/input sharding rules (DP/TP/EP/ZeRO-1).
+
+Rules map parameter pytree *paths* (slash-joined key path, e.g.
+``layers/attn/wq``) to PartitionSpecs. LM weights follow the Megatron TP
+pattern on the ``model`` axis; MoE expert stacks are expert-sharded on the
+same axis (EP); GNN/DIN dense parameters are replicated while DIN embedding
+tables are row-sharded (huge-embedding regime). Optimizer moments get
+``zero1_spec``: the param spec plus data-sharding on the first free,
+divisible axis — ZeRO-1 realised through GSPMD.
+
+On the multi-pod mesh the batch axes map to ("pod", "data") fused; parameter
+specs never reference "pod" (weights are replicated across pods, gradients
+all-reduce over pod+data — the cross-pod term the roofline analysis tracks).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# rule: (path regex, fn(shape) -> PartitionSpec)
+Rule = tuple[str, Callable[[tuple[int, ...]], P]]
+
+# --- LM (transformer.py); stacked layers carry a leading (L,) axis ----------
+LM_RULES: list[Rule] = [
+    (r"embed$", lambda s: P("model", None)),
+    (r"lm_head$", lambda s: P(None, "model")),
+    (r"final_norm$", lambda s: P()),
+    (r"layers/ln[12]$", lambda s: P(None,)),
+    (r"layers/attn/w[qkv]$", lambda s: P(None, None, "model")),
+    (r"layers/attn/b[qkv]$", lambda s: P(None, "model")),
+    (r"layers/attn/wo$", lambda s: P(None, "model", None)),
+    # dense ffn (L, d, ff) / (L, ff, d)  vs  moe experts (L, E, d, F):
+    # expert-shard when E divides the 16-way model axis, else TP the expert
+    # FFN width (qwen2-moe's 60 experts are not 16-divisible)
+    (r"layers/ffn/w_(gate|up)$",
+     lambda s: P(None, None, "model") if len(s) == 3
+     else (P(None, "model", None, None) if s[1] % 16 == 0
+           else P(None, None, None, "model"))),
+    (r"layers/ffn/w_down$",
+     lambda s: P(None, "model", None) if len(s) == 3
+     else (P(None, "model", None, None) if s[1] % 16 == 0
+           else P(None, None, "model", None))),
+    (r"layers/ffn/router$", lambda s: P(None, None, None)),
+    (r"layers/ffn/shared/w_(gate|up)$", lambda s: P(None, None, "model")),
+    (r"layers/ffn/shared/w_down$", lambda s: P(None, "model", None)),
+]
+
+# --- GNN: replicated params (node/edge tensors carry the parallelism) -------
+GNN_RULES: list[Rule] = [
+    (r".*", lambda s: P()),
+]
+
+# --- DIN: row-sharded embedding tables, replicated MLPs ---------------------
+DIN_RULES: list[Rule] = [
+    (r"(item|cat)_emb$", lambda s: P("model", None)),
+    (r".*", lambda s: P()),
+]
+
+FAMILY_RULES = {"lm": LM_RULES, "gnn": GNN_RULES, "recsys": DIN_RULES}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for(path: str, shape: tuple[int, ...], rules: list[Rule]) -> P:
+    for pattern, fn in rules:
+        if re.search(pattern, path):
+            return fn(shape)
+    return P()
+
+
+def param_specs(params_shapes: Any, family: str) -> Any:
+    """Pytree of PartitionSpec matching a (possibly abstract) params tree."""
+    rules = FAMILY_RULES[family]
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(_path_str(path), tuple(leaf.shape), rules),
+        params_shapes)
+
+
+def zero1_spec(spec: P, shape: tuple[int, ...], mesh: Mesh,
+               axis: str = "data") -> P:
+    """Add data-axis sharding to the first free divisible dim (ZeRO-1)."""
+    if axis not in mesh.axis_names:
+        return spec
+    size = mesh.shape[axis]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, p) in enumerate(zip(shape, parts)):
+        if p is None and dim % size == 0 and dim >= size:
+            parts[i] = axis
+            return P(*parts)
+    return spec
+
+
+def opt_state_specs(param_specs_tree: Any, params_shapes: Any, mesh: Mesh) -> Any:
+    """Specs for AdamW moments: params spec + ZeRO-1 data sharding."""
+    return jax.tree.map(
+        lambda spec, leaf: zero1_spec(spec, tuple(leaf.shape), mesh),
+        param_specs_tree, params_shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh: Mesh, tree_of_specs: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes fused for the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, *trailing: Any) -> P:
+    return P(batch_axes(mesh), *trailing)
+
+
+def params_bytes(params_shapes: Any) -> int:
+    leaves = jax.tree.leaves(params_shapes)
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves)

@@ -1,0 +1,123 @@
+"""Fault tolerance: failure detection, elastic rescale, restart policy.
+
+At 1000+ node scale the invariants are: (1) any step's work is recoverable
+from the last checkpoint; (2) losing devices re-triggers admission (the
+paper's Lemma-1 check) rather than killing the job; (3) stragglers are
+re-issued speculatively from the paper's own fluctuation statistics
+(core/allocator.py). This module is the control loop tying those together.
+
+Hardware failure signals are injectable (``FailureInjector`` for tests/CPU;
+a real deployment wires device health RPCs into the same interface).
+"""
+
+from __future__ import annotations
+
+import time
+from collections.abc import Callable
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.allocator import DeviceAllocator, StragglerMonitor
+from ..core.bounds import InfeasibleDeadline
+from ..core.estimator import RuntimeStats
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule: {step: [device_indices]}."""
+
+    schedule: dict[int, list[int]] = field(default_factory=dict)
+
+    def failures_at(self, step: int) -> list[int]:
+        return self.schedule.get(step, [])
+
+
+@dataclass
+class ElasticController:
+    """Drives a train/serve loop through failures.
+
+    on_rescale(healthy_count) is the caller's hook to rebuild mesh +
+    re-place state from the last checkpoint (see launch/train.py).
+    """
+
+    allocator: DeviceAllocator
+    injector: FailureInjector | None = None
+    on_rescale: Callable[[int], None] | None = None
+    rescale_events: list[dict] = field(default_factory=list)
+
+    def tick(self, step: int, stats: RuntimeStats | None = None,
+             queries_left: int = 0, deadline_left: float = 0.0) -> bool:
+        """Process failures for this step. Returns True if a rescale
+        happened (caller must restart from checkpoint)."""
+        failed = self.injector.failures_at(step) if self.injector else []
+        if not failed:
+            return False
+        for idx in failed:
+            self.allocator.mark_failed(idx)
+        event = {"step": step, "failed": list(failed),
+                 "healthy": len(self.allocator.healthy),
+                 "time": time.time()}
+        if stats is not None and queries_left > 0:
+            adm = self.allocator.readmit(queries_left, deadline_left, stats)
+            event["readmission"] = {"cores": adm.cores,
+                                    "deadline": adm.deadline,
+                                    "extended": adm.extended}
+        self.rescale_events.append(event)
+        if self.on_rescale is not None:
+            self.on_rescale(len(self.allocator.healthy))
+        return True
+
+
+def run_with_straggler_mitigation(
+        lane_times: np.ndarray, monitor: StragglerMonitor,
+        spares: int, reissue_times: np.ndarray | None = None,
+        rng: np.random.Generator | None = None) -> dict:
+    """Simulate one slot with speculative re-execution (first-finisher wins).
+
+    lane_times: nominal per-lane completion times for the slot.
+    Returns {makespan_before, makespan_after, reissued}."""
+    lane_times = np.asarray(lane_times, dtype=np.float64)
+    if reissue_times is None:
+        rng = rng or np.random.default_rng(0)
+        reissue_times = rng.permutation(lane_times)
+    done = [False] * lane_times.size
+    to_reissue = monitor.decide(lane_times, done, spares)
+    after = lane_times.copy()
+    if to_reissue:
+        sel = np.asarray(to_reissue)
+        after[sel] = monitor.simulate_reissue(
+            lane_times[sel], np.asarray(reissue_times)[sel])
+    return {"makespan_before": float(lane_times.max(initial=0.0)),
+            "makespan_after": float(after.max(initial=0.0)),
+            "reissued": to_reissue}
+
+
+class HeartbeatMonitor:
+    """Wall-clock heartbeat: a device (or host) missing ``timeout`` seconds
+    of heartbeats is declared failed. Pure-python, injectable clock."""
+
+    def __init__(self, num_devices: int, timeout: float,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        now = clock()
+        self.last_seen = [now] * num_devices
+
+    def beat(self, device_index: int) -> None:
+        self.last_seen[device_index] = self.clock()
+
+    def dead(self) -> list[int]:
+        now = self.clock()
+        return [i for i, t in enumerate(self.last_seen)
+                if now - t > self.timeout]
+
+
+def admission_or_extend(allocator: DeviceAllocator, num_queries: int,
+                        deadline: float, stats: RuntimeStats) -> float:
+    """The paper's §III-A policy as one call: return a feasible deadline
+    (possibly extended) for the current healthy capacity, or raise."""
+    adm = allocator.readmit(num_queries, deadline, stats)
+    if not adm.feasible:
+        raise InfeasibleDeadline("no capacity at any deadline")
+    return adm.deadline

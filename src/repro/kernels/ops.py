@@ -1,0 +1,47 @@
+"""Jit'd dispatch wrappers: Pallas on TPU, jnp oracle elsewhere.
+
+Call sites use these; the backend decision happens once at trace time.
+``force`` overrides for tests ("pallas" exercises interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .ell_spmv import ell_spmv_pallas
+from .embedding_bag import embedding_bag_pallas
+from .flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:          # noqa: BLE001
+        return False
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    force: str | None = None):
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      q_offset=q_offset,
+                                      interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def ell_spmv(neighbors, mask, weights, x, *, force: str | None = None):
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if use_pallas:
+        return ell_spmv_pallas(neighbors, mask, weights, x,
+                               interpret=not _on_tpu())
+    return ref.ell_spmv_ref(neighbors, mask, x, weights)
+
+
+def embedding_bag(table, ids, weights, *, force: str | None = None):
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if use_pallas:
+        return embedding_bag_pallas(table, ids, weights,
+                                    interpret=not _on_tpu())
+    return ref.embedding_bag_ref(table, ids, weights)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the *semantic definitions*; kernels must match them over the test
+sweep (shapes x dtypes). They are also the CPU fallback used by ops.py when
+no TPU is present.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """Naive softmax(QK^T/sqrt(d))V with GQA head folding. fp32 internals."""
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    group = Hq // Hkv
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / np.sqrt(Dh)
+    if causal:
+        qi = jnp.arange(Sq) + q_offset
+        ki = jnp.arange(Skv)
+        s = jnp.where(qi[:, None] >= ki[None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ell_spmv_ref(neighbors, mask, x, weights=None):
+    """Pull-form ELL SpMV: y[i] = sum_j mask[i,j] * w[i,j] * x[neighbors[i,j]].
+
+    neighbors/mask: (n, K); x: (n,) or (n, c); weights: (n, K) or None (=1).
+    This is FORA's push relaxation read as a gather (DESIGN.md §5): with
+    neighbors = in-edge lists and w = 1/deg_out(src), y = P^T x.
+    """
+    gathered = x[neighbors]                       # (n, K) or (n, K, c)
+    w = mask.astype(x.dtype)
+    if weights is not None:
+        w = w * weights.astype(x.dtype)
+    if gathered.ndim == 3:
+        return jnp.einsum("nk,nkc->nc", w, gathered)
+    return jnp.sum(w * gathered, axis=1)
+
+
+def embedding_bag_ref(table, ids, weights=None):
+    """EmbeddingBag(sum): out[b] = sum_l w[b,l] * table[ids[b,l]].
+
+    table: (V, d); ids: (B, L); weights: (B, L) or None. The DIN interest
+    pooling op (taxonomy §RecSys: jnp.take + weighted segment reduction)."""
+    rows = jnp.take(table, ids, axis=0)           # (B, L, d)
+    if weights is None:
+        return rows.sum(axis=1)
+    return jnp.einsum("bl,bld->bd", weights.astype(table.dtype), rows)

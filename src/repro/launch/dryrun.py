@@ -1,0 +1,392 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialisation, and the production meshes need 512 placeholder host devices.
+(Everything else — smoke tests, benches — must keep seeing 1 device, so this
+flag lives here and only here.)
+
+Per cell:  jit(step, in_shardings=..., donate).lower(abstract args).compile()
+then record memory_analysis(), cost_analysis() and the collective traffic
+parsed from the optimized HLO into reports/dryrun/<arch>__<shape>__<mesh>.json
+— EXPERIMENTS.md §Dry-run and §Roofline are generated from these files.
+
+## Loop-body cost calibration
+
+XLA's cost analysis counts while/scan bodies ONCE, so scanned-layer LMs,
+lax.map'd retrieval and FORA's push/walk loops under-report flops/bytes/
+collectives. For those families we additionally lower straight-line variants
+at two (or three) small trip counts and extrapolate linearly:
+
+    body = f(2) - f(1);  outside = f(1) - body;  corrected = outside + L*body
+
+which is exact for homogeneous loop bodies. Both raw and corrected numbers
+are recorded; §Roofline uses the corrected ones. GNN cells have no hidden
+loops (python-unrolled blocks) and need no correction.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    python -m repro.launch.dryrun --all [--both-meshes] [--include-ppr]
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax import ShapeDtypeStruct as SDS
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import REGISTRY, get_arch
+from ..configs.base import DIN_SHAPES, LMArch
+from ..distributed import sharding as shd
+from ..distributed.ctx import shard_ctx
+from ..distributed.hlo_analysis import Roofline, collective_bytes
+from ..optim.adamw import AdamWState
+from .mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, chips,
+                   make_production_mesh)
+
+REPORT_DIR = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+# deployment loop counts used for extrapolation
+PPR_PUSH_SWEEPS = 20
+PPR_WALK_STEPS = 52          # walk_length_for_tail(0.2, 1e-4)
+DIN_RETRIEVAL_BLOCK = 8192
+
+
+def _cost_get(cost, *names, default=0.0):
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    for n in names:
+        if n in cost:
+            return float(cost[n])
+    return default
+
+
+def _compile_measure(mesh, step, p_sh, o_sh, in_sh, params_abs, opt_abs,
+                     inputs_abs, *, donate: bool, want_memory: bool = True):
+    """Lower + compile one step; return measurement dict."""
+    if opt_abs is not None:
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, in_sh),
+                         donate_argnums=(0, 1) if donate else ())
+        args = (params_abs, opt_abs, inputs_abs)
+    else:
+        jitted = jax.jit(step, in_shardings=(p_sh, in_sh))
+        args = (params_abs, inputs_abs)
+    t0 = time.perf_counter()
+    with shard_ctx(mesh):
+        lowered = jitted.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t1
+
+    mem = {}
+    if want_memory:
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                             "temp_size_in_bytes", "alias_size_in_bytes",
+                             "generated_code_size_in_bytes"):
+                    if hasattr(ma, attr):
+                        mem[attr] = int(getattr(ma, attr))
+        except Exception as e:      # noqa: BLE001
+            mem["error"] = str(e)
+    try:
+        cost_raw = compiled.cost_analysis()
+        flops_pd = _cost_get(cost_raw, "flops")
+        bytes_pd = _cost_get(cost_raw, "bytes accessed", "bytes_accessed")
+    except Exception:               # noqa: BLE001
+        flops_pd = bytes_pd = 0.0
+    try:
+        hlo = compiled.as_text()
+    except Exception:               # noqa: BLE001
+        hlo = lowered.as_text()
+    coll = collective_bytes(hlo)
+    return {"flops_pd": flops_pd, "bytes_pd": bytes_pd,
+            "coll_pd": float(coll.weighted_bytes),
+            "coll_by_kind": coll.bytes_by_kind,
+            "coll_counts": coll.count_by_kind,
+            "mem": mem, "lower_s": t_lower, "compile_s": t_compile,
+            "hlo_bytes": len(hlo)}
+
+
+def _extrapolate(f1: float, f2: float, L: int) -> float:
+    body = max(f2 - f1, 0.0)
+    outside = max(f1 - body, 0.0)
+    return outside + L * body
+
+
+# ---------------------------------------------------------------------------
+# per-family calibration
+
+
+def _calibrate_lm(arch: LMArch, shape_id: str, mesh) -> dict | None:
+    """Unrolled L=1/L=2 lowering -> per-layer slope; exact for homogeneous
+    stacks. Returns corrected per-device totals."""
+    meas = []
+    for L in (1, 2):
+        cfg_k = dataclasses.replace(arch.cfg, n_layers=L, scan_layers=False,
+                                    unroll_attn=True)
+        clone = LMArch(arch.arch_id + f"-calib{L}", cfg_k, arch.smoke_cfg,
+                       arch.opt)
+        step = clone.build_step(shape_id)
+        p_abs = clone.abstract_params(shape_id)
+        in_abs = clone.abstract_inputs(shape_id)
+        p_specs = clone.param_partition_specs(shape_id)
+        in_specs = clone.input_partition_specs(mesh, shape_id)
+        o_abs = o_sh = None
+        if clone.needs_optimizer(shape_id):
+            o_abs = clone.abstract_opt_state(shape_id)
+            mspec = shd.opt_state_specs(p_specs, p_abs, mesh)
+            o_sh = shd.named(mesh, AdamWState(m=mspec, v=mspec, step=P()))
+        meas.append(_compile_measure(
+            mesh, step, shd.named(mesh, p_specs), o_sh,
+            shd.named(mesh, in_specs), p_abs, o_abs, in_abs,
+            donate=o_abs is not None, want_memory=False))
+    L = arch.cfg.n_layers
+    return {k: _extrapolate(meas[0][k], meas[1][k], L)
+            for k in ("flops_pd", "bytes_pd", "coll_pd")}
+
+
+def _calibrate_din_retrieval(arch, mesh) -> dict | None:
+    """lax.map over candidate blocks -> 1-block/2-block unrolled slope."""
+    from ..models.recsys import din as din_mod
+    cfg = arch.cfg
+    n_cand = DIN_SHAPES["retrieval_cand"]["candidates"]
+    nblk = -(-n_cand // DIN_RETRIEVAL_BLOCK)
+    L_hist = cfg.seq_len
+    meas = []
+    for k in (1, 2):
+        n = DIN_RETRIEVAL_BLOCK * k
+
+        factored = getattr(arch, "retrieval_factored", False)
+
+        def step(params, batch, _n=n):
+            return din_mod.score_candidates(params, cfg, batch,
+                                            block=DIN_RETRIEVAL_BLOCK,
+                                            unroll=True, factored=factored)
+        in_abs = {"hist_items": SDS((1, L_hist), jnp.int32),
+                  "hist_cats": SDS((1, L_hist), jnp.int32),
+                  "hist_mask": SDS((1, L_hist), jnp.bool_),
+                  "cand_items": SDS((n,), jnp.int32),
+                  "cand_cats": SDS((n,), jnp.int32)}
+        b = shd.batch_axes(mesh)
+        in_specs = {"hist_items": P(None, None), "hist_cats": P(None, None),
+                    "hist_mask": P(None, None), "cand_items": P(b),
+                    "cand_cats": P(b)}
+        p_abs = arch.abstract_params()
+        p_specs = arch.param_partition_specs()
+        meas.append(_compile_measure(
+            mesh, step, shd.named(mesh, p_specs), None,
+            shd.named(mesh, in_specs), p_abs, None, in_abs,
+            donate=False, want_memory=False))
+    return {k: _extrapolate(meas[0][k], meas[1][k], nblk)
+            for k in ("flops_pd", "bytes_pd", "coll_pd")}
+
+
+def _calibrate_ppr(arch, shape_id: str, mesh) -> dict | None:
+    """3-point solve: outside + push_body*sweeps + walk_body*steps."""
+    from ..configs.ppr_fora import PPR_SHAPES, WALK_BUDGET
+    from ..ppr.fora import fora_step_calib
+    s = PPR_SHAPES[shape_id]
+    from ..configs.base import _pad
+    n, m = _pad(s["n"]), _pad(s["m"])
+    delta = 1.0 / n
+    log_term = math.log(2.0 * n)
+    rmax = arch.params.epsilon * math.sqrt(delta / (3.0 * m * log_term))
+    in_abs = arch.abstract_inputs(shape_id)
+    in_specs = arch.input_partition_specs(mesh, shape_id)
+
+    def make_step(sweeps, steps):
+        def step(params, batch):
+            del params
+            return fora_step_calib(
+                batch["edge_src"], batch["edge_dst"], batch["out_offsets"],
+                batch["out_degree"], batch["seeds"], batch["key"],
+                alpha=arch.params.alpha, rmax=rmax, n=n,
+                num_walks=WALK_BUDGET, push_sweeps=sweeps, walk_steps=steps)
+        return step
+
+    points = {}
+    for sweeps, steps in ((1, 1), (2, 1), (1, 2)):
+        points[(sweeps, steps)] = _compile_measure(
+            mesh, make_step(sweeps, steps), shd.named(mesh, P()), None,
+            shd.named(mesh, in_specs), {}, None, in_abs,
+            donate=False, want_memory=False)
+    out = {}
+    for k in ("flops_pd", "bytes_pd", "coll_pd"):
+        f11, f21, f12 = (points[(1, 1)][k], points[(2, 1)][k],
+                         points[(1, 2)][k])
+        push_body = max(f21 - f11, 0.0)
+        walk_body = max(f12 - f11, 0.0)
+        outside = max(f11 - push_body - walk_body, 0.0)
+        out[k] = (outside + PPR_PUSH_SWEEPS * push_body
+                  + PPR_WALK_STEPS * walk_body)
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch_id: str, shape_id: str, *, multi_pod: bool,
+             save: bool = True, calibrate: bool = True,
+             arch_override=None, variant: str = "") -> dict:
+    """``arch_override`` lets the perf hillclimb measure modified ArchDefs
+    under the same harness; ``variant`` tags the report file."""
+    arch = arch_override if arch_override is not None else get_arch(arch_id)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out = {"arch": arch_id, "shape": shape_id, "mesh": mesh_name,
+           "kind": arch.kind(shape_id)}
+    if variant:
+        out["variant"] = variant
+    skip = arch.skip_reason(shape_id)
+    if skip:
+        out.update(status="skipped", reason=skip)
+        _save(out, save)
+        return out
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = chips(mesh)
+    try:
+        step = arch.build_step(shape_id)
+        params_abs = arch.abstract_params(shape_id)
+        inputs_abs = arch.abstract_inputs(shape_id)
+        p_specs = arch.param_partition_specs(shape_id)
+        in_specs = arch.input_partition_specs(mesh, shape_id)
+        o_abs = o_sh = None
+        if arch.needs_optimizer(shape_id):
+            o_abs = arch.abstract_opt_state(shape_id)
+            mspec = shd.opt_state_specs(p_specs, params_abs, mesh)
+            o_sh = shd.named(mesh, AdamWState(m=mspec, v=mspec, step=P()))
+
+        meas = _compile_measure(
+            mesh, step, shd.named(mesh, p_specs), o_sh,
+            shd.named(mesh, in_specs), params_abs, o_abs, inputs_abs,
+            donate=o_abs is not None)
+
+        corrected = None
+        calib_note = "none needed (no hidden loops)"
+        if calibrate:
+            try:
+                if arch.family == "lm":
+                    corrected = _calibrate_lm(arch, shape_id, mesh)
+                    calib_note = "unrolled L=1/2 extrapolation"
+                elif arch_id == "din" and shape_id == "retrieval_cand":
+                    corrected = _calibrate_din_retrieval(arch, mesh)
+                    calib_note = "unrolled 1/2-block extrapolation"
+                elif arch_id == "ppr-fora":
+                    corrected = _calibrate_ppr(arch, shape_id, mesh)
+                    calib_note = (f"3-point solve @ {PPR_PUSH_SWEEPS} sweeps"
+                                  f" x {PPR_WALK_STEPS} walk steps")
+            except Exception as e:      # noqa: BLE001
+                calib_note = f"calibration failed: {e}"
+
+        use = corrected if corrected else meas
+        mbytes = arch.model_bytes(shape_id)
+        roof = Roofline(
+            flops=use["flops_pd"] * n_chips,
+            hbm_bytes=use["bytes_pd"] * n_chips,
+            coll_bytes=use["coll_pd"] * n_chips,
+            chips=n_chips, peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,
+            ici_bw=ICI_BW, model_flops=arch.model_flops(shape_id),
+            model_bytes=mbytes)
+        raw_roof = Roofline(
+            flops=meas["flops_pd"] * n_chips,
+            hbm_bytes=meas["bytes_pd"] * n_chips,
+            coll_bytes=meas["coll_pd"] * n_chips,
+            chips=n_chips, peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,
+            ici_bw=ICI_BW, model_flops=arch.model_flops(shape_id),
+            model_bytes=mbytes)
+
+        out.update(
+            status="ok", chips=n_chips,
+            lower_s=round(meas["lower_s"], 2),
+            compile_s=round(meas["compile_s"], 2),
+            memory_analysis=meas["mem"],
+            cost_analysis={"flops_per_device": meas["flops_pd"],
+                           "bytes_per_device": meas["bytes_pd"]},
+            collectives={"bytes_by_kind": meas["coll_by_kind"],
+                         "count_by_kind": meas["coll_counts"],
+                         "weighted_bytes_per_device": meas["coll_pd"]},
+            calibration=calib_note,
+            corrected_per_device=corrected,
+            roofline=roof.as_dict(),
+            roofline_raw=raw_roof.as_dict(),
+            hlo_bytes=meas["hlo_bytes"],
+        )
+    except Exception as e:              # noqa: BLE001
+        out.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _save(out, save)
+    return out
+
+
+def _save(report: dict, save: bool) -> None:
+    if not save:
+        return
+    if report.get("variant"):
+        out_dir = REPORT_DIR.parent / "hillclimb"
+        name = (f"{report['arch']}__{report['shape']}__{report['mesh']}"
+                f"__{report['variant']}.json")
+    else:
+        out_dir = REPORT_DIR
+        name = f"{report['arch']}__{report['shape']}__{report['mesh']}.json"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / name).write_text(json.dumps(report, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--include-ppr", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for aid, arch in REGISTRY.items():
+            if aid == "ppr-fora" and not args.include_ppr:
+                continue
+            cells += [(aid, sid) for sid in arch.shape_ids()]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for aid, sid in cells:
+        for mp in meshes:
+            r = run_cell(aid, sid, multi_pod=mp,
+                         calibrate=not args.no_calibrate)
+            tag = f"{aid}/{sid}/{'multi' if mp else 'single'}"
+            if r["status"] == "ok":
+                rf = r["roofline"]
+                print(f"[OK]   {tag:56s} compile={r['compile_s']:7.1f}s "
+                      f"dom={rf['dominant']}/{rf['dominant_fused']} "
+                      f"step={rf['step_s']:.4g}s "
+                      f"mfu={rf['mfu']:.3f}/{rf['mfu_fused']:.3f}")
+            elif r["status"] == "skipped":
+                print(f"[SKIP] {tag:56s} {r['reason'][:60]}")
+            else:
+                failures += 1
+                print(f"[ERR]  {tag:56s} {r['error'][:100]}")
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb: hypothesis -> change -> re-lower -> before/after.
+
+Three cells (chosen from the single-pod baseline table):
+  * qwen1.5-32b x train_4k   — the dense-LM flagship (fused view: collective-
+    bound from Megatron-TP activation all-reduces at TP=16)
+  * moonshot-v1-16b-a3b x train_4k — worst roofline fraction of all 40 cells
+    (MoE: attention-TP collectives dwarf the useful expert compute)
+  * ppr-fora x livejournal   — the paper's own technique (edge-sharded push
+    psums every sweep)
+
+Variants are declared with an explicit HYPOTHESIS and a predicted delta on
+the dominant term; results append to reports/hillclimb/ and the printed log
+is the §Perf iteration record.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb [--cell qwen|moe|ppr|gcn]
+"""
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+from ..configs import get_arch
+from ..configs.base import LMArch
+from ..configs.ppr_fora import PprForaArch
+from .dryrun import run_cell
+
+OUT = Path(__file__).resolve().parents[3] / "reports" / "hillclimb"
+
+
+def _lm_variant(arch_id, **cfg_changes):
+    base = get_arch(arch_id)
+    cfg = dataclasses.replace(base.cfg, **cfg_changes)
+    return LMArch(base.arch_id, cfg, base.smoke_cfg, base.opt)
+
+
+CELLS = {
+    "qwen": {
+        "arch": "qwen1.5-32b", "shape": "train_4k",
+        "variants": [
+            ("baseline", None,
+             "paper-faithful Megatron TP=16 / DP=16, full remat",
+             "-"),
+            ("seqpar", _lm_variant("qwen1.5-32b", seq_shard_residual=True),
+             "H1: S-shard the residual/norm segment (Megatron sequence "
+             "parallelism). AR(2x bytes) on block outputs becomes RS(1/16)"
+             "+AG(1x); predicted collective term ~2x down",
+             "collective"),
+            ("seqpar+saveio",
+             _lm_variant("qwen1.5-32b", seq_shard_residual=True,
+                         remat_policy="save_block_io"),
+             "H2: save the S-sharded block outputs (now only ~40MB/layer/dev)"
+             " so the bwd rematerialisation skips the forward collectives "
+             "and recompute; predicted collective -1/3, HLO bytes -25%",
+             "collective+memory"),
+            ("seqpar+zero1hint",
+             LMArch("qwen1.5-32b",
+                    dataclasses.replace(get_arch("qwen1.5-32b").cfg,
+                                        seq_shard_residual=True),
+                    get_arch("qwen1.5-32b").smoke_cfg,
+                    get_arch("qwen1.5-32b").opt, zero1_grad_hint=True),
+             "H3: per-kind breakdown shows grad/opt traffic dominating "
+             "(AG 12.9GB + AR 8.3GB per layer-equivalent): explicitly "
+             "reduce-scatter grads into the ZeRO-1 layout before AdamW, "
+             "eliding GSPMD's all-reduce->reshard chain; predicted "
+             "all-reduce bytes down ~2x",
+             "collective"),
+        ],
+    },
+    "moe": {
+        "arch": "moonshot-v1-16b-a3b", "shape": "train_4k",
+        "variants": [
+            ("baseline", None,
+             "paper-faithful TP=16 attention + EP=16 experts",
+             "-"),
+            ("dp-attn", _lm_variant("moonshot-v1-16b-a3b", attn_tp=False),
+             "M1: attention fully data-parallel (replicated 34MB/layer attn "
+             "weights; d_model=2048 is too small for TP=16 — the per-layer "
+             "activation ARs dominate). Predicted: attention collectives "
+             "vanish; collective term down ~3-5x",
+             "collective"),
+            ("dp-attn+seqpar",
+             _lm_variant("moonshot-v1-16b-a3b", attn_tp=False,
+                         seq_shard_residual=True),
+             "M2: + S-sharded residual segment for the MoE block boundary "
+             "(RS+AG instead of AR around expert combine)",
+             "collective"),
+            ("dp-attn+cf1",
+             _lm_variant(
+                 "moonshot-v1-16b-a3b", attn_tp=False,
+                 moe=dataclasses.replace(
+                     get_arch("moonshot-v1-16b-a3b").cfg.moe,
+                     capacity_factor=1.0)),
+             "M3: + expert capacity factor 1.25 -> 1.0 (MegaBlocks-style "
+             "tolerance of drops): dispatch buffers and expert GEMMs -20%",
+             "compute+collective"),
+            ("local-select-ep",
+             _lm_variant(
+                 "moonshot-v1-16b-a3b", attn_tp=False,
+                 moe=dataclasses.replace(
+                     get_arch("moonshot-v1-16b-a3b").cfg.moe,
+                     ep_mode="local_select")),
+             "M4: per-kind breakdown shows 157GB/layer of ALL-REDUCE from "
+             "GSPMD merging the globally-scattered (E*C,d) dispatch buffers "
+             "across data shards. x is model-REPLICATED, so each expert "
+             "shard can select its own (token,k) entries locally via "
+             "shard_map — dispatch collectives vanish; one psum of the "
+             "(T_loc,d) combined output remains. Predicted collective "
+             "~300s -> <10s (~0.5GB/layer/dev weighted)",
+             "collective"),
+        ],
+    },
+    "ppr": {
+        "arch": "ppr-fora", "shape": "livejournal",
+        "variants": [
+            ("baseline", None,
+             "edge-sharded push: edges + residual node-dim over the model "
+             "axis; every push sweep all-reduces the (B, n) residual",
+             "-"),
+            ("query-parallel", PprForaArch(query_parallel=True),
+             "P1: replicate the graph per chip (552MB edges << 16GB HBM), "
+             "pad the query block to one query per chip (B=512 — exactly "
+             "the paper's one-query-per-core model). Push/walk gathers all "
+             "local; predicted collective term -> ~0, step becomes memory-"
+             "bound on the edge stream",
+             "collective"),
+        ],
+    },
+    "gcn": {
+        "arch": "gcn-cora", "shape": "ogb_products",
+        "variants": [
+            ("baseline", None, "node+edge arrays sharded over batch axes; "
+             "segment_sum scatters cross-shard", "-"),
+        ],
+    },
+}
+
+
+def run(cell_key: str, multi_pod: bool = False) -> list[dict]:
+    spec = CELLS[cell_key]
+    results = []
+    for name, arch_override, hypothesis, target in spec["variants"]:
+        r = run_cell(spec["arch"], spec["shape"], multi_pod=multi_pod,
+                     save=True, arch_override=arch_override,
+                     variant=name if name != "baseline" else "hc-baseline")
+        row = {"cell": cell_key, "variant": name, "hypothesis": hypothesis,
+               "target_term": target, "status": r["status"]}
+        if r["status"] == "ok":
+            row["roofline"] = r["roofline"]
+        else:
+            row["error"] = r.get("error", "")[:300]
+        results.append(row)
+        _log(row)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"LOG_{cell_key}.json").write_text(json.dumps(results, indent=1))
+    return results
+
+
+def _log(row: dict) -> None:
+    if row["status"] != "ok":
+        print(f"[ERR] {row['cell']}/{row['variant']}: {row.get('error')}")
+        return
+    rf = row["roofline"]
+    print(f"[{row['cell']}/{row['variant']}]")
+    print(f"   hypothesis: {row['hypothesis'][:110]}")
+    print(f"   compute={rf['compute_s']:.4g}s memory={rf['memory_s']:.4g}s "
+          f"collective={rf['collective_s']:.4g}s "
+          f"mem_model={rf['memory_model_s']:.4g}s")
+    print(f"   dominant={rf['dominant']}/{rf['dominant_fused']} "
+          f"step={rf['step_s']:.4g}s step_fused={rf['step_fused_s']:.4g}s "
+          f"mfu={rf['mfu']:.3f}/{rf['mfu_fused']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=[*CELLS, "all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    keys = list(CELLS) if args.cell == "all" else [args.cell]
+    for k in keys:
+        if k == "gcn":
+            continue        # baseline-only unless explicitly requested
+        run(k, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests and benches must keep seeing one CPU
+device; only dryrun.py forces 512 placeholder devices before first jax init.
+
+Production topology (TPU v5e): 16x16 = 256 chips per pod; 2 pods = 512 chips
+multi-pod. Axes: ("data", "model") single-pod, ("pod", "data", "model")
+multi-pod — DP over pod x data, TP/EP over model.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Tiny mesh over whatever devices exist (CPU tests): (n/model, model)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# Hardware constants for the roofline (TPU v5e-class, per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+CHIP_HBM_BYTES = 16 * 2**30     # 16 GiB
+
+
+def chips(mesh: Mesh) -> int:
+    return mesh.devices.size

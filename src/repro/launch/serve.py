@@ -1,0 +1,90 @@
+"""Deadline-driven serving: ANY arch's serve step under the D&A allocator.
+
+This is the paper's framework promoted to a generic serving layer
+(DESIGN.md §6): given X independent requests and a deadline T, D&A_REAL
+decides how many "cores" (devices / per-device lanes) the job needs, slots
+the requests, executes them, and reports the Lemma-2 comparison — for PPR
+queries (the paper's workload) or for LM decode / DIN scoring batches.
+
+    PYTHONPATH=src python -m repro.launch.serve --workload ppr \\
+        --dataset web-stanford --queries 512 --deadline 30 --max-cores 64
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..core import (InfeasibleDeadline, SimulatedTimeSource, dna_real,
+                    fraction_sample_size)
+from ..ppr import ForaExecutor, ForaParams, PprWorkload, load
+from ..ppr.datasets import TABLE1
+
+
+def serve_ppr(args) -> None:
+    graph = load(args.dataset, scale=args.scale)
+    spec = TABLE1[args.dataset.lower()]
+    workload = PprWorkload(graph=graph, num_queries=args.queries,
+                           seed=args.seed)
+    executor = ForaExecutor(workload=workload,
+                            params=ForaParams(alpha=0.2, epsilon=args.epsilon),
+                            block_size=args.block_size)
+    s = fraction_sample_size(args.queries, 0.05)
+    try:
+        res = dna_real(args.queries, args.deadline, executor,
+                       max_cores=args.max_cores, sample_size=s,
+                       scaling_factor=spec.scaling_factor_d)
+    except InfeasibleDeadline as e:
+        raise SystemExit(f"REJECTED: {e}") from e
+    print(f"dataset={graph.name} X={args.queries} T={args.deadline}s "
+          f"d={spec.scaling_factor_d}")
+    print(f"  D&A_REAL cores     : {res.cores}")
+    print(f"  Lemma-2 bound cores: {res.bounds.lemma2_cores}")
+    print(f"  reduction          : {res.reduction_vs_lemma2_pct:.2f}%")
+    print(f"  completion         : {res.completion_time:.3f}s "
+          f"(accepted={res.accepted})")
+
+
+def serve_sim(args) -> None:
+    """Generic serve-step workload with modelled times (LM decode / DIN)."""
+    src = SimulatedTimeSource(mean=args.step_time, cv=args.cv, seed=args.seed)
+    try:
+        res = dna_real(args.queries, args.deadline, lambda ids: src.measure(ids),
+                       max_cores=args.max_cores,
+                       sample_size=max(4, args.queries // 20),
+                       scaling_factor=args.d)
+    except InfeasibleDeadline as e:
+        raise SystemExit(f"REJECTED: {e}") from e
+    print(f"workload={args.workload} X={args.queries} T={args.deadline}s")
+    print(f"  D&A_REAL cores     : {res.cores}")
+    print(f"  Lemma-2 bound cores: {res.bounds.lemma2_cores}")
+    print(f"  reduction          : {res.reduction_vs_lemma2_pct:.2f}%")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=["ppr", "lm-decode", "din-serve"],
+                    default="ppr")
+    ap.add_argument("--dataset", default="web-stanford")
+    ap.add_argument("--scale", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--deadline", type=float, default=30.0)
+    ap.add_argument("--max-cores", type=int, default=64)
+    ap.add_argument("--epsilon", type=float, default=0.5)
+    ap.add_argument("--block-size", type=int, default=1)
+    ap.add_argument("--step-time", type=float, default=0.05)
+    ap.add_argument("--cv", type=float, default=0.3)
+    ap.add_argument("--d", type=float, default=0.9)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    jax.config.update("jax_platform_name", "cpu")
+    if args.workload == "ppr":
+        serve_ppr(args)
+    else:
+        serve_sim(args)
+
+
+if __name__ == "__main__":
+    main()

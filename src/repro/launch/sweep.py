@@ -1,0 +1,81 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run sweep driver: all cells, cheap families first, both meshes.
+
+Writes one JSON per cell into reports/dryrun/ (same format as dryrun.py) and
+a rolling summary to reports/dryrun/SWEEP_LOG.txt. Skips cells whose report
+already exists unless --force (so the sweep is resumable)."""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from ..configs import REGISTRY
+from .dryrun import REPORT_DIR, run_cell
+
+FAMILY_ORDER = {"gnn": 0, "recsys": 1, "lm": 2}
+# cheapest shapes first inside each family
+SHAPE_ORDER = {
+    "full_graph_sm": 0, "molecule": 1, "minibatch_lg": 2, "ogb_products": 3,
+    "serve_p99": 0, "train_batch": 1, "serve_bulk": 2, "retrieval_cand": 3,
+    "decode_32k": 0, "prefill_32k": 1, "train_4k": 2, "long_500k": 3,
+    "web_stanford": 0, "dblp": 1, "pokec": 2, "livejournal": 3,
+}
+
+
+def cell_order(item):
+    aid, sid = item
+    fam = REGISTRY[aid].family
+    ppr = 1 if aid == "ppr-fora" else 0
+    return (ppr, FAMILY_ORDER.get(fam, 9), SHAPE_ORDER.get(sid, 9), aid)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--include-ppr", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cells = []
+    for aid, arch in REGISTRY.items():
+        for sid in arch.shape_ids():
+            cells.append((aid, sid))
+    cells.sort(key=cell_order)
+
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    log = REPORT_DIR / "SWEEP_LOG.txt"
+
+    def emit(line: str) -> None:
+        print(line, flush=True)
+        with log.open("a") as f:
+            f.write(line + "\n")
+
+    emit(f"=== sweep start {time.strftime('%H:%M:%S')} ({len(cells)} cells x 2 meshes)")
+    for aid, sid in cells:
+        for mp in (False, True):
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            path = REPORT_DIR / f"{aid}__{sid}__{mesh_name}.json"
+            if path.exists() and not args.force:
+                prev = json.loads(path.read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    emit(f"[cached] {aid}/{sid}/{mesh_name}: {prev['status']}")
+                    continue
+            t0 = time.perf_counter()
+            r = run_cell(aid, sid, multi_pod=mp)
+            dt = time.perf_counter() - t0
+            if r["status"] == "ok":
+                rf = r["roofline"]
+                emit(f"[ok]   {aid}/{sid}/{mesh_name}: {dt:.0f}s "
+                     f"dom={rf['dominant']} step={rf['step_s']:.4g}s "
+                     f"mfu={rf['mfu']:.3f}")
+            elif r["status"] == "skipped":
+                emit(f"[skip] {aid}/{sid}/{mesh_name}")
+            else:
+                emit(f"[ERR]  {aid}/{sid}/{mesh_name}: {r['error'][:200]}")
+    emit(f"=== sweep done {time.strftime('%H:%M:%S')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: assigned architectures as pure-function JAX modules."""
+
+from . import moe, transformer
+from .gnn import dimenet, gcn, graphcast, pna
+from .recsys import din
+
+__all__ = ["transformer", "moe", "gcn", "pna", "graphcast", "dimenet", "din"]

@@ -1,0 +1,216 @@
+"""Shared model building blocks (pure-function style, params as pytrees).
+
+Every model in this framework follows the same contract:
+
+    init(key, cfg)            -> params pytree (real arrays)
+    apply(params, cfg, batch) -> outputs
+
+so that the dry-run can do ``jax.eval_shape(init, ...)`` to obtain parameter
+ShapeDtypeStructs without allocating, and the launcher can map parameter
+*paths* to PartitionSpecs via regex rules (see distributed/sharding.py).
+
+Attention is the blocked online-softmax (flash) formulation in pure JAX —
+memory O(B*H*Sq*block) instead of O(B*H*Sq*Skv) — which is what makes the
+32k-prefill dry-run cells fit. On TPU the Pallas kernel
+(kernels/flash_attention.py) replaces it; the jnp path here doubles as its
+reference oracle and the CPU/dry-run implementation.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# initialisers
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    # NB: python-float scale (np scalars are strongly typed and would
+    # silently promote bf16 params to f32)
+    scale = float(1.0 / np.sqrt(d_in))
+    return (jax.random.uniform(key, (d_in, d_out), dtype, -1.0, 1.0) * scale)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * weight).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_frequencies(d_head: int, max_seq: int, theta: float = 10_000.0):
+    inv = 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
+    t = np.arange(max_seq, dtype=np.float64)
+    freqs = np.outer(t, inv)
+    return (jnp.asarray(np.cos(freqs), jnp.float32),
+            jnp.asarray(np.sin(freqs), jnp.float32))
+
+
+def apply_rope(x, cos, sin, positions):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    c = cos[positions][..., None, :]   # (..., S, 1, Dh/2)
+    s = sin[positions][..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+                           ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocked flash attention (jnp reference / CPU / dry-run path)
+
+
+@partial(jax.jit, static_argnames=("causal", "block_kv", "q_offset_static",
+                                   "unroll"))
+def flash_attention_jnp(q, k, v, *, causal: bool = True, block_kv: int = 1024,
+                        q_offset: int | jax.Array = 0,
+                        q_offset_static: bool = True, unroll: bool = False):
+    """Online-softmax attention.
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh) with Hq % Hkv == 0 (GQA).
+    Scans over KV blocks keeping running (max, sum, acc) — peak memory is
+    O(B*Hq*Sq*block_kv). ``q_offset`` positions the query block inside the
+    KV sequence (prefill chunk / decode with cache). ``unroll=True`` replaces
+    the lax.scan with a python loop — identical math, straight-line HLO, used
+    by the dry-run cost calibration (XLA cost analysis counts loop bodies
+    once; see launch/dryrun.py).
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    groups = Hq // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+
+    nblocks = -(-Skv // block_kv)
+    pad = nblocks * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qf = (q * scale).astype(jnp.float32)
+    # fold GQA: (B, Sq, Hkv, groups, Dh)
+    qf = qf.reshape(B, Sq, Hkv, groups, Dh)
+    kb = k.astype(jnp.float32).reshape(B, nblocks, block_kv, Hkv, Dh)
+    vb = v.astype(jnp.float32).reshape(B, nblocks, block_kv, Hkv, Dh)
+
+    q_pos = jnp.arange(Sq) + q_offset               # (Sq,)
+    neg = jnp.float32(-1e30)
+
+    def scan_block(carry, inputs):
+        m, l, acc = carry                            # m,l: (B,Sq,Hkv,G) acc: +Dh
+        kblk, vblk, blk_idx = inputs                 # (B,bkv,Hkv,Dh)
+        kv_pos = blk_idx * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kblk)   # (B,Sq,Hkv,G,bkv)
+        mask = kv_pos[None, :] < Skv + jnp.zeros((1,), jnp.int32)  # valid kv
+        if causal:
+            mask = jnp.logical_and(mask, q_pos[:, None] >= kv_pos[None, :])
+        s = jnp.where(mask[None, :, None, None, :], s, neg)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, groups), neg, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, groups), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, groups, Dh), jnp.float32)
+    kb_s = jnp.moveaxis(kb, 1, 0)                     # (nblocks, B, bkv, Hkv, Dh)
+    vb_s = jnp.moveaxis(vb, 1, 0)
+    if unroll:
+        carry = (m0, l0, a0)
+        for blk in range(nblocks):
+            carry, _ = scan_block(carry, (kb_s[blk], vb_s[blk],
+                                          jnp.int32(blk)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            scan_block, (m0, l0, a0),
+            (kb_s, vb_s, jnp.arange(nblocks, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def mha_reference(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """Naive O(S^2)-memory attention — oracle for tests only."""
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    groups = Hq // Hkv
+    k = jnp.repeat(k, groups, axis=2)
+    v = jnp.repeat(v, groups, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(Dh)
+    if causal:
+        q_pos = jnp.arange(Sq) + q_offset
+        kv_pos = jnp.arange(Skv)
+        s = jnp.where(q_pos[:, None] >= kv_pos[None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / MLP helpers
+
+
+def act_fn(name: str):
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu, "relu": jax.nn.relu,
+            "gelu_tanh": partial(jax.nn.gelu, approximate=True),
+            "sigmoid": jax.nn.sigmoid, "tanh": jnp.tanh,
+            "dice_like": jax.nn.sigmoid}[name]
+
+
+def mlp_init(key, dims: list[int], dtype=jnp.float32, bias: bool = True):
+    params = []
+    keys = jax.random.split(key, len(dims) - 1)
+    for k, d_in, d_out in zip(keys, dims[:-1], dims[1:]):
+        layer = {"w": dense_init(k, d_in, d_out, dtype)}
+        if bias:
+            layer["b"] = jnp.zeros((d_out,), dtype)
+        params.append(layer)
+    return params
+
+
+def mlp_apply(params, x, activation: str = "relu", final_act: bool = False):
+    fn = act_fn(activation)
+    n = len(params)
+    for i, layer in enumerate(params):
+        x = x @ layer["w"]
+        if "b" in layer:
+            x = x + layer["b"]
+        if i < n - 1 or final_act:
+            x = fn(x)
+    return x
+
+
+def cross_entropy_loss(logits, labels, ignore_id: int = -1):
+    """Mean token cross-entropy; fp32 logsumexp for stability."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].clip(0), axis=-1)[..., 0]
+    valid = (labels != ignore_id).astype(jnp.float32)
+    loss = (lse - gold) * valid
+    return loss.sum() / jnp.maximum(valid.sum(), 1.0)

@@ -1,0 +1,5 @@
+from . import dimenet, gcn, graphcast, pna
+from .common import GraphBatch, random_graph_batch
+
+__all__ = ["GraphBatch", "dimenet", "gcn", "graphcast", "pna",
+           "random_graph_batch"]

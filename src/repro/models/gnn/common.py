@@ -1,0 +1,111 @@
+"""Shared GNN machinery: edge-index message passing via segment ops.
+
+JAX sparse is BCOO-only, so every aggregation here is the scatter regime:
+``jax.ops.segment_sum/max/min`` over an ``edge_index`` (2, M) int32 array —
+this IS the system's SpMM layer (kernel taxonomy §GNN). All models consume a
+``GraphBatch`` of padded arrays (static shapes for jit/dry-run), with node and
+edge masks marking validity.
+
+Sharding: nodes are partitioned over the ``data`` axis, each edge is owned by
+its destination shard; ``segment_sum`` then lowers to a local scatter plus a
+cross-shard reduce under pjit (constraint applied by callers via ctx).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GraphBatch:
+    """Padded graph batch; all arrays static-shaped.
+
+    node_feat (N, F) | edge_index (2, M) src,dst | node_mask (N,) |
+    edge_mask (M,) | positions (N, 3) optional | graph_ids (N,) optional
+    (segment id per node for batched small graphs) | labels optional.
+    """
+
+    node_feat: Any
+    edge_index: Any
+    node_mask: Any
+    edge_mask: Any
+    positions: Any = None
+    graph_ids: Any = None
+    labels: Any = None
+    edge_feat: Any = None
+    num_graphs: int = 1
+
+
+def scatter_sum(values, index, n):
+    return jax.ops.segment_sum(values, index, num_segments=n)
+
+
+def scatter_mean(values, index, n, eps=1e-9):
+    s = jax.ops.segment_sum(values, index, num_segments=n)
+    cnt = jax.ops.segment_sum(jnp.ones(values.shape[:1], values.dtype),
+                              index, num_segments=n)
+    return s / jnp.maximum(cnt, eps)[:, None]
+
+
+def scatter_max(values, index, n):
+    return jax.ops.segment_max(values, index, num_segments=n,
+                               indices_are_sorted=False)
+
+
+def scatter_min(values, index, n):
+    return jax.ops.segment_min(values, index, num_segments=n)
+
+
+def masked_edges(edge_index, edge_mask, n):
+    """Redirect masked-out edges to a trash node (n) so segment ops with
+    num_segments=n+1 keep padding out of real aggregates."""
+    src = jnp.where(edge_mask, edge_index[0], n)
+    dst = jnp.where(edge_mask, edge_index[1], n)
+    return src, dst
+
+
+def in_degree(edge_index, edge_mask, n):
+    dst = jnp.where(edge_mask, edge_index[1], n)
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst,
+                              num_segments=n + 1)[:n]
+    return deg
+
+
+def sym_norm_coeff(edge_index, edge_mask, n):
+    """GCN symmetric normalisation 1/sqrt(d_i d_j) per edge (self-loops are
+    the caller's responsibility; masked edges get weight 0)."""
+    src = jnp.where(edge_mask, edge_index[0], n)
+    dst = jnp.where(edge_mask, edge_index[1], n)
+    ones = jnp.ones_like(src, jnp.float32)
+    deg = jax.ops.segment_sum(ones, dst, num_segments=n + 1) \
+        + jax.ops.segment_sum(ones, src, num_segments=n + 1)
+    deg = jnp.maximum(deg[:n] * 0.5, 1.0)   # avg of in/out ~ undirected degree
+    inv_sqrt = jax.lax.rsqrt(deg)
+    w = inv_sqrt[edge_index[0]] * inv_sqrt[edge_index[1]]
+    return jnp.where(edge_mask, w, 0.0)
+
+
+def random_graph_batch(key, n, m, d_feat, *, n_graphs=1, with_positions=False,
+                       d_edge=0, n_classes=7, dtype=jnp.float32) -> GraphBatch:
+    """Random valid GraphBatch for smoke tests."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    feat = jax.random.normal(k1, (n, d_feat), dtype)
+    src = jax.random.randint(k2, (m,), 0, n)
+    dst = jax.random.randint(k3, (m,), 0, n)
+    batch = GraphBatch(
+        node_feat=feat,
+        edge_index=jnp.stack([src, dst]).astype(jnp.int32),
+        node_mask=jnp.ones((n,), bool),
+        edge_mask=jnp.ones((m,), bool),
+        positions=jax.random.normal(k4, (n, 3), dtype) if with_positions else None,
+        graph_ids=(jnp.arange(n) % n_graphs).astype(jnp.int32),
+        labels=jax.random.randint(k5, (n,), 0, n_classes),
+        edge_feat=(jax.random.normal(k5, (m, d_edge), dtype) if d_edge else None),
+        num_graphs=n_graphs,
+    )
+    return batch

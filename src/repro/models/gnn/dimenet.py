@@ -1,0 +1,256 @@
+"""DimeNet — directional message passing (arXiv:2003.03123).
+
+Assigned config: 6 interaction blocks, d_hidden=128, n_bilinear=8,
+n_spherical=7, n_radial=6. The triplet-gather regime from the kernel
+taxonomy: messages live on *edges*; each interaction block aggregates over
+(k->j->i) triplets with a spherical-radial basis of the angle at j.
+
+TPU adaptation: the triplet list (idx_kj, idx_ji) is precomputed on host
+(``build_triplets``) with a static budget — at web-graph scale the full
+triplet set is O(sum deg^2), so the budget subsamples (standard scalable
+practice; the molecule cells fit exactly). Spherical Bessel roots are found
+by bisection at import (no scipy in this container).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...distributed.ctx import constrain
+from ..common import dense_init, mlp_apply, mlp_init
+from .common import GraphBatch, scatter_sum
+
+
+# ---------------------------------------------------------------------------
+# spherical Bessel machinery (no scipy)
+
+
+def _spherical_jn(l: int, x: np.ndarray) -> np.ndarray:
+    """j_l(x) by upward recurrence (fine for l <= 7 and x > ~l)."""
+    x = np.asarray(x, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        j0 = np.where(x != 0, np.sin(x) / x, 1.0)
+        if l == 0:
+            return j0
+        j1 = np.where(x != 0, np.sin(x) / x**2 - np.cos(x) / x, 0.0)
+        if l == 1:
+            return j1
+        jm, jc = j0, j1
+        for ell in range(1, l):
+            jn = (2 * ell + 1) / x * jc - jm
+            jm, jc = jc, jn
+        return np.where(x != 0, jc, 0.0)
+
+
+@lru_cache(maxsize=None)
+def bessel_roots(n_spherical: int, n_radial: int) -> np.ndarray:
+    """First n_radial positive roots of j_l for l = 0..n_spherical-1."""
+    roots = np.zeros((n_spherical, n_radial))
+    for l in range(n_spherical):
+        found: list[float] = []
+        lo = 1e-6 + l  # roots of j_l start after ~l
+        x = lo
+        step = 0.1
+        prev = _spherical_jn(l, np.array([x]))[0]
+        while len(found) < n_radial:
+            x += step
+            cur = _spherical_jn(l, np.array([x]))[0]
+            if prev * cur < 0:                      # bracketed: bisect
+                a, b = x - step, x
+                for _ in range(80):
+                    mid = 0.5 * (a + b)
+                    fm = _spherical_jn(l, np.array([mid]))[0]
+                    if fm * _spherical_jn(l, np.array([a]))[0] <= 0:
+                        b = mid
+                    else:
+                        a = mid
+                found.append(0.5 * (a + b))
+            prev = cur
+        roots[l] = found
+    return roots
+
+
+def _legendre(l: int, x):
+    """P_l(cos angle) by recurrence (Y_l^0 up to normalisation)."""
+    p0 = jnp.ones_like(x)
+    if l == 0:
+        return p0
+    p1 = x
+    for ell in range(1, l):
+        p0, p1 = p1, ((2 * ell + 1) * x * p1 - ell * p0) / (ell + 1)
+    return p1
+
+
+def radial_basis(d, cutoff: float, n_radial: int):
+    """DimeNet RBF (canonical form): envelope(u) * sin(n*pi*u), u = d/c.
+    envelope ~ 1/u near zero, so the product stays finite (limit n*pi)."""
+    n = jnp.arange(1, n_radial + 1, dtype=d.dtype)
+    u = jnp.clip(d[:, None] / cutoff, 1e-2, 1.0)
+    return envelope(u) * jnp.sin(n * np.pi * u) * np.sqrt(2.0 / cutoff)
+
+
+def envelope(u, p: int = 6):
+    """Smooth cutoff polynomial (DimeNet eq. 8), zero outside u>=1."""
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2.0)
+    c = -p * (p + 1) / 2.0
+    u = jnp.clip(u, 1e-2, None)
+    val = 1.0 / u + a * u ** (p - 1) + b * u ** p + c * u ** (p + 1)
+    return jnp.where(u < 1.0, val, 0.0)
+
+
+def spherical_basis(d, angle, cutoff: float, n_spherical: int, n_radial: int):
+    """a_SBF(d, angle): (T, n_spherical * n_radial)."""
+    roots = bessel_roots(n_spherical, n_radial)          # (L, N)
+    u = jnp.clip(d / cutoff, 1e-2, 1.0)
+    cos_a = jnp.cos(angle)
+    out = []
+    for l in range(n_spherical):
+        jl = _jl_jnp(l, roots[l][None, :] * u[:, None])  # (T, N)
+        yl = _legendre(l, cos_a)[:, None]
+        out.append(jl * yl)
+    return jnp.concatenate(out, axis=-1) * envelope(u)[:, None]
+
+
+def _jl_jnp(l: int, x):
+    # Upward recurrence divides by x each order — unstable/overflowing below
+    # x ~ 0.1 for l<=7. Clamp: j_l(x<0.1) is O(x^l) ~ 0 anyway, and the
+    # envelope already suppresses the tiny-distance regime.
+    x = jnp.maximum(x, 0.1)
+    j0 = jnp.sin(x) / x
+    if l == 0:
+        return j0
+    j1 = jnp.sin(x) / x**2 - jnp.cos(x) / x
+    if l == 1:
+        return j1
+    jm, jc = j0, j1
+    for ell in range(1, l):
+        jm, jc = jc, (2 * ell + 1) / x * jc - jm
+    return jc
+
+
+# ---------------------------------------------------------------------------
+# triplets
+
+
+def build_triplets(edge_index: np.ndarray, n: int,
+                   max_triplets: int | None = None,
+                   seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side (idx_kj, idx_ji) pairs: edge k->j feeding edge j->i, k != i.
+
+    Returns int32 arrays of length T (optionally subsampled to the budget).
+    """
+    src, dst = np.asarray(edge_index[0]), np.asarray(edge_index[1])
+    m = src.size
+    by_dst: dict[int, list[int]] = {}
+    for e in range(m):
+        by_dst.setdefault(int(dst[e]), []).append(e)
+    kj, ji = [], []
+    for e_ji in range(m):
+        j = int(src[e_ji])
+        for e_kj in by_dst.get(j, ()):      # edges ending at j
+            if int(src[e_kj]) != int(dst[e_ji]):
+                kj.append(e_kj)
+                ji.append(e_ji)
+    kj_a = np.asarray(kj, np.int32)
+    ji_a = np.asarray(ji, np.int32)
+    if max_triplets is not None and kj_a.size > max_triplets:
+        rng = np.random.default_rng(seed)
+        sel = rng.choice(kj_a.size, size=max_triplets, replace=False)
+        kj_a, ji_a = kj_a[sel], ji_a[sel]
+    return kj_a, ji_a
+
+
+@dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_out: int = 1              # per-graph energy-style target
+    dtype: str = "float32"
+
+
+def init(key: jax.Array, cfg: DimeNetConfig):
+    dt = jnp.dtype(cfg.dtype)
+    d, nb = cfg.d_hidden, cfg.n_bilinear
+    n_sbf = cfg.n_spherical * cfg.n_radial
+    keys = jax.random.split(key, 4 * cfg.n_blocks + 4)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k0, k1, k2, k3 = keys[4 * i: 4 * i + 4]
+        blocks.append({
+            "w_rbf": dense_init(k0, cfg.n_radial, d, dt),
+            "w_sbf": dense_init(k1, n_sbf, nb, dt),
+            "bilinear": jax.random.normal(k2, (d, nb, d), dt) * 0.05,
+            "upd": mlp_init(k3, [2 * d, d, d], dt),
+        })
+    return {
+        "embed_rbf": dense_init(keys[-4], cfg.n_radial, d, dt),
+        "embed_msg": mlp_init(keys[-3], [d, d], dt),
+        "blocks": blocks,
+        "out_rbf": dense_init(keys[-2], cfg.n_radial, d, dt),
+        "out_mlp": mlp_init(keys[-1], [d, d, cfg.n_out], dt),
+    }
+
+
+def apply(params, cfg: DimeNetConfig, batch: GraphBatch,
+          triplets: tuple[jax.Array, jax.Array]):
+    """Directional message passing over edges; triplets = (idx_kj, idx_ji)."""
+    assert batch.positions is not None, "DimeNet needs positions"
+    n = batch.node_feat.shape[0]
+    src, dst = batch.edge_index[0], batch.edge_index[1]
+    pos = batch.positions
+    vec = pos[dst] - pos[src]                       # (M, 3)
+    dist = jnp.linalg.norm(vec + 1e-12, axis=-1)
+    rbf = radial_basis(dist, cfg.cutoff, cfg.n_radial)        # (M, R)
+
+    idx_kj, idx_ji = triplets
+    # angle at j between k->j and j->i
+    v1 = -vec[idx_kj]
+    v2 = vec[idx_ji]
+    cos_t = (v1 * v2).sum(-1) / jnp.maximum(
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1), 1e-9)
+    angle = jnp.arccos(jnp.clip(cos_t, -1.0, 1.0))
+    sbf = spherical_basis(dist[idx_kj], angle, cfg.cutoff,
+                          cfg.n_spherical, cfg.n_radial)      # (T, L*R)
+
+    emask = batch.edge_mask.astype(rbf.dtype)[:, None]
+    msg = mlp_apply(params["embed_msg"], rbf @ params["embed_rbf"], "silu",
+                    final_act=True) * emask                   # (M, d)
+    m_edges = msg.shape[0]
+    for blk in params["blocks"]:
+        msg = constrain(msg, "data", None)
+        g_rbf = rbf @ blk["w_rbf"]                            # (M, d)
+        g_sbf = sbf @ blk["w_sbf"]                            # (T, nb)
+        m_kj = msg[idx_kj] * g_rbf[idx_kj]                    # (T, d)
+        # bilinear: (T,d) x (d,nb,d) x (T,nb) -> (T,d)
+        inter = jnp.einsum("td,dbe,tb->te", m_kj, blk["bilinear"], g_sbf)
+        agg = scatter_sum(inter, idx_ji, m_edges)             # sum over k
+        msg = msg + mlp_apply(blk["upd"],
+                              jnp.concatenate([msg, agg], -1), "silu") * emask
+
+    # per-node output: sum incoming messages modulated by rbf
+    contrib = msg * (rbf @ params["out_rbf"])
+    node_h = scatter_sum(contrib * emask,
+                         jnp.where(batch.edge_mask, dst, n), n + 1)[:n]
+    per_node = mlp_apply(params["out_mlp"], node_h, "silu")   # (N, n_out)
+    if batch.graph_ids is not None:
+        return scatter_sum(per_node, batch.graph_ids, batch.num_graphs)
+    return per_node.sum(axis=0, keepdims=True)
+
+
+def loss_fn(params, cfg: DimeNetConfig, batch: GraphBatch, triplets):
+    pred = apply(params, cfg, batch, triplets)
+    target = batch.labels if (batch.labels is not None and
+                              getattr(batch.labels, "ndim", 0) == pred.ndim) \
+        else jnp.zeros_like(pred)
+    return jnp.mean(jnp.square((pred - target).astype(jnp.float32)))

@@ -1,0 +1,98 @@
+"""PNA — Principal Neighbourhood Aggregation (arXiv:2004.05718).
+
+Assigned config: 4 layers, d_hidden=75, aggregators {mean,max,min,std},
+scalers {identity, amplification, attenuation}. Each layer:
+
+    m_ij   = M(h_i, h_j)                        (pre-MLP on messages)
+    agg    = [mean|max|min|std]_j m_ij          (4 aggregators)
+    scaled = [1, log(d+1)/δ, δ/log(d+1)] ⊗ agg  (3 scalers -> 12 channels)
+    h_i'   = U(h_i, scaled)                     (post-MLP + residual)
+
+δ is the mean log-degree of the training graph (a config constant here).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ...distributed.ctx import constrain
+from ..common import mlp_apply, mlp_init
+from .common import (GraphBatch, in_degree, scatter_max, scatter_mean,
+                     scatter_min, scatter_sum)
+
+
+@dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 1433
+    n_classes: int = 7
+    delta: float = 2.5           # mean log-degree normaliser
+    dtype: str = "float32"
+
+    @property
+    def n_channels(self) -> int:
+        return 4 * 3             # aggregators x scalers
+
+
+def init(key: jax.Array, cfg: PNAConfig):
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers * 2 + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            # message MLP on [h_src, h_dst]
+            "msg": mlp_init(keys[2 * i], [2 * d, d], dt),
+            # update MLP on [h, 12*d aggregated]
+            "upd": mlp_init(keys[2 * i + 1], [d + cfg.n_channels * d, d], dt),
+        })
+    return {"encoder": mlp_init(keys[-2], [cfg.d_in, d], dt),
+            "layers": layers,
+            "decoder": mlp_init(keys[-1], [d, cfg.n_classes], dt)}
+
+
+def apply(params, cfg: PNAConfig, batch: GraphBatch):
+    n = batch.node_feat.shape[0]
+    src, dst = batch.edge_index[0], batch.edge_index[1]
+    emask = batch.edge_mask.astype(batch.node_feat.dtype)[:, None]
+    h = mlp_apply(params["encoder"], batch.node_feat, "relu", final_act=True)
+
+    deg = in_degree(batch.edge_index, batch.edge_mask, n)
+    log_deg = jnp.log1p(deg)[:, None]
+    amp = log_deg / cfg.delta
+    att = cfg.delta / jnp.maximum(log_deg, 1e-2)
+
+    for layer in params["layers"]:
+        h = constrain(h, "data", None)
+        m = mlp_apply(layer["msg"],
+                      jnp.concatenate([h[src], h[dst]], -1), "relu",
+                      final_act=True) * emask
+        # masked aggregations (trash-node trick for max/min neutrality)
+        mean_a = scatter_mean(m, jnp.where(batch.edge_mask, dst, n), n + 1)[:n]
+        sum_sq = scatter_mean(m * m, jnp.where(batch.edge_mask, dst, n), n + 1)[:n]
+        std_a = jnp.sqrt(jnp.maximum(sum_sq - mean_a * mean_a, 0.0) + 1e-5)
+        neg_inf = jnp.finfo(m.dtype).min
+        max_a = scatter_max(jnp.where(emask > 0, m, neg_inf),
+                            jnp.where(batch.edge_mask, dst, n), n + 1)[:n]
+        max_a = jnp.where(jnp.isfinite(max_a), max_a, 0.0)
+        min_a = scatter_min(jnp.where(emask > 0, m, -neg_inf),
+                            jnp.where(batch.edge_mask, dst, n), n + 1)[:n]
+        min_a = jnp.where(jnp.isfinite(min_a), min_a, 0.0)
+        aggs = jnp.concatenate([mean_a, max_a, min_a, std_a], axis=-1)  # (N,4d)
+        scaled = jnp.concatenate([aggs, aggs * amp, aggs * att], axis=-1)
+        h = h + mlp_apply(layer["upd"],
+                          jnp.concatenate([h, scaled], -1), "relu")
+    return mlp_apply(params["decoder"], h, "relu")
+
+
+def loss_fn(params, cfg: PNAConfig, batch: GraphBatch):
+    logits = apply(params, cfg, batch)
+    mask = batch.node_mask.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch.labels[:, None].clip(0), axis=-1)[:, 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,3 @@
+from . import din
+
+__all__ = ["din"]

@@ -1,0 +1,173 @@
+"""DIN — Deep Interest Network (arXiv:1706.06978).
+
+Assigned config: embed_dim=18, user-history seq_len=100, attention MLP 80-40,
+main MLP 200-80, target attention interaction. The hot path is the embedding
+lookup over huge sparse tables (taxonomy §RecSys): JAX has no EmbeddingBag, so
+lookups are ``jnp.take`` + masked weighted reduction — the Pallas
+``embedding_bag`` kernel implements the same op for the TPU target, with this
+module's `_bag` as its semantics.
+
+Batch layout:
+    hist_items (B, L) int32 | hist_cats (B, L) | hist_mask (B, L) |
+    target_item (B,) | target_cat (B,) | label (B,) float
+
+Serving entry points: ``score`` (pointwise CTR, serve_p99 / serve_bulk /
+train shapes) and ``score_candidates`` (one user vs N candidates, blocked —
+the retrieval_cand shape; batched-dot, never a python loop over candidates).
+
+Embedding tables are row-sharded over the ``model`` axis (huge-embedding
+regime); the per-example gathers induce the all-to-all under pjit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ...distributed.ctx import constrain
+from ..common import act_fn, embed_init, mlp_apply, mlp_init
+
+
+@dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    n_items: int = 1_000_000
+    n_cats: int = 10_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple[int, ...] = (80, 40)
+    mlp: tuple[int, ...] = (200, 80)
+    dtype: str = "float32"
+
+    @property
+    def d_pair(self) -> int:
+        return 2 * self.embed_dim       # item ++ category
+
+
+def init(key: jax.Array, cfg: DINConfig):
+    dt = jnp.dtype(cfg.dtype)
+    k_i, k_c, k_a, k_m = jax.random.split(key, 4)
+    d = cfg.d_pair
+    # attention MLP input: [hist, target, hist-target, hist*target]
+    attn_dims = [4 * d, *cfg.attn_mlp, 1]
+    mlp_dims = [3 * d, *cfg.mlp, 1]     # [interest, target, interest*target]
+    return {
+        "item_emb": embed_init(k_i, cfg.n_items, cfg.embed_dim, dt),
+        "cat_emb": embed_init(k_c, cfg.n_cats, cfg.embed_dim, dt),
+        "attn": mlp_init(k_a, attn_dims, dt),
+        "mlp": mlp_init(k_m, mlp_dims, dt),
+    }
+
+
+def _pair_embed(params, items, cats):
+    """(..., ) ids -> (..., 2*embed_dim). Row-sharded table gather."""
+    item_e = jnp.take(params["item_emb"], items, axis=0)
+    cat_e = jnp.take(params["cat_emb"], cats, axis=0)
+    return jnp.concatenate([item_e, cat_e], axis=-1)
+
+
+def _interest(params, hist_e, hist_mask, target_e):
+    """DIN target attention: weights from the attention MLP, NO softmax
+    (paper §4.3 keeps raw weights to preserve interest intensity)."""
+    L = hist_e.shape[-2]
+    t = jnp.broadcast_to(target_e[..., None, :], hist_e.shape)
+    feats = jnp.concatenate([hist_e, t, hist_e - t, hist_e * t], axis=-1)
+    w = mlp_apply(params["attn"], feats, "sigmoid")[..., 0]     # (..., L)
+    w = w * hist_mask.astype(w.dtype)
+    # weighted bag-sum over history — the embedding-bag reduction
+    return jnp.einsum("...l,...ld->...d", w, hist_e)
+
+
+def score(params, cfg: DINConfig, batch):
+    """Pointwise CTR logits (B,). batch is a dict (see module docstring)."""
+    hist_e = _pair_embed(params, batch["hist_items"], batch["hist_cats"])
+    hist_e = constrain(hist_e, "batch", None, None)
+    target_e = _pair_embed(params, batch["target_item"], batch["target_cat"])
+    interest = _interest(params, hist_e, batch["hist_mask"], target_e)
+    feats = jnp.concatenate([interest, target_e, interest * target_e], -1)
+    return mlp_apply(params["mlp"], feats, "sigmoid")[..., 0]
+
+
+def loss_fn(params, cfg: DINConfig, batch):
+    logits = score(params, cfg, batch).astype(jnp.float32)
+    labels = batch["label"].astype(jnp.float32)
+    # numerically-stable BCE-with-logits
+    loss = jnp.maximum(logits, 0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+    return loss.mean()
+
+
+def _interest_factored(params, hist_e, hist_mask, t_e):
+    """Algebraically-factored DIN attention for retrieval (§Perf D1).
+
+    Layer 1 of the attention MLP sees concat([h, t, h-t, h*t]); splitting
+    its weight row-blocks W1 = [Wh; Wt; Wd; Wp] gives
+
+        z = h@(Wh+Wd) + t@(Wt-Wd) + (h*t)@Wp + b1
+
+    where h@(Wh+Wd) is candidate-INDEPENDENT (computed once per history,
+    amortised over every candidate) and t@(Wt-Wd) is history-independent —
+    only the bilinear (h*t)@Wp stays per-(candidate, item). Exactly equal
+    to _interest; ~4x fewer layer-1 FLOPs (~1.7x whole attention MLP).
+
+    hist_e (L, d); t_e (blk, d). Returns (blk, d) interest vectors.
+    """
+    act = act_fn("sigmoid")
+    layer1 = params["attn"][0]
+    d = hist_e.shape[-1]
+    W1, b1 = layer1["w"], layer1["b"]
+    Wh, Wt, Wd, Wp = W1[:d], W1[d:2 * d], W1[2 * d:3 * d], W1[3 * d:]
+    A = hist_e @ (Wh + Wd)                       # (L, H1) once per history
+    Tt = t_e @ (Wt - Wd)                         # (blk, H1) once per cand
+    P = jnp.einsum("bd,ldh->blh", t_e,
+                   jnp.einsum("ld,dh->ldh", hist_e, Wp))   # bilinear term
+    z = act(A[None, :, :] + Tt[:, None, :] + P + b1)        # (blk, L, H1)
+    for layer in params["attn"][1:-1]:
+        z = act(z @ layer["w"] + layer["b"])
+    last = params["attn"][-1]
+    w = (z @ last["w"] + last["b"])[..., 0]                 # (blk, L)
+    w = w * hist_mask.astype(w.dtype)[None, :]
+    return jnp.einsum("bl,ld->bd", w, hist_e)
+
+
+def score_candidates(params, cfg: DINConfig, batch, *, block: int = 8192,
+                     unroll: bool = False, factored: bool = False):
+    """One user vs N candidates (retrieval_cand shape).
+
+    batch: hist_items/hist_cats/hist_mask (1, L); cand_items/cand_cats (N,).
+    Computes DIN attention per candidate in candidate blocks via lax.map —
+    batched compute, bounded memory, no python loop. ``unroll=True`` emits a
+    straight-line python loop instead (dry-run cost calibration);
+    ``factored=True`` uses the algebraically-factored attention (§Perf D1).
+    """
+    hist_e = _pair_embed(params, batch["hist_items"], batch["hist_cats"])[0]
+    hist_mask = batch["hist_mask"][0]
+    cand_items, cand_cats = batch["cand_items"], batch["cand_cats"]
+    n = cand_items.shape[0]
+    nblk = -(-n // block)
+    pad = nblk * block - n
+    ci = jnp.pad(cand_items, (0, pad))
+    cc = jnp.pad(cand_cats, (0, pad))
+
+    def score_block(args):
+        items, cats = args
+        t_e = _pair_embed(params, items, cats)                  # (blk, d)
+        if factored:
+            interest = _interest_factored(params, hist_e, hist_mask, t_e)
+        else:
+            he = jnp.broadcast_to(hist_e[None],
+                                  (items.shape[0],) + hist_e.shape)
+            interest = _interest(params, he, hist_mask[None], t_e)
+        feats = jnp.concatenate([interest, t_e, interest * t_e], -1)
+        return mlp_apply(params["mlp"], feats, "sigmoid")[..., 0]
+
+    ci_b = ci.reshape(nblk, block)
+    cc_b = cc.reshape(nblk, block)
+    if unroll:
+        scores = jnp.stack([score_block((ci_b[i], cc_b[i]))
+                            for i in range(nblk)])
+    else:
+        scores = jax.lax.map(score_block, (ci_b, cc_b))
+    return scores.reshape(-1)[:n]

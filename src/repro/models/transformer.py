@@ -1,0 +1,368 @@
+"""Decoder-only LM covering the five assigned architectures.
+
+One configurable implementation spans: GQA/MQA (n_kv_heads), explicit d_head
+(gemma-2b uses 256 != d_model/n_heads), GLU variants (GeGLU/SwiGLU), QKV bias
+(qwen), tied embeddings, RoPE, RMSNorm, and an optional MoE FFN (moonshot /
+qwen2-moe: shared + routed experts, top-k).
+
+Layer parameters are **stacked** (every leaf carries a leading (L,) axis) and
+the forward is a ``lax.scan`` over layers — the MaxText pattern. This keeps
+HLO size and compile time independent of depth (qwen1.5-32b is 64 layers) and
+gives the dry-run a single layer body to analyse. Remat wraps the scan body.
+
+Entry points (all pure; params are pytrees from ``init``):
+    loss_fn      tokens/labels -> scalar loss        (training forward)
+    prefill_step tokens -> last-token logits + KV cache
+    decode_step  one token + KV cache -> logits + updated cache
+
+Layouts follow the Megatron TP pattern on the ``model`` axis: attention heads
+and FFN hidden are column-sharded, output projections row-sharded; MoE
+experts are expert-sharded over the same axis (EP); tokens are data-parallel
+over ``pod`` x ``data``. Constraints go through ``distributed.ctx`` so the
+same code runs unsharded on CPU.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.ctx import constrain
+from .common import (act_fn, apply_rope, cross_entropy_loss, dense_init,
+                     embed_init, flash_attention_jnp, rms_norm,
+                     rope_frequencies)
+from .moe import MoEConfig, moe_apply, moe_init
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None          # default d_model // n_heads
+    act: str = "silu"                  # glu gate activation (silu=SwiGLU, gelu=GeGLU)
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    moe: MoEConfig | None = None
+    dtype: str = "bfloat16"
+    remat: bool = True                 # per-layer activation checkpointing
+    attn_block_kv: int = 1024
+    scan_layers: bool = True           # lax.scan over stacked layers
+    unroll_attn: bool = False          # python-loop attention blocks (calib)
+    # --- perf-iteration knobs (EXPERIMENTS.md §Perf) ---
+    seq_shard_residual: bool = False   # Megatron sequence parallelism: the
+                                       # residual/norm segment is S-sharded
+                                       # over the model axis (AR -> RS+AG)
+    remat_policy: str = "nothing"      # "nothing" | "save_block_io" (save
+                                       # the S-sharded block outputs; bwd
+                                       # skips the fwd collectives)
+    attn_tp: bool = True               # False: attention fully data-parallel
+                                       # (replicated attn weights; kills the
+                                       # attention TP all-reduces — for MoE
+                                       # archs with small d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def param_count(self) -> int:
+        dh, H, Hkv = self.head_dim, self.n_heads, self.n_kv_heads
+        attn = self.d_model * dh * (H + 2 * Hkv) + H * dh * self.d_model
+        if self.qkv_bias:
+            attn += dh * (H + 2 * Hkv)
+        if self.moe is None:
+            ffn = 3 * self.d_model * self.d_ff
+        else:
+            m = self.moe
+            ffn = m.num_experts * 3 * self.d_model * m.d_ff_expert \
+                + self.d_model * m.num_experts \
+                + (3 * self.d_model * m.shared_ff * m.num_shared)
+        per_layer = attn + ffn + 2 * self.d_model
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + self.d_model
+
+    @property
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count
+        m = self.moe
+        dh, H, Hkv = self.head_dim, self.n_heads, self.n_kv_heads
+        attn = self.d_model * dh * (H + 2 * Hkv) + H * dh * self.d_model
+        if self.qkv_bias:
+            attn += dh * (H + 2 * Hkv)
+        ffn_active = (m.top_k * 3 * self.d_model * m.d_ff_expert
+                      + self.d_model * m.num_experts
+                      + 3 * self.d_model * m.shared_ff * m.num_shared)
+        per_layer = attn + ffn_active + 2 * self.d_model
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + self.d_model
+
+    @property
+    def flops_param_count(self) -> int:
+        """Matmul-visited active params for the 6*N*D estimate: excludes the
+        input-embedding gather; counts the unembedding matmul exactly once
+        (tied or not)."""
+        emb_rows = self.vocab * self.d_model
+        untied_extra = 0 if self.tie_embeddings else emb_rows
+        return self.active_param_count - emb_rows - untied_extra + emb_rows
+
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init (stacked layers)
+
+
+def _layer_init(key: jax.Array, cfg: LMConfig):
+    dt = cfg.jnp_dtype()
+    dh, H, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ka, kf = jax.random.split(key)
+    ka_q, ka_k, ka_v, ka_o = jax.random.split(ka, 4)
+    attn = {
+        "wq": dense_init(ka_q, cfg.d_model, H * dh, dt),
+        "wk": dense_init(ka_k, cfg.d_model, Hkv * dh, dt),
+        "wv": dense_init(ka_v, cfg.d_model, Hkv * dh, dt),
+        "wo": dense_init(ka_o, H * dh, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((H * dh,), dt)
+        attn["bk"] = jnp.zeros((Hkv * dh,), dt)
+        attn["bv"] = jnp.zeros((Hkv * dh,), dt)
+    if cfg.moe is None:
+        kg, ku, kd = jax.random.split(kf, 3)
+        ffn = {"w_gate": dense_init(kg, cfg.d_model, cfg.d_ff, dt),
+               "w_up": dense_init(ku, cfg.d_model, cfg.d_ff, dt),
+               "w_down": dense_init(kd, cfg.d_ff, cfg.d_model, dt)}
+    else:
+        ffn = moe_init(kf, cfg.d_model, cfg.moe, dt)
+    return {"attn": attn, "ffn": ffn,
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt)}
+
+
+def init(key: jax.Array, cfg: LMConfig):
+    dt = cfg.jnp_dtype()
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    params = {"embed": embed_init(k_emb, cfg.vocab, cfg.d_model, dt),
+              "layers": layers,
+              "final_norm": jnp.ones((cfg.d_model,), dt)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+
+
+def _attention(p, cfg: LMConfig, x, cos, sin, positions, *, kv_cache=None,
+               cache_len=None, causal=True):
+    """x: (B, S, d). kv_cache: optional (2, B, Smax, Hkv, Dh), write at
+    cache_len. Returns (out, cache)."""
+    B, S, _ = x.shape
+    dh, H, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Hkv, dh)
+    v = v.reshape(B, S, Hkv, dh)
+    q = apply_rope(q, cos, sin, positions)
+    k = apply_rope(k, cos, sin, positions)
+    head_ax = "model" if cfg.attn_tp else None
+    q = constrain(q, "batch", None, head_ax, None)
+    k = constrain(k, "batch", None, head_ax, None)
+    v = constrain(v, "batch", None, head_ax, None)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache[0], kv_cache[1]
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, cache_len, 0, 0))
+        cache = jnp.stack([ck, cv])
+        out = flash_attention_jnp(q, ck, cv, causal=True,
+                                  block_kv=cfg.attn_block_kv,
+                                  q_offset=cache_len, q_offset_static=False,
+                                  unroll=cfg.unroll_attn)
+    else:
+        cache = jnp.stack([k, v])
+        out = flash_attention_jnp(q, k, v, causal=causal,
+                                  block_kv=min(cfg.attn_block_kv, max(S, 128)),
+                                  unroll=cfg.unroll_attn)
+    out = out.reshape(B, S, H * dh) @ p["wo"]
+    return constrain(out, "batch", None, None), cache
+
+
+def _residual_spec(cfg: LMConfig):
+    # sequence parallelism: the residual stream lives S-sharded over the
+    # model axis between blocks; GSPMD turns the block-output all-reduce
+    # into reduce-scatter (+ all-gather at the next block input)
+    return ("batch", "model", None) if cfg.seq_shard_residual \
+        else ("batch", None, None)
+
+
+def _layer(p, cfg: LMConfig, x, cos, sin, positions, kv_cache=None,
+           cache_len=None):
+    from jax.ad_checkpoint import checkpoint_name
+    h, cache = _attention(p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+                          cos, sin, positions, kv_cache=kv_cache,
+                          cache_len=cache_len)
+    h = constrain(h, *_residual_spec(cfg))
+    x = constrain(x, *_residual_spec(cfg)) + checkpoint_name(h, "attn_out")
+    y = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        fp = p["ffn"]
+        hh = act_fn(cfg.act)(y @ fp["w_gate"]) * (y @ fp["w_up"])
+        hh = constrain(hh, "batch", None, "model")
+        ff = constrain(hh @ fp["w_down"], *_residual_spec(cfg))
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        ff, aux = moe_apply(p["ffn"], cfg.moe, y)
+        ff = constrain(ff, *_residual_spec(cfg))
+    return x + checkpoint_name(ff, "ffn_out"), cache, aux
+
+
+def _unembed(params, cfg: LMConfig, h):
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["lm_head"]
+    return constrain(logits, "batch", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# public steps
+
+
+def _remat_policy(cfg: LMConfig):
+    if cfg.remat_policy == "save_block_io":
+        return jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "ffn_out")
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def forward(params, cfg: LMConfig, tokens, *, causal=True):
+    """tokens (B, S) -> hidden (B, S, d), aux_loss. lax.scan over layers."""
+    B, S = tokens.shape
+    cos, sin = rope_frequencies(cfg.head_dim, S, cfg.rope_theta)
+    x = params["embed"][tokens].astype(cfg.jnp_dtype())
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, layer_p):
+        x_new, _, aux = _layer(layer_p, cfg, x, cos, sin, positions)
+        return x_new, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        aux_total = auxs.sum()
+    else:
+        aux_total = jnp.zeros((), jnp.float32)
+        for li in range(cfg.n_layers):
+            layer_p = jax.tree.map(lambda a, i=li: a[i], params["layers"])
+            x, aux = body(x, layer_p)
+            aux_total = aux_total + aux
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux_total
+
+
+def loss_fn(params, cfg: LMConfig, tokens, labels):
+    h, aux = forward(params, cfg, tokens)
+    logits = _unembed(params, cfg, h)
+    loss = cross_entropy_loss(logits, labels)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    return loss
+
+
+def prefill_step(params, cfg: LMConfig, tokens):
+    """tokens (B, S) -> (last_logits (B, V) fp32, kv (L, 2, B, S, Hkv, Dh)).
+
+    Logits only for the final position — the full (B, S, V) tensor at
+    32k x 152k vocab would be ~300GB; serving wants next-token logits."""
+    B, S = tokens.shape
+    cos, sin = rope_frequencies(cfg.head_dim, S, cfg.rope_theta)
+    x = params["embed"][tokens].astype(cfg.jnp_dtype())
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, layer_p):
+        x_new, cache, _ = _layer(layer_p, cfg, x, cos, sin, positions)
+        return x_new, cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, params["layers"])
+    else:
+        cache_list = []
+        for li in range(cfg.n_layers):
+            layer_p = jax.tree.map(lambda a, i=li: a[i], params["layers"])
+            x, cache = body(x, layer_p)
+            cache_list.append(cache)
+        caches = jnp.stack(cache_list)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, h[:, -1:, :])[:, 0, :]
+    return (logits.astype(jnp.float32),
+            constrain(caches, None, None, "batch", None, "model", None))
+
+
+def decode_step(params, cfg: LMConfig, token, kv_cache, cache_len):
+    """One decode step.
+
+    token (B, 1) int32; kv_cache (L, 2, B, Smax, Hkv, Dh); cache_len ().
+    Returns (logits (B, V) fp32, updated cache). Scans layers, threading the
+    per-layer cache slice through the scan's xs/ys.
+    """
+    B = token.shape[0]
+    Smax = kv_cache.shape[3]
+    cos, sin = rope_frequencies(cfg.head_dim, Smax, cfg.rope_theta)
+    x = params["embed"][token].astype(cfg.jnp_dtype())
+    positions = jnp.broadcast_to(cache_len, (B, 1)).astype(jnp.int32)
+
+    def body(x, xs):
+        layer_p, layer_cache = xs
+        x_new, cache, _ = _layer(layer_p, cfg, x, cos, sin, positions,
+                                 kv_cache=layer_cache, cache_len=cache_len)
+        return x_new, cache
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], kv_cache))
+    else:
+        cache_list = []
+        for li in range(cfg.n_layers):
+            layer_p = jax.tree.map(lambda a, i=li: a[i], params["layers"])
+            x, cache = body(x, (layer_p, kv_cache[li]))
+            cache_list.append(cache)
+        new_cache = jnp.stack(cache_list)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, h)[:, 0, :]
+    return (logits.astype(jnp.float32),
+            constrain(new_cache, None, None, "batch", None, "model", None))
+
+
+def make_kv_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dt = dtype or cfg.jnp_dtype()
+    return jnp.zeros((cfg.n_layers, 2, batch, max_seq, cfg.n_kv_heads,
+                      cfg.head_dim), dt)
+
+
+def model_flops_per_token(cfg: LMConfig) -> float:
+    """MODEL_FLOPS = 6 * N_active per trained token (2 fwd + 4 bwd)."""
+    return 6.0 * cfg.active_param_count

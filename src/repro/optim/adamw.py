@@ -1,0 +1,78 @@
+"""AdamW with global-norm clipping (no optax in this container).
+
+Moments are fp32 regardless of param dtype (bf16 training standard). The
+update is pure and pytree-shaped, so the launcher can shard optimizer state
+independently of parameters — ``distributed.sharding.zero1_spec`` spreads
+m/v over the data axis (ZeRO-1 realised by the compiler: grads arrive
+reduce-scattered, updated shards all-gather back into the bf16 params).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    # linear warmup then constant (schedule kept simple; cosine in train.py)
+    lr = cfg.lr * jnp.minimum(1.0, step / max(cfg.warmup_steps, 1))
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1.0 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(gf)
+        m_hat = m_new / b1t
+        v_hat = v_new / b2t
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(new_m, new_v, step), {"grad_norm": gnorm, "lr": lr}

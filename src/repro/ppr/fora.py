@@ -1,0 +1,170 @@
+"""FORA: forward push + Monte-Carlo random walks (Wang et al., KDD'17).
+
+The paper's workload engine. Parameters follow FORA's single-source setting:
+approximation guarantee |pi_hat - pi| <= eps * pi for all pi >= delta with
+probability 1 - p_f, with the standard choices delta = 1/n, p_f = 1/n.
+
+    omega = (2*eps/3 + 2) * ln(2/p_f) / (eps^2 * delta)     (total walk budget)
+    rmax  = eps * sqrt(delta / (3 * m * ln(2/p_f)))          (push threshold)
+
+Phase 1 pushes until all residuals satisfy r(v) <= rmax*deg(v); phase 2 runs
+ceil(r_sum * omega) walks sampled from the residual distribution (TPU
+adaptation — see random_walk.py) and adds the endpoint mass to the reserve.
+Estimator is unbiased; randomness makes per-query time fluctuate, which is
+exactly the phenomenon the paper's scaling factor d addresses.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .forward_push import forward_push_np
+from .graph import Graph
+from .random_walk import residual_walks_batched
+
+
+@dataclass(frozen=True)
+class ForaParams:
+    alpha: float = 0.2
+    epsilon: float = 0.5
+    delta: float | None = None     # default 1/n
+    p_f: float | None = None       # default 1/n
+    rmax_scale: float = 1.0        # beyond-paper tuning knob (push/walk balance)
+    walk_tail: float = 1e-4
+    max_walks: int = 1 << 22       # hard cap keeping the walk phase jit-static
+
+    def resolve(self, graph: Graph) -> "ResolvedFora":
+        n, m = graph.n, graph.m
+        delta = self.delta if self.delta is not None else 1.0 / n
+        p_f = self.p_f if self.p_f is not None else 1.0 / n
+        log_term = math.log(2.0 / p_f)
+        omega = (2.0 * self.epsilon / 3.0 + 2.0) * log_term / (self.epsilon ** 2 * delta)
+        rmax = self.rmax_scale * self.epsilon * math.sqrt(delta / (3.0 * m * log_term))
+        return ResolvedFora(alpha=self.alpha, epsilon=self.epsilon,
+                            delta=delta, p_f=p_f, omega=omega, rmax=rmax,
+                            walk_tail=self.walk_tail, max_walks=self.max_walks)
+
+
+@dataclass(frozen=True)
+class ResolvedFora:
+    alpha: float
+    epsilon: float
+    delta: float
+    p_f: float
+    omega: float
+    rmax: float
+    walk_tail: float
+    max_walks: int
+
+
+class ForaResult(NamedTuple):
+    pi: np.ndarray        # (B, n) PPR estimates
+    push_iters: int
+    walks_used: int
+    residual_mass: np.ndarray  # (B,) r_sum after push (drives walk count)
+
+
+def fora(graph: Graph, sources: np.ndarray, params: ForaParams = ForaParams(),
+         key: jax.Array | None = None) -> ForaResult:
+    """Single-source FORA for a batch of sources (B,). Returns dense rows."""
+    rp = params.resolve(graph)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    sources = np.asarray(sources, dtype=np.int32).reshape(-1)
+
+    push = forward_push_np(graph, sources, alpha=rp.alpha, rmax=rp.rmax)
+    residual = np.asarray(push.r)
+    r_sum = residual.sum(axis=1)
+
+    # Walk budget: FORA uses ceil(r_sum * omega) per source. W must be static
+    # for jit, so we take the batch max (extra walks only reduce variance —
+    # they are still weighted by each row's own r_sum / W) and round UP to
+    # the next power of two so repeated queries reuse the same compiled
+    # executable instead of re-jitting per distinct budget.
+    walks = int(min(rp.max_walks, max(1, math.ceil(float(r_sum.max()) * rp.omega))))
+    walks = 1 << (walks - 1).bit_length()
+    wr = residual_walks_batched(graph, residual, key, alpha=rp.alpha,
+                                num_walks=walks, tail=rp.walk_tail)
+    pi = np.asarray(push.pi) + np.asarray(wr.endpoint_mass)
+    return ForaResult(pi=pi, push_iters=int(push.iters),
+                      walks_used=walks, residual_mass=r_sum)
+
+
+def fora_query_block(graph: Graph, sources: np.ndarray,
+                     params: ForaParams = ForaParams(),
+                     seed: int = 0) -> np.ndarray:
+    """The serving-path entry point: one block of queries -> PPR rows."""
+    key = jax.random.PRNGKey(seed)
+    return fora(graph, sources, params, key).pi
+
+
+def fora_step_calib(edge_src, edge_dst, out_offsets, out_degree, seeds, key,
+                    *, alpha: float, rmax: float, n: int, num_walks: int,
+                    push_sweeps: int, walk_steps: int):
+    """Straight-line FORA step with pinned loop counts — the dry-run cost
+    calibration variant (XLA cost analysis counts loop bodies once; the
+    launcher lowers this at (1,1)/(2,1)/(1,2) and extrapolates to the
+    deployment counts). Math identical to fora_step per sweep/step."""
+    deg = jnp.maximum(out_degree.astype(jnp.float32), 1.0)
+    threshold = rmax * deg
+    pi = jnp.zeros_like(seeds)
+    r = seeds
+    for _ in range(push_sweeps):
+        front = (r > threshold[None, :]).astype(r.dtype)
+        pushed = r * front
+        pi = pi + alpha * pushed
+        spread = (1.0 - alpha) * pushed / deg[None, :]
+        moved = jax.ops.segment_sum(spread[:, edge_src].T, edge_dst,
+                                    num_segments=n).T
+        r = r * (1.0 - front) + moved
+
+    B = seeds.shape[0]
+    r_sum = r.sum(axis=1)                                 # (B,)
+    csum = jnp.cumsum(r, axis=1)
+    keys = jax.random.split(key, B)
+    deg_i = jnp.maximum(out_degree, 1).astype(jnp.int32)
+    out = pi
+    u = jax.vmap(lambda k: jax.random.uniform(k, (num_walks,)))(keys)
+    starts = jax.vmap(lambda c, uu, s: jnp.searchsorted(c, uu * s))(
+        csum, u, r_sum).astype(jnp.int32)
+    pos = jnp.clip(starts, 0, n - 1)
+    alive = jnp.ones((B, num_walks), bool)
+    for step_i in range(walk_steps):
+        ks = jax.vmap(lambda k, i=step_i: jax.random.fold_in(k, i))(keys)
+        stop = jax.vmap(lambda k: jax.random.uniform(k, (num_walks,)))(ks) < alpha
+        nxt_u = jax.vmap(lambda k: jax.random.randint(k, (num_walks,), 0,
+                                                      1 << 30))(ks)
+        nxt = edge_dst[out_offsets[pos] + (nxt_u % deg_i[pos])]
+        alive = jnp.logical_and(alive, jnp.logical_not(stop))
+        pos = jnp.where(alive, nxt, pos)
+    w = (r_sum / num_walks)[:, None] * jnp.ones((B, num_walks), seeds.dtype)
+    endpoint = jax.vmap(lambda p, ww: jax.ops.segment_sum(
+        ww, p, num_segments=n))(pos, w)
+    return out + endpoint
+
+
+def fora_step(edge_src, edge_dst, out_offsets, out_degree, seeds, key, *,
+              alpha: float, rmax: float, n: int, num_walks: int,
+              num_steps: int, max_push_iters: int = 512):
+    """Single-jit FORA step with a static walk budget — the unit the D&A
+    slot executor and the dry-run lower (one slot = one such step).
+
+    seeds: (B, n) one-hot residuals. Returns pi_hat (B, n).
+    """
+    from .forward_push import forward_push
+    from .random_walk import residual_walks
+
+    push = forward_push(edge_src, edge_dst, out_degree, seeds,
+                        alpha=alpha, rmax=rmax, n=n,
+                        max_iters=max_push_iters)
+    keys = jax.random.split(key, seeds.shape[0])
+    walk = jax.vmap(lambda r, k: residual_walks(
+        edge_dst, out_offsets, out_degree, r, k, alpha=alpha, n=n,
+        num_walks=num_walks, num_steps=num_steps))(push.r, keys)
+    return push.pi + walk

@@ -1,0 +1,137 @@
+"""Graph container for PPR computations on TPU.
+
+Three synchronized views of one directed graph (dangling nodes receive a
+self-loop at construction so both push and walk semantics are total):
+
+* **COO**  — ``edge_src``/``edge_dst`` sorted by src: drives the
+  ``segment_sum`` frontier relaxation in :mod:`repro.ppr.forward_push`
+  (the taxonomy's GNN message-passing regime — JAX has no CSR SpMV, so
+  scatter-by-edge IS the system here, per the assignment notes).
+* **CSR**  — ``out_offsets`` into ``edge_dst``: O(1) uniform out-neighbor
+  sampling for random walks (``edge_dst[offsets[v] + u % deg(v)]``).
+* **ELL**  — ``(n, k_max)`` padded neighbor table + validity mask: the
+  VMEM-tileable layout consumed by the Pallas ``ell_spmv`` kernel.
+
+All index arrays are int32 (TPU-native); n and m up to ~2^31.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Graph:
+    """Immutable directed graph in COO+CSR(+lazy ELL) form."""
+
+    n: int
+    edge_src: np.ndarray     # (m,) int32, sorted ascending
+    edge_dst: np.ndarray     # (m,) int32
+    directed: bool = True
+    name: str = "graph"
+
+    def __post_init__(self) -> None:
+        if self.n < 1:
+            raise ValueError("graph must have at least one node")
+        es = np.asarray(self.edge_src, dtype=np.int32)
+        ed = np.asarray(self.edge_dst, dtype=np.int32)
+        if es.shape != ed.shape or es.ndim != 1:
+            raise ValueError("edge_src/edge_dst must be equal-length 1-D")
+        if es.size and (es.min() < 0 or es.max() >= self.n
+                        or ed.min() < 0 or ed.max() >= self.n):
+            raise ValueError("edge endpoints out of range")
+        if es.size and np.any(np.diff(es) < 0):
+            order = np.argsort(es, kind="stable")
+            es, ed = es[order], ed[order]
+        object.__setattr__(self, "edge_src", es)
+        object.__setattr__(self, "edge_dst", ed)
+
+    # -- basic stats ---------------------------------------------------------
+    @property
+    def m(self) -> int:
+        return int(self.edge_src.size)
+
+    @cached_property
+    def out_degree(self) -> np.ndarray:
+        return np.bincount(self.edge_src, minlength=self.n).astype(np.int32)
+
+    @cached_property
+    def out_offsets(self) -> np.ndarray:
+        """CSR row offsets, shape (n+1,)."""
+        off = np.zeros(self.n + 1, dtype=np.int32)
+        np.cumsum(self.out_degree, out=off[1:])
+        return off
+
+    @cached_property
+    def max_out_degree(self) -> int:
+        return int(self.out_degree.max()) if self.n else 0
+
+    @property
+    def avg_out_degree(self) -> float:
+        return self.m / self.n
+
+    # -- ELL view (for the Pallas kernel) -------------------------------------
+    def ell(self, k_max: int | None = None,
+            pad_multiple: int = 8) -> tuple[np.ndarray, np.ndarray]:
+        """Padded neighbor table: (neighbors (n,K) int32, mask (n,K) bool).
+
+        K = max out-degree rounded up to ``pad_multiple`` (lane alignment).
+        Rows beyond their degree point at node 0 with mask False.
+        """
+        K = self.max_out_degree if k_max is None else k_max
+        if K < self.max_out_degree:
+            raise ValueError(f"k_max={K} < max out-degree {self.max_out_degree}"
+                             " — split high-degree rows before calling ell()")
+        K = max(pad_multiple, ((K + pad_multiple - 1) // pad_multiple) * pad_multiple)
+        neighbors = np.zeros((self.n, K), dtype=np.int32)
+        mask = np.zeros((self.n, K), dtype=bool)
+        deg = self.out_degree
+        off = self.out_offsets
+        # Vectorised ragged fill: position of each edge within its row.
+        pos = np.arange(self.m, dtype=np.int64) - off[self.edge_src].astype(np.int64)
+        neighbors[self.edge_src, pos] = self.edge_dst
+        mask[self.edge_src, pos] = True
+        del deg
+        return neighbors, mask
+
+    # -- constructors ----------------------------------------------------------
+    @staticmethod
+    def from_edges(n: int, src: np.ndarray, dst: np.ndarray, *,
+                   directed: bool = True, add_dangling_self_loops: bool = True,
+                   dedup: bool = True, name: str = "graph") -> "Graph":
+        """Build a graph, symmetrising if undirected, fixing dangling nodes.
+
+        Dangling nodes (out-degree 0) get a self-loop so that the random-walk
+        transition is total and forward push conserves mass — the same
+        adjacency is used by the power-iteration oracle, so reproduction
+        comparisons are apples-to-apples (DESIGN.md §3 deviation list).
+        """
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        keep = src != dst  # drop self-loops; re-added below only for dangling
+        src, dst = src[keep], dst[keep]
+        if not directed:
+            src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        if dedup and src.size:
+            key = src * n + dst
+            _, idx = np.unique(key, return_index=True)
+            src, dst = src[idx], dst[idx]
+        if add_dangling_self_loops:
+            deg = np.bincount(src, minlength=n)
+            dangling = np.flatnonzero(deg == 0)
+            if dangling.size:
+                src = np.concatenate([src, dangling])
+                dst = np.concatenate([dst, dangling])
+        order = np.argsort(src, kind="stable")
+        return Graph(n=n, edge_src=src[order].astype(np.int32),
+                     edge_dst=dst[order].astype(np.int32),
+                     directed=directed, name=name)
+
+    def summary(self) -> dict:
+        return {"name": self.name, "n": self.n, "m": self.m,
+                "type": "Directed" if self.directed else "Undirected",
+                "avg_out_degree": round(self.avg_out_degree, 2),
+                "max_out_degree": self.max_out_degree}

@@ -1,0 +1,44 @@
+"""Pure Monte-Carlo PPR baseline (the family FORA improves upon).
+
+Runs W alpha-terminated walks from the source; pi_hat(t) = fraction ending at
+t. Chernoff-style walk count for the same (eps, delta, p_f) guarantee:
+
+    W >= (2*eps/3 + 2) * ln(2/p_f) / (eps^2 * delta)
+
+i.e. FORA's omega with r_sum = 1 — push reduces the budget by the factor
+r_sum << 1, which is the speedup the paper's workload inherits.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+from .fora import ForaParams
+from .graph import Graph
+from .random_walk import source_walks, walk_length_for_tail
+
+
+def monte_carlo_ppr(graph: Graph, sources: np.ndarray,
+                    params: ForaParams = ForaParams(),
+                    key: jax.Array | None = None,
+                    num_walks: int | None = None) -> np.ndarray:
+    rp = params.resolve(graph)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    sources = np.asarray(sources, dtype=np.int32).reshape(-1)
+    walks = num_walks if num_walks is not None else \
+        int(min(rp.max_walks, math.ceil(rp.omega)))
+    steps = walk_length_for_tail(rp.alpha, rp.walk_tail)
+    keys = jax.random.split(key, sources.size)
+    out = np.empty((sources.size, graph.n), dtype=np.float32)
+    edge_dst = jax.numpy.asarray(graph.edge_dst)
+    offsets = jax.numpy.asarray(graph.out_offsets)
+    degree = jax.numpy.asarray(graph.out_degree)
+    for i, (s, k) in enumerate(zip(sources, keys)):
+        out[i] = np.asarray(source_walks(
+            edge_dst, offsets, degree, int(s), k, alpha=rp.alpha,
+            n=graph.n, num_walks=walks, num_steps=steps))
+    return out

@@ -1,0 +1,123 @@
+"""Vectorised alpha-terminated random walks (FORA phase 2), TPU-native.
+
+CPU FORA runs ceil(r(v) * omega) walks per residual node with geometric
+lengths. TPU adaptation (DESIGN.md deviation 3):
+
+* **Starts**: W walker start nodes are sampled proportional to the residual
+  via inverse-CDF (cumsum + searchsorted) — identical in distribution to
+  FORA's per-node quota in expectation, and W is static for jit.
+* **Steps**: walks advance in lockstep for L unrolled steps; termination is a
+  Bernoulli(alpha) mask per step (geometric length), dead lanes frozen.
+  L = ceil(ln(tail)/ln(1-alpha)) bounds the truncation mass by ``tail``.
+* **Transition**: uniform out-neighbor via CSR gather
+  ``edge_dst[offsets[v] + u % deg(v)]`` — one ``jnp.take`` per step, no ELL
+  padding needed, no per-step collectives in the sharded path.
+
+Estimate: endpoints accumulate weight r_sum/W via segment_sum, giving the
+unbiased FORA estimator  pi_hat = pi_push + sum_v r(v) * (MC endpoint dist).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+
+
+def walk_length_for_tail(alpha: float, tail: float = 1e-4) -> int:
+    """Smallest L with (1-alpha)^L <= tail (truncation mass bound)."""
+    if not 0.0 < alpha < 1.0:
+        raise ValueError("alpha in (0,1)")
+    return int(np.ceil(np.log(tail) / np.log(1.0 - alpha)))
+
+
+class WalkResult(NamedTuple):
+    endpoint_mass: jax.Array   # (B, n) estimated sum_v r(v)*pi(v, .)
+    walks: int                 # W actually used (static)
+
+
+@partial(jax.jit, static_argnames=("n", "num_walks", "num_steps"))
+def residual_walks(edge_dst: jax.Array, out_offsets: jax.Array,
+                   out_degree: jax.Array, residual: jax.Array,
+                   key: jax.Array, *, alpha: float, n: int,
+                   num_walks: int, num_steps: int) -> jax.Array:
+    """Monte-Carlo estimate of sum_v r(v) * pi(v, t) for one batch row.
+
+    residual: (n,) non-negative. Returns (n,) endpoint mass.
+    """
+    r_sum = residual.sum()
+    csum = jnp.cumsum(residual)
+    k_start, k_walk = jax.random.split(key)
+    # inverse-CDF start sampling proportional to residual
+    u = jax.random.uniform(k_start, (num_walks,)) * r_sum
+    starts = jnp.searchsorted(csum, u, side="left").astype(jnp.int32)
+    starts = jnp.clip(starts, 0, n - 1)
+
+    deg = jnp.maximum(out_degree, 1).astype(jnp.int32)
+
+    def step(carry, step_key):
+        pos, alive = carry
+        k_stop, k_next = jax.random.split(step_key)
+        stop = jax.random.uniform(k_stop, (num_walks,)) < alpha
+        # choose uniform out-neighbor for surviving walkers
+        u_next = jax.random.randint(k_next, (num_walks,), 0, 1 << 30)
+        nbr_idx = out_offsets[pos] + (u_next % deg[pos])
+        nxt = edge_dst[nbr_idx]
+        new_alive = jnp.logical_and(alive, jnp.logical_not(stop))
+        new_pos = jnp.where(new_alive, nxt, pos)
+        return (new_pos, new_alive), None
+
+    keys = jax.random.split(k_walk, num_steps)
+    (endpos, _), _ = jax.lax.scan(step, (starts, jnp.ones(num_walks, bool)), keys)
+    weight = r_sum / num_walks
+    return jax.ops.segment_sum(
+        jnp.full((num_walks,), weight, residual.dtype), endpos,
+        num_segments=n)
+
+
+def residual_walks_batched(graph: Graph, residual: np.ndarray | jax.Array,
+                           key: jax.Array, *, alpha: float,
+                           num_walks: int, tail: float = 1e-4) -> WalkResult:
+    """vmap over the batch axis of residual (B, n)."""
+    residual = jnp.asarray(residual)
+    if residual.ndim == 1:
+        residual = residual[None, :]
+    steps = walk_length_for_tail(alpha, tail)
+    keys = jax.random.split(key, residual.shape[0])
+    fn = jax.vmap(lambda r, k: residual_walks(
+        jnp.asarray(graph.edge_dst), jnp.asarray(graph.out_offsets),
+        jnp.asarray(graph.out_degree), r, k, alpha=alpha, n=graph.n,
+        num_walks=num_walks, num_steps=steps))
+    return WalkResult(endpoint_mass=fn(residual, keys), walks=num_walks)
+
+
+@partial(jax.jit, static_argnames=("n", "num_walks", "num_steps"))
+def source_walks(edge_dst: jax.Array, out_offsets: jax.Array,
+                 out_degree: jax.Array, source: jax.Array, key: jax.Array,
+                 *, alpha: float, n: int, num_walks: int,
+                 num_steps: int) -> jax.Array:
+    """Pure Monte-Carlo PPR from a single source (baseline engine)."""
+    starts = jnp.full((num_walks,), source, jnp.int32)
+    residual = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
+    del residual  # starts fixed; reuse the step loop below
+    deg = jnp.maximum(out_degree, 1).astype(jnp.int32)
+
+    def step(carry, step_key):
+        pos, alive = carry
+        k_stop, k_next = jax.random.split(step_key)
+        stop = jax.random.uniform(k_stop, (num_walks,)) < alpha
+        u_next = jax.random.randint(k_next, (num_walks,), 0, 1 << 30)
+        nxt = edge_dst[out_offsets[pos] + (u_next % deg[pos])]
+        new_alive = jnp.logical_and(alive, jnp.logical_not(stop))
+        return (jnp.where(new_alive, nxt, pos), new_alive), None
+
+    keys = jax.random.split(key, num_steps)
+    (endpos, _), _ = jax.lax.scan(step, (starts, jnp.ones(num_walks, bool)), keys)
+    return jax.ops.segment_sum(
+        jnp.full((num_walks,), 1.0 / num_walks, jnp.float32), endpos,
+        num_segments=n)

@@ -1,0 +1,150 @@
+"""Distributed-plumbing tests: HLO collective parser, roofline arithmetic,
+logical-axis context, sharding rules, input-spec divisibility."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import REGISTRY, get_arch
+from repro.distributed.ctx import constrain, resolve_spec, shard_ctx
+from repro.distributed.hlo_analysis import (CollectiveStats, Roofline,
+                                            collective_bytes)
+from repro.distributed.sharding import (batch_axes, param_specs, spec_for,
+                                        zero1_spec)
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = bf16[16,4096]{1,0} parameter(0)
+  %ar = bf16[16,4096]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = f32[256,128]{1,0} all-gather(%p0), dimensions={0}
+  %rs = f32[16,128]{1,0} reduce-scatter(%ag), dimensions={0}
+  %a2a = s32[64]{0} all-to-all(%p0), dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %dot = f32[16,16]{1,0} dot(%ag, %rs)
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    stats = collective_bytes(HLO_SAMPLE)
+    assert stats.count_by_kind == {"all-reduce": 1, "all-gather": 1,
+                                   "reduce-scatter": 1, "all-to-all": 1,
+                                   "collective-permute": 1}
+    assert stats.bytes_by_kind["all-reduce"] == 16 * 4096 * 2
+    assert stats.bytes_by_kind["all-gather"] == 256 * 128 * 4
+    assert stats.bytes_by_kind["all-to-all"] == 64 * 4
+    # weighted: AR counts twice
+    assert stats.weighted_bytes == stats.total_bytes + 16 * 4096 * 2
+
+
+def test_collective_parser_ignores_plain_ops():
+    stats = collective_bytes("%d = f32[4,4]{1,0} dot(%a, %b)\n")
+    assert stats.total_bytes == 0
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(flops=197e12 * 256, hbm_bytes=819e9 * 256 * 2,
+                 coll_bytes=50e9 * 256 * 0.5, chips=256,
+                 peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+                 model_flops=197e12 * 256 / 2, model_bytes=819e9 * 256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.dominant == "memory"
+    assert r.memory_model_s == pytest.approx(1.0)
+    assert r.dominant_fused in ("compute", "memory")
+    assert r.mfu == pytest.approx(0.25)          # model/2 over 2s memory step
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_ctx_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", None) is x
+
+
+def test_ctx_divisibility_guard():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with shard_ctx(mesh):
+        spec = resolve_spec("batch", "model")
+        assert spec == P(("data",), "model")
+        # non-divisible dims silently degrade to replicated (no crash)
+        y = constrain(jnp.ones((3, 5)), "batch", "model")
+        assert y.shape == (3, 5)
+
+
+def test_lm_param_rules():
+    arch = get_arch("qwen1.5-32b")
+    specs = arch.param_partition_specs()
+    assert specs["embed"] == P("model", None)
+    assert specs["lm_head"] == P(None, "model")
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert specs["layers"]["ffn"]["w_down"] == P(None, "model", None)
+
+
+def test_moe_param_rules_divisibility():
+    # moonshot: 64 experts % 16 == 0 -> expert-sharded
+    m = get_arch("moonshot-v1-16b-a3b").param_partition_specs()
+    assert m["layers"]["ffn"]["w_gate"] == P(None, "model", None, None)
+    # qwen2-moe: 60 experts % 16 != 0 -> TP over the expert FFN width
+    q = get_arch("qwen2-moe-a2.7b").param_partition_specs()
+    assert q["layers"]["ffn"]["w_gate"] == P(None, None, None, "model")
+    assert q["layers"]["ffn"]["w_down"] == P(None, None, "model", None)
+
+
+def test_zero1_spec_adds_data_axis():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    fm = FakeMesh()
+    assert zero1_spec(P(None, "model"), (64, 32), fm) == P("data", "model")
+    assert zero1_spec(P("model", None), (16, 33), fm) == P("model", None)
+    del mesh
+
+
+def test_every_cell_has_divisible_input_specs():
+    """The invariant the dry-run relies on: every input dim with an explicit
+    mesh axis must be divisible by that axis product (on both meshes)."""
+    for mesh_shape, names in (((16, 16), ("data", "model")),
+                              ((2, 16, 16), ("pod", "data", "model"))):
+        sizes = dict(zip(names, mesh_shape))
+        for aid, arch in REGISTRY.items():
+            for sid in arch.shape_ids():
+                if arch.skip_reason(sid):
+                    continue
+
+                class MeshLike:
+                    shape = sizes
+                    axis_names = names
+                specs = arch.input_partition_specs(MeshLike(), sid)
+                inputs = arch.abstract_inputs(sid)
+                for name, spec in specs.items():
+                    shape = inputs[name].shape
+                    for dim, part in zip(shape, tuple(spec)):
+                        if part is None:
+                            continue
+                        axes = part if isinstance(part, tuple) else (part,)
+                        extent = int(np.prod([sizes[a] for a in axes]))
+                        assert dim % extent == 0, \
+                            (aid, sid, name, shape, spec)
+
+
+def test_batch_axes_fuse_pod():
+    class M1:
+        axis_names = ("data", "model")
+
+    class M2:
+        axis_names = ("pod", "data", "model")
+    assert batch_axes(M1()) == ("data",)
+    assert batch_axes(M2()) == ("pod", "data")
+
+
+def test_spec_for_fallback_replicates():
+    assert spec_for("unknown/path", (3, 3), [("nope$", lambda s: P("model"))]) \
+        == P()

@@ -1,0 +1,244 @@
+"""Per-architecture smoke tests (reduced configs, real arrays, one step) +
+model-level unit tests (attention oracle, MoE dispatch, decode consistency)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_arch
+from repro.models.common import flash_attention_jnp, mha_reference
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.transformer import (LMConfig, decode_step, init, loss_fn,
+                                      make_kv_cache, prefill_step)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# per-arch smoke: every assigned architecture instantiates reduced and runs
+# one forward/train step with finite outputs (assignment requirement)
+
+
+@pytest.mark.parametrize("arch_id", sorted(REGISTRY))
+def test_arch_smoke(arch_id):
+    out = get_arch(arch_id).smoke_run(KEY)
+    for k, v in out.items():
+        assert math.isfinite(v), f"{arch_id}.{k} not finite: {v}"
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def test_flash_attention_jnp_vs_naive():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 33, 4, 16))
+    k = jax.random.normal(ks[1], (2, 65, 2, 16))
+    v = jax.random.normal(ks[2], (2, 65, 2, 16))
+    out = flash_attention_jnp(q, k, v, causal=True, block_kv=16, q_offset=32)
+    expect = mha_reference(q, k, v, causal=True, q_offset=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_flash_attention_unroll_equals_scan():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 16, 2, 8))
+    k = jax.random.normal(ks[1], (1, 48, 2, 8))
+    v = jax.random.normal(ks[2], (1, 48, 2, 8))
+    a = flash_attention_jnp(q, k, v, causal=False, block_kv=16)
+    b = flash_attention_jnp(q, k, v, causal=False, block_kv=16, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# transformer
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    d_ff=96, vocab=256, qkv_bias=True, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_cfg):
+    return init(KEY, tiny_cfg)
+
+
+def test_transformer_train_grad_finite(tiny_cfg, tiny_params):
+    toks = jax.random.randint(KEY, (2, 24), 0, tiny_cfg.vocab)
+    loss, grads = jax.value_and_grad(loss_fn)(tiny_params, tiny_cfg, toks, toks)
+    assert math.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+
+
+def test_prefill_then_decode_matches_full_prefill(tiny_cfg, tiny_params):
+    toks = jax.random.randint(KEY, (2, 16), 0, tiny_cfg.vocab)
+    logits, kv = prefill_step(tiny_params, tiny_cfg, toks)
+    cache = make_kv_cache(tiny_cfg, 2, 24)
+    cache = jax.lax.dynamic_update_slice(cache, kv, (0,) * 6)
+    dec, _ = decode_step(tiny_params, tiny_cfg, toks[:, :1], cache,
+                         jnp.int32(16))
+    full, _ = prefill_step(tiny_params, tiny_cfg,
+                           jnp.concatenate([toks, toks[:, :1]], axis=1))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-3)
+
+
+def test_scan_vs_unrolled_layers(tiny_cfg, tiny_params):
+    import dataclasses
+    toks = jax.random.randint(KEY, (2, 16), 0, tiny_cfg.vocab)
+    l_scan = loss_fn(tiny_params, tiny_cfg, toks, toks)
+    cfg_u = dataclasses.replace(tiny_cfg, scan_layers=False, unroll_attn=True)
+    l_unroll = loss_fn(tiny_params, cfg_u, toks, toks)
+    assert float(l_scan) == pytest.approx(float(l_unroll), abs=1e-5)
+
+
+def test_param_count_formulas():
+    arch = get_arch("qwen1.5-32b")
+    # qwen1.5-32B is ~32.5B params; formula must land in that ballpark
+    assert 30e9 < arch.cfg.param_count < 36e9
+    moe = get_arch("moonshot-v1-16b-a3b")
+    assert moe.cfg.active_param_count < 0.25 * moe.cfg.param_count
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+
+
+def test_moe_capacity_dispatch_weights_sum():
+    cfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                    capacity_factor=4.0)    # capacity high: nothing dropped
+    params = moe_init(KEY, 32, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, 32))
+    y, aux = moe_apply(params, cfg, x)
+    assert y.shape == x.shape
+    assert float(aux) > 0.0
+    # aux loss of a uniform router ~ 1.0 (E * sum f*p with f=p=1/E)
+    assert 0.5 < float(aux) < 2.0
+
+
+def test_moe_drops_overflow_at_tiny_capacity():
+    cfg_hi = MoEConfig(num_experts=2, top_k=1, d_ff_expert=8,
+                       capacity_factor=8.0)
+    cfg_lo = MoEConfig(num_experts=2, top_k=1, d_ff_expert=8,
+                       capacity_factor=0.05)
+    params = moe_init(KEY, 16, cfg_hi, jnp.float32)
+    x = jax.random.normal(KEY, (1, 64, 16))
+    y_hi, _ = moe_apply(params, cfg_hi, x)
+    y_lo, _ = moe_apply(params, cfg_lo, x)
+    # tiny capacity zeroes most contributions -> outputs differ materially
+    assert float(jnp.abs(y_hi - y_lo).max()) > 1e-3
+
+
+def test_moe_grad_flows_to_router():
+    cfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16)
+    params = moe_init(KEY, 32, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, 32))
+
+    def f(p):
+        y, aux = moe_apply(p, cfg, x)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g = jax.grad(f)(params)
+    assert float(jnp.abs(g["router"]).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# §Perf variant equivalence (optimizations must not change the math)
+
+
+def test_moe_local_select_equals_gather_single_shard():
+    import jax
+    from repro.distributed.ctx import shard_ctx
+    cfg_g = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                      capacity_factor=8.0, ep_mode="gather")
+    cfg_l = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                      capacity_factor=8.0, ep_mode="local_select")
+    params = moe_init(KEY, 32, cfg_g, jnp.float32)
+    x = jax.random.normal(KEY, (4, 8, 32))
+    y_g, aux_g = moe_apply(params, cfg_g, x)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    def f(p, xx):
+        with shard_ctx(mesh):
+            return moe_apply(p, cfg_l, xx)
+
+    y_l, aux_l = jax.jit(f)(params, x)
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_l), atol=1e-5)
+    assert float(aux_g) == pytest.approx(float(aux_l), abs=1e-5)
+
+
+def test_din_factored_retrieval_exact():
+    from repro.models.recsys.din import DINConfig, init as din_init, \
+        score_candidates
+    cfg = DINConfig(n_items=500, n_cats=20, embed_dim=6, seq_len=12,
+                    attn_mlp=(16, 8), mlp=(24, 12))
+    p = din_init(KEY, cfg)
+    ks = jax.random.split(KEY, 5)
+    batch = {"hist_items": jax.random.randint(ks[0], (1, 12), 0, 500),
+             "hist_cats": jax.random.randint(ks[1], (1, 12), 0, 20),
+             "hist_mask": jax.random.bernoulli(ks[2], 0.8, (1, 12)),
+             "cand_items": jax.random.randint(ks[3], (300,), 0, 500),
+             "cand_cats": jax.random.randint(ks[4], (300,), 0, 20)}
+    a = score_candidates(p, cfg, batch, block=64)
+    b = score_candidates(p, cfg, batch, block=64, factored=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_lm_perf_knobs_preserve_loss():
+    import dataclasses
+    cfg = LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                   d_ff=96, vocab=128, dtype="float32")
+    params = init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    base = float(loss_fn(params, cfg, toks, toks))
+    for kw in (dict(seq_shard_residual=True),
+               dict(remat_policy="save_block_io"),
+               dict(attn_tp=False)):
+        v = float(loss_fn(params, dataclasses.replace(cfg, **kw), toks, toks))
+        assert v == pytest.approx(base, abs=1e-5), kw
+
+
+def test_grad_accum_step_matches_full_batch():
+    from repro.configs import get_arch
+    from repro.configs.base import LMArch
+    from repro.optim.adamw import adamw_init
+    base = get_arch("stablelm-1.6b")
+    cfg = base.smoke_cfg
+    a1 = LMArch("x", cfg, cfg, base.opt, grad_accum=1)
+    a4 = LMArch("x", cfg, cfg, base.opt, grad_accum=4)
+    params = init(KEY, cfg)
+    opt = adamw_init(params)
+    batch = {"tokens": jax.random.randint(KEY, (8, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(KEY, (8, 16), 0, cfg.vocab)}
+    s1 = a1.build_step("train_4k")
+    s4 = a4.build_step("train_4k")
+    p1, _, l1 = s1(params, opt, batch)
+    p4, _, l4 = s4(params, opt, batch)
+    assert float(l1) == pytest.approx(float(l4), rel=2e-3)
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p1, p4)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_gcn_owner_computes_equals_baseline_single_shard():
+    from repro.models.gnn import gcn
+    from repro.models.gnn.common import random_graph_batch
+    cfg = gcn.GCNConfig(n_layers=2, d_hidden=8, d_in=16, n_classes=4)
+    p = gcn.init(KEY, cfg)
+    b = random_graph_batch(KEY, 64, 256, 16, n_classes=4)
+    base = float(gcn.loss_fn(p, cfg, b))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    oc = float(jax.jit(lambda pp: gcn.loss_fn_owner_computes(
+        pp, cfg, b, mesh))(p))
+    # owner-computes uses in-degree-only sym normalisation (the distributed
+    # contract); on random graphs in/out degrees differ slightly, so compare
+    # loosely — the structural check is that both train toward the labels
+    assert abs(base - oc) / base < 0.35
+    g = jax.grad(lambda pp: gcn.loss_fn_owner_computes(pp, cfg, b, mesh))(p)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))

@@ -1,0 +1,130 @@
+"""PPR engine tests: FORA vs the power-iteration oracle, invariants,
+dataset generators, graph container."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ppr import (ForaParams, fora, forward_push_np, load,
+                       monte_carlo_ppr, ppr_power_iteration,
+                       small_test_graph)
+from repro.ppr.fora import fora_step
+from repro.ppr.graph import Graph
+from repro.ppr.random_walk import walk_length_for_tail
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return small_test_graph(n=200, avg_deg=8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def exact(graph):
+    return ppr_power_iteration(graph, np.array([0, 7, 42]), alpha=0.2)
+
+
+def test_power_iteration_is_distribution(graph, exact):
+    assert np.allclose(exact.sum(axis=1), 1.0, atol=1e-5)
+    assert (exact >= 0).all()
+
+
+def test_fora_meets_guarantee(graph, exact):
+    """|pi_hat - pi| <= eps*pi for pi >= delta (w.h.p.) — the FORA contract
+    the paper's workload relies on."""
+    params = ForaParams(alpha=0.2, epsilon=0.5)
+    res = fora(graph, np.array([0, 7, 42]), params, jax.random.PRNGKey(0))
+    delta = 1.0 / graph.n
+    mask = exact >= delta
+    rel = np.abs(res.pi - exact)[mask] / exact[mask]
+    assert rel.max() < 0.5, f"rel err {rel.max()} exceeds eps"
+    assert np.allclose(res.pi.sum(axis=1), 1.0, atol=1e-3)
+
+
+def test_fora_push_invariant(graph):
+    """After push: every residual satisfies r(v) <= rmax * deg(v)."""
+    params = ForaParams(alpha=0.2, epsilon=0.5).resolve(graph)
+    push = forward_push_np(graph, np.array([3]), alpha=params.alpha,
+                           rmax=params.rmax)
+    r = np.asarray(push.r)[0]
+    bound = params.rmax * np.maximum(graph.out_degree, 1.0)
+    assert (r <= bound + 1e-6).all()
+    # mass conservation: pi + r sums to 1
+    total = np.asarray(push.pi)[0].sum() + r.sum()
+    assert total == pytest.approx(1.0, abs=1e-4)
+
+
+def test_mc_baseline_worse_than_fora_at_equal_budget(graph, exact):
+    """FORA's push reduces required walks; at FORA's own walk count the pure
+    MC estimate must have higher error on average."""
+    params = ForaParams(alpha=0.2, epsilon=0.5)
+    res = fora(graph, np.array([0]), params, jax.random.PRNGKey(1))
+    mc = monte_carlo_ppr(graph, np.array([0]), params,
+                         jax.random.PRNGKey(1), num_walks=res.walks_used)
+    delta = 1.0 / graph.n
+    mask = exact[0] >= delta
+    err_fora = np.abs(res.pi[0] - exact[0])[mask].mean()
+    err_mc = np.abs(mc[0] - exact[0])[mask].mean()
+    assert err_fora < err_mc
+
+
+def test_fora_step_jit_single_shot(graph):
+    params = ForaParams(alpha=0.2, epsilon=0.5).resolve(graph)
+    seeds = np.zeros((2, graph.n), np.float32)
+    seeds[[0, 1], [5, 9]] = 1.0
+    pi = fora_step(jnp.asarray(graph.edge_src), jnp.asarray(graph.edge_dst),
+                   jnp.asarray(graph.out_offsets),
+                   jnp.asarray(graph.out_degree), jnp.asarray(seeds),
+                   jax.random.PRNGKey(0), alpha=0.2, rmax=params.rmax,
+                   n=graph.n, num_walks=4096,
+                   num_steps=walk_length_for_tail(0.2))
+    out = np.asarray(pi)
+    assert out.shape == (2, graph.n)
+    assert np.allclose(out.sum(axis=1), 1.0, atol=1e-3)
+
+
+@given(st.integers(16, 200), st.floats(2.0, 10.0), st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_graph_container_invariants(n, avg_deg, seed):
+    g = small_test_graph(n=n, avg_deg=avg_deg, seed=seed)
+    assert g.out_degree.sum() == g.m
+    assert (g.out_degree >= 1).all()          # dangling fixed by self-loop
+    assert g.out_offsets[-1] == g.m
+    # CSR slices agree with COO
+    for v in (0, n // 2, n - 1):
+        lo, hi = g.out_offsets[v], g.out_offsets[v + 1]
+        assert (g.edge_src[lo:hi] == v).all()
+
+
+def test_ell_view_roundtrip():
+    g = small_test_graph(n=64, avg_deg=4, seed=3)
+    nbrs, mask = g.ell()
+    assert mask.sum() == g.m
+    for v in range(g.n):
+        lo, hi = g.out_offsets[v], g.out_offsets[v + 1]
+        assert set(nbrs[v][mask[v]]) == set(g.edge_dst[lo:hi])
+
+
+def test_datasets_match_direction_and_scale():
+    g = load("web-stanford", scale=512)
+    assert g.directed
+    g2 = load("dblp", scale=512)
+    assert not g2.directed
+    # symmetric edges present for undirected
+    s, d = g2.edge_src[0], g2.edge_dst[0]
+    idx = np.flatnonzero((g2.edge_src == d) & (g2.edge_dst == s))
+    assert idx.size >= 1
+
+
+def test_walk_length_tail_bound():
+    L = walk_length_for_tail(0.2, 1e-4)
+    assert (1 - 0.2) ** L <= 1e-4
+    assert (1 - 0.2) ** (L - 1) > 1e-4
+
+
+def test_graph_rejects_bad_edges():
+    with pytest.raises(ValueError):
+        Graph(n=4, edge_src=np.array([0, 9]), edge_dst=np.array([1, 2]))

@@ -1,0 +1,211 @@
+"""Substrate tests: optimizer, checkpoint roundtrip, data pipelines,
+neighbor sampler, gradient compression, fault tolerance."""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.store import (AsyncCheckpointer, latest_step, restore,
+                                    save)
+from repro.core.allocator import DeviceAllocator, StragglerMonitor
+from repro.core.estimator import RuntimeStats
+from repro.data.neighbor_sampler import sample_subgraph
+from repro.data.pipeline import Prefetcher, RecsysStream, TokenStream
+from repro.ft.elastic import (ElasticController, FailureInjector,
+                              HeartbeatMonitor, run_with_straggler_mitigation)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compress import compress_grads, init_state
+from repro.ppr import small_test_graph
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+
+
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(120):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_adamw_clips_global_norm():
+    cfg = AdamWConfig(lr=1e-3, grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    grads = {"w": jnp.full(4, 100.0)}
+    _, _, metrics = adamw_update(cfg, params, grads, state)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12).reshape(3, 4).astype(jnp.float32),
+            "b": {"c": jnp.ones(5, jnp.bfloat16)}}
+    save(tmp_path, 7, tree)
+    step, back = restore(tmp_path, None, tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    assert back["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    for s in (1, 2, 3, 4, 5):
+        save(tmp_path, s, tree, keep=2)
+    assert latest_step(tmp_path) == 5
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    tree = {"x": jnp.arange(4)}
+    ck.save(3, tree)
+    ck.wait()
+    step, back = restore(tmp_path, None, tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(back["x"]), np.arange(4))
+
+
+def test_restore_validates_shapes(tmp_path):
+    save(tmp_path, 1, {"x": jnp.zeros(4)})
+    with pytest.raises(ValueError):
+        restore(tmp_path, 1, {"x": jnp.zeros(5)})
+
+
+# ---------------------------------------------------------------------------
+# data pipelines
+
+
+def test_token_stream_sharding_and_shift():
+    a = next(iter(TokenStream(vocab=100, seq_len=16, batch=8, shard=0,
+                              num_shards=2)))
+    assert a["tokens"].shape == (4, 16)
+    assert (a["tokens"] < 100).all()
+    b = next(iter(TokenStream(vocab=100, seq_len=16, batch=8, shard=1,
+                              num_shards=2)))
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_recsys_stream_label_signal():
+    batch = next(iter(RecsysStream(n_items=1000, n_cats=20, seq_len=12,
+                                   batch=4096)))
+    assert set(np.unique(batch["label"])) <= {0.0, 1.0}
+    assert 0.05 < batch["label"].mean() < 0.95
+
+
+def test_prefetcher_preserves_order():
+    it = Prefetcher(iter(range(10)))
+    assert list(itertools.islice(it, 10)) == list(range(10))
+
+
+def test_neighbor_sampler_subgraph_validity():
+    g = small_test_graph(n=500, avg_deg=6, seed=4)
+    rng = np.random.default_rng(0)
+    sub = sample_subgraph(g, rng.integers(0, g.n, 32), (5, 3), rng,
+                          pad_nodes=2048, pad_edges=4096)
+    n_valid = int(sub.node_mask.sum())
+    m_valid = int(sub.edge_mask.sum())
+    assert 32 <= n_valid <= 2048
+    assert m_valid <= 32 * 5 + 32 * 5 * 3
+    # edges reference valid local ids only
+    ei = sub.edge_index[:, sub.edge_mask]
+    assert ei.max(initial=0) < n_valid
+    # every sampled message edge is a REVERSED graph edge: GraphSAGE pulls
+    # from out-neighbors, so msg (nbr -> seed) mirrors graph (seed -> nbr)
+    glob_src = sub.nodes[ei[0]]
+    glob_dst = sub.nodes[ei[1]]
+    edge_set = set(zip(g.edge_src.tolist(), g.edge_dst.tolist()))
+    for s, d in zip(glob_src[:50].tolist(), glob_dst[:50].tolist()):
+        assert (d, s) in edge_set
+
+
+# ---------------------------------------------------------------------------
+# compression
+
+
+def test_compress_error_feedback_reduces_bias():
+    params = {"w": jnp.zeros(64)}
+    state = init_state(params)
+    true_g = jax.random.normal(KEY, (64,)) * 1e-3
+    acc_plain = jnp.zeros(64)
+    acc_comp = jnp.zeros(64)
+    for i in range(50):
+        g = {"w": true_g}
+        gq, state = compress_grads(g, state, jax.random.fold_in(KEY, i))
+        acc_comp = acc_comp + gq["w"]
+        acc_plain = acc_plain + true_g
+    # error feedback keeps the accumulated compressed grads close to truth
+    rel = float(jnp.linalg.norm(acc_comp - acc_plain)
+                / jnp.linalg.norm(acc_plain))
+    assert rel < 0.05
+
+
+@given(st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_compress_is_bounded(seed):
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (32,))}
+    state = init_state(g)
+    gq, _ = compress_grads(g, state, jax.random.PRNGKey(seed + 1))
+    # int8 round-trip error bounded by scale (max/127 per element + rounding)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.abs(gq["w"] - g["w"]).max()) <= scale * 1.01
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+
+
+def test_elastic_controller_rescale_flow():
+    alloc = DeviceAllocator(devices=list(range(16)))
+    events = []
+    ctl = ElasticController(
+        allocator=alloc, injector=FailureInjector({5: [0, 1]}),
+        on_rescale=lambda h: events.append(h))
+    assert not ctl.tick(4)
+    stats = RuntimeStats(np.full(4, 0.1))
+    assert ctl.tick(5, stats=stats, queries_left=100, deadline_left=10.0)
+    assert events == [14]
+    assert ctl.rescale_events[0]["readmission"]["cores"] >= 1
+
+
+def test_readmission_extends_deadline():
+    alloc = DeviceAllocator(devices=list(range(4)), spares_fraction=0.0)
+    stats = RuntimeStats(np.full(8, 1.0))
+    adm = alloc.readmit(num_queries_left=100, deadline_left=1.0, stats=stats)
+    assert adm.extended
+    assert adm.deadline >= 100 * 1.0 / 4
+
+
+def test_straggler_mitigation_cuts_makespan():
+    mon = StragglerMonitor(t_hat=1.0, scaling_factor=0.8)
+    lanes = np.array([0.5, 0.6, 9.0, 0.4])
+    out = run_with_straggler_mitigation(lanes, mon, spares=1,
+                                        reissue_times=np.full(4, 0.5))
+    assert out["reissued"] == [2]
+    assert out["makespan_after"] < out["makespan_before"]
+    assert out["makespan_after"] == pytest.approx(mon.threshold + 0.5)
+
+
+def test_heartbeat_monitor():
+    t = [0.0]
+    mon = HeartbeatMonitor(3, timeout=5.0, clock=lambda: t[0])
+    t[0] = 4.0
+    mon.beat(0)
+    t[0] = 7.0
+    assert mon.dead() == [1, 2]

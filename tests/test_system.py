@@ -1,0 +1,133 @@
+"""End-to-end behaviour tests: the paper's full pipeline on the real JAX
+FORA engine, plus the generic serving path and mini training convergence."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (InfeasibleDeadline, dna_real, fraction_sample_size,
+                        lemma2_hoeffding_bound, required_cores)
+from repro.ppr import ForaExecutor, ForaParams, PprWorkload, synthesize
+from repro.ppr.datasets import TABLE1
+
+
+@pytest.fixture(scope="module")
+def web_graph():
+    # 1/1024 web-stanford stand-in: fast enough for CI, real FORA underneath
+    return synthesize(TABLE1["web-stanford"], scale=1024, seed=0)
+
+
+def test_paper_pipeline_end_to_end(web_graph):
+    """The paper's experiment in miniature: measured FORA times -> D&A_REAL
+    vs Lemma-2; D&A_REAL must accept, finish in time and not exceed the
+    theoretical baseline."""
+    X, T = 64, 30.0
+    workload = PprWorkload(graph=web_graph, num_queries=X, seed=0)
+    executor = ForaExecutor(workload=workload, params=ForaParams(epsilon=0.5))
+    s = fraction_sample_size(X, 0.05)
+    res = dna_real(X, T, executor, max_cores=64, sample_size=s,
+                   scaling_factor=1.0)
+    assert res.accepted
+    assert res.completion_time <= T
+    assert res.cores <= res.bounds.lemma2_cores
+    assert res.plan.num_queries == X - s
+    # every remaining query executed exactly once
+    assert len(res.execution.per_query_times) == X - s
+
+
+def test_paper_reduction_band(web_graph):
+    """Reduction vs Lemma-2 should be non-negative and inside a sane band
+    (paper reports 38.89-73.68% maxima across datasets; equality is
+    possible — its Fig. 2b). Deadline extended on infeasibility per the
+    paper's §III-A 'prolong the duration' rule."""
+    X = 48
+    workload = PprWorkload(graph=web_graph, num_queries=X, seed=1)
+    executor = ForaExecutor(workload=workload, params=ForaParams(epsilon=0.5))
+    s = fraction_sample_size(X, 0.25)
+    executor(list(range(s)))                 # steady-state probe
+    probe = executor(list(range(s)))
+    T = max(X * probe.t_avg / 4, probe.t_max * 6, probe.t_pre * 8)
+    res = None
+    for _ in range(3):
+        try:
+            res = dna_real(X, T, executor, max_cores=64, sample_size=s,
+                           scaling_factor=1.0)
+            break
+        except InfeasibleDeadline:
+            T *= 2.0
+    assert res is not None, "rejected even after deadline extensions"
+    assert -5.0 <= res.reduction_vs_lemma2_pct <= 95.0
+
+
+def test_vectorised_block_mode_uses_fewer_cores(web_graph):
+    """Beyond-paper: B>1 queries per device block lowers measured per-query
+    time, so D&A_REAL should never need MORE cores than B=1 mode."""
+    X = 48
+    results = {}
+    for block in (1, 4):
+        workload = PprWorkload(graph=web_graph, num_queries=X, seed=2)
+        executor = ForaExecutor(workload=workload,
+                                params=ForaParams(epsilon=0.5),
+                                block_size=block)
+        s = fraction_sample_size(X, 0.25)
+        executor(list(range(s)))                  # steady-state probe
+        probe = executor(list(range(s)))
+        T = max(X * probe.t_avg / 4, probe.t_max * 6, probe.t_pre * 8)
+        res = None
+        for _ in range(3):                        # §III-A extension retry
+            try:
+                res = dna_real(X, T, executor, max_cores=64,
+                               sample_size=s, scaling_factor=0.9)
+                break
+            except InfeasibleDeadline:
+                T *= 2.0
+        assert res is not None
+        results[block] = res
+    assert results[4].cores <= results[1].cores + 1   # allow jitter of one
+
+
+def test_lemma2_cores_integerisation():
+    from repro.core import RuntimeStats
+    stats = RuntimeStats(np.array([0.5, 0.6, 0.7]))
+    b = lemma2_hoeffding_bound(100, 10.0, stats, p_f=0.05)
+    assert required_cores(b) == int(np.ceil(b))
+
+
+def test_infeasible_raises_not_hangs(web_graph):
+    workload = PprWorkload(graph=web_graph, num_queries=32, seed=3)
+    executor = ForaExecutor(workload=workload, params=ForaParams())
+    with pytest.raises(InfeasibleDeadline):
+        dna_real(32, 1e-4, executor, max_cores=2, sample_size=2)
+
+
+def test_training_loop_converges_fast():
+    """~100k-param LM for 40 steps on CPU: loss must drop (end-to-end
+    data->model->optim->step wiring)."""
+    from repro.data.pipeline import TokenStream
+    from repro.models import transformer
+    from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+    cfg = transformer.LMConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                               n_kv_heads=4, d_ff=64, vocab=128,
+                               dtype="float32", remat=False)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw_init(params)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10)
+    stream = iter(TokenStream(vocab=cfg.vocab, seq_len=32, batch=8))
+
+    @jax.jit
+    def step(params, opt_state, tokens, labels):
+        loss, grads = jax.value_and_grad(transformer.loss_fn)(
+            params, cfg, tokens, labels)
+        params, opt_state, _ = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss
+
+    losses = []
+    for _ in range(40):
+        b = next(stream)
+        params, opt_state, loss = step(params, opt_state, b["tokens"],
+                                       b["labels"])
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2

@@ -1,0 +1,100 @@
+"""Generate EXPERIMENTS.md sections from reports/ JSON. Run after sweeps:
+
+    PYTHONPATH=src python tools/gen_experiments.py > EXPERIMENTS_tables.md
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "reports" / "dryrun"
+HC = ROOT / "reports" / "hillclimb"
+
+
+def fmt(x, nd=4):
+    return f"{x:.{nd}g}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = ["| arch | shape | kind | status | compile_s | temp bytes/dev | coll counts |",
+            "|---|---|---|---|---|---|---|"]
+    for p in sorted(DRY.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+                        f"SKIP (sub-quadratic gate) | — | — | — |")
+            continue
+        mem = r.get("memory_analysis", {})
+        temp = mem.get("temp_size_in_bytes", 0)
+        cc = r.get("collectives", {}).get("count_by_kind", {})
+        cc_s = " ".join(f"{k.split('-')[-1]}:{v}" for k, v in sorted(cc.items()))
+        rows.append(f"| {r['arch']} | {r['shape']} | {r['kind']} | ok | "
+                    f"{r.get('compile_s', 0):.1f} | {temp / 2**30:.2f} GiB | {cc_s} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute_s | memory_s (HLO) | collective_s | "
+            "memory_s (model) | dominant | dom (fused) | useful ratio | "
+            "MFU | MFU (fused) |", "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for p in sorted(DRY.glob("*__pod16x16.json")):
+        r = json.loads(p.read_text())
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rf['compute_s'])} | "
+            f"{fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} | "
+            f"{fmt(rf['memory_model_s'])} | {rf['dominant']} | "
+            f"{rf['dominant_fused']} | {rf['useful_flops_ratio']:.2f} | "
+            f"{rf['mfu']:.3f} | {rf['mfu_fused']:.3f} |")
+    return "\n".join(rows)
+
+
+def hillclimb_tables() -> str:
+    out = []
+    for log in sorted(HC.glob("LOG_*.json")):
+        cell = log.stem.split("_", 1)[1]
+        rows = [f"### {cell}", "",
+                "| variant | compute_s | memory_s | collective_s | "
+                "step_s | step_fused_s | MFU | MFU fused |",
+                "|---|---|---|---|---|---|---|---|"]
+        for v in json.loads(log.read_text()):
+            if v["status"] != "ok":
+                rows.append(f"| {v['variant']} | ERROR | | | | | | |")
+                continue
+            rf = v["roofline"]
+            rows.append(f"| {v['variant']} | {fmt(rf['compute_s'])} | "
+                        f"{fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} | "
+                        f"{fmt(rf['step_s'])} | {fmt(rf['step_fused_s'])} | "
+                        f"{rf['mfu']:.3f} | {rf['mfu_fused']:.3f} |")
+        out.append("\n".join(rows))
+    # extra variants saved outside LOG files
+    extra = [p for p in sorted(HC.glob("*.json")) if not p.name.startswith("LOG")]
+    if extra:
+        rows = ["### all recorded variant runs", "",
+                "| cell | variant | step_s | step_fused_s | dominant(fused) | MFU fused |",
+                "|---|---|---|---|---|---|"]
+        for p in extra:
+            r = json.loads(p.read_text())
+            if r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            rows.append(f"| {r['arch']}/{r['shape']} | {r.get('variant')} | "
+                        f"{fmt(rf['step_s'])} | {fmt(rf['step_fused_s'])} | "
+                        f"{rf['dominant_fused']} | {rf['mfu_fused']:.3f} |")
+        out.append("\n".join(rows))
+    return "\n\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run single-pod (16x16)\n")
+    print(dryrun_table("pod16x16"))
+    print("\n## Dry-run multi-pod (2x16x16)\n")
+    print(dryrun_table("pod2x16x16"))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table())
+    print("\n## Hillclimb\n")
+    print(hillclimb_tables())
