@@ -1,10 +1,14 @@
 """Shared benchmark helpers. Output convention: ``name,us_per_call,derived``
-CSV rows (derived carries the benchmark-specific payload)."""
+CSV rows (derived carries the benchmark-specific payload). Every emitted row
+is also appended to ``RECORDS`` so ``run.py --json`` can persist the full
+measurement set (the per-PR BENCH_*.json perf trajectory)."""
 
 from __future__ import annotations
 
 import time
 from collections.abc import Callable
+
+RECORDS: list[dict] = []
 
 
 def timed(fn: Callable, *args, repeats: int = 3, **kwargs):
@@ -19,4 +23,10 @@ def timed(fn: Callable, *args, repeats: int = 3, **kwargs):
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def reset_records() -> None:
+    RECORDS.clear()

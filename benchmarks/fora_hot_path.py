@@ -1,0 +1,137 @@
+"""FORA serving hot path: seed baseline vs legacy vs the fused pipeline.
+
+Three per-query measurements at the acceptance shape (``small_test_graph``,
+1k-query workload):
+
+* ``seed``   — pinned replica of the pre-PR ``fora()`` hot path: graph
+  arrays re-staged on every query, COO ``segment_sum`` push
+  (``forward_push_coo`` *is* the seed push), per-step split/uniform/randint
+  walk RNG, and two host round-trips between push and walk. This is the
+  baseline the >=2x acceptance criterion is measured against.
+* ``legacy`` — today's multi-call ``fora()``: shares the PR's ELL push and
+  bulk-RNG walks but keeps the host syncs between phases.
+* ``fused``  — ``fora_fused`` via :class:`ForaExecutor`: one jitted call per
+  query on a :class:`DeviceGraph`, host touched only at readout
+  (DESIGN.md §7).
+
+The seed replica lives here (not in src/) so the serving code carries no
+dead baseline; it reproduces the seed maths verbatim and is clocked with the
+same warmup discipline as the executors.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ppr import ForaExecutor, ForaParams, PprWorkload, small_test_graph
+from repro.ppr.forward_push import forward_push_coo
+from repro.ppr.random_walk import walk_length_for_tail
+
+from .common import emit
+
+NUM_QUERIES = 1000
+BASELINE_QUERIES = 250  # slow paths: their mean stabilises well before 1k
+
+
+@partial(jax.jit, static_argnames=("n", "num_walks", "num_steps"))
+def _seed_residual_walks(edge_dst, out_offsets, out_degree, residual, key, *,
+                         alpha, n, num_walks, num_steps):
+    """Verbatim seed walk loop: 3 RNG ops per step inside the scan."""
+    r_sum = residual.sum()
+    csum = jnp.cumsum(residual)
+    k_start, k_walk = jax.random.split(key)
+    u = jax.random.uniform(k_start, (num_walks,)) * r_sum
+    starts = jnp.clip(jnp.searchsorted(csum, u, side="left").astype(jnp.int32),
+                      0, n - 1)
+    deg = jnp.maximum(out_degree, 1).astype(jnp.int32)
+
+    def step(carry, step_key):
+        pos, alive = carry
+        k_stop, k_next = jax.random.split(step_key)
+        stop = jax.random.uniform(k_stop, (num_walks,)) < alpha
+        u_next = jax.random.randint(k_next, (num_walks,), 0, 1 << 30)
+        nxt = edge_dst[out_offsets[pos] + (u_next % deg[pos])]
+        new_alive = jnp.logical_and(alive, jnp.logical_not(stop))
+        return (jnp.where(new_alive, nxt, pos), new_alive), None
+
+    keys = jax.random.split(k_walk, num_steps)
+    (endpos, _), _ = jax.lax.scan(step, (starts, jnp.ones(num_walks, bool)),
+                                  keys)
+    return jax.ops.segment_sum(
+        jnp.full((num_walks,), r_sum / num_walks, residual.dtype), endpos,
+        num_segments=n)
+
+
+def _seed_fora(graph, sources: np.ndarray, params: ForaParams,
+               key: jax.Array) -> np.ndarray:
+    """Pinned seed ``fora()``: per-call device staging + host syncs."""
+    rp = params.resolve(graph)
+    sources = np.asarray(sources, dtype=np.int32).reshape(-1)
+    seeds = np.zeros((sources.size, graph.n), dtype=np.float32)
+    seeds[np.arange(sources.size), sources] = 1.0
+    push = forward_push_coo(jnp.asarray(graph.edge_src),          # re-upload
+                            jnp.asarray(graph.edge_dst),
+                            jnp.asarray(graph.out_degree),
+                            jnp.asarray(seeds), alpha=rp.alpha,
+                            rmax=rp.rmax, n=graph.n)
+    residual = np.asarray(push.r)                                 # sync 1
+    r_sum = residual.sum(axis=1)
+    walks = int(min(rp.max_walks,
+                    max(1, math.ceil(float(r_sum.max()) * rp.omega))))
+    walks = 1 << (walks - 1).bit_length()
+    steps = walk_length_for_tail(rp.alpha, rp.walk_tail)
+    keys = jax.random.split(key, residual.shape[0])
+    endpoint = jax.vmap(lambda r, k: _seed_residual_walks(
+        jnp.asarray(graph.edge_dst), jnp.asarray(graph.out_offsets),
+        jnp.asarray(graph.out_degree), r, k, alpha=rp.alpha, n=graph.n,
+        num_walks=walks, num_steps=steps))(jnp.asarray(residual), keys)
+    return np.asarray(push.pi) + np.asarray(endpoint)             # sync 2
+
+
+def _time_seed_path(workload: PprWorkload, params: ForaParams,
+                    num_queries: int) -> float:
+    import time
+    for qid in (0, 1, num_queries // 2, num_queries - 1):         # warmup
+        _seed_fora(workload.graph, np.array([workload.source_of(qid)]),
+                   params, jax.random.PRNGKey(qid))
+    times = np.empty(num_queries)
+    for i in range(num_queries):
+        src = np.array([workload.source_of(i)])
+        t0 = time.perf_counter()
+        _seed_fora(workload.graph, src, params, jax.random.PRNGKey(i))
+        times[i] = time.perf_counter() - t0
+    return float(np.mean(times))
+
+
+def run(num_queries: int = NUM_QUERIES,
+        baseline_queries: int = BASELINE_QUERIES) -> None:
+    graph = small_test_graph(n=200, avg_deg=8, seed=1)
+    params = ForaParams(alpha=0.2, epsilon=0.5)
+    workload = PprWorkload(graph, num_queries=num_queries, seed=0)
+    shape = f"n={graph.n};m={graph.m};queries={num_queries}"
+    nb = min(baseline_queries, num_queries)
+
+    seed_us = _time_seed_path(workload, params, nb) * 1e6
+    emit("fora/seed_per_query", seed_us, f"{shape};measured={nb}")
+
+    legacy = ForaExecutor(workload, params, fused=False)
+    legacy_us = float(np.mean(legacy(list(range(nb))).times)) * 1e6
+    emit("fora/legacy_per_query", legacy_us, f"{shape};measured={nb}")
+
+    fused = ForaExecutor(workload, params, fused=True)
+    fused_us = float(np.mean(fused(list(range(num_queries))).times)) * 1e6
+    emit("fora/fused_per_query", fused_us,
+         f"{shape};walk_budget={fused._num_walks}")
+
+    emit("fora/hot_path_speedup", fused_us,
+         f"vs_seed={seed_us / fused_us:.2f}x;"
+         f"vs_legacy={legacy_us / fused_us:.2f}x;target_vs_seed>=2x")
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.ell_spmv import ell_spmv_pallas
+from repro.kernels.ell_spmv import ell_spmm_pallas, ell_spmv_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
@@ -42,6 +42,23 @@ def run() -> None:
     pal = ell_spmv_pallas(nbr, msk, w, x)
     err = float(jnp.abs(pal - refo).max())
     emit("kernels/ell_spmv", us, f"maxerr={err:.2e};n={n};K={K}")
+
+    # batched ell spmm at the fused push shape (query batch on the lane axis)
+    Bq = 8
+    xb = jax.random.normal(key, (Bq, n))
+    refo, us = timed(lambda: np.asarray(ref.ell_spmm_ref(nbr, msk, xb, w)))
+    pal = ell_spmm_pallas(nbr, msk, w, xb)
+    err = float(jnp.abs(pal - refo).max())
+    emit("kernels/ell_spmm", us, f"maxerr={err:.2e};n={n};K={K};B={Bq}")
+
+    # fused push-threshold variant (the forward_push inner loop)
+    thr = jnp.abs(jax.random.normal(ks[1], (n,))) * 0.1
+    refo, us = timed(lambda: np.asarray(
+        ref.ell_spmm_ref(nbr, msk, xb, w, threshold=thr)))
+    pal = ell_spmm_pallas(nbr, msk, w, xb, thr)
+    err = float(jnp.abs(pal - refo).max())
+    emit("kernels/ell_spmm_fused_push", us,
+         f"maxerr={err:.2e};n={n};K={K};B={Bq}")
 
     # embedding bag at a DIN-ish shape
     V, d, Bb, L = 50_000, 18, 512, 100

@@ -1,40 +1,55 @@
 """Benchmark entry point — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only eq2,fig2] [--full]
+                                            [--json out.json]
 
 Output: ``name,us_per_call,derived`` CSV (one row per measurement).
+``--json`` additionally persists every emitted row as JSON so the per-PR
+``BENCH_*.json`` perf trajectory can be recorded by CI (tools/ci.sh).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+from . import common
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: eq2,table1,fig2,fig3,kernels,roofline")
+                    help="comma list: eq2,table1,fig2,fig3,kernels,roofline,"
+                         "fora_hot")
     ap.add_argument("--full", action="store_true",
                     help="wider Fig.2 grid (slower)")
+    ap.add_argument("--json", default="", metavar="OUT",
+                    help="also write all measurements to OUT as JSON")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    from . import (eq2_sample_size, fig2_cores, fig3_scaling, kernels_bench,
-                   roofline, table1_datasets)
+    from . import (eq2_sample_size, fig2_cores, fig3_scaling, fora_hot_path,
+                   kernels_bench, roofline, table1_datasets)
 
     suites = [
         ("eq2", eq2_sample_size.run, {}),
         ("table1", table1_datasets.run, {}),
         ("kernels", kernels_bench.run, {}),
+        ("fora_hot", fora_hot_path.run, {}),
         ("fig2", fig2_cores.run,
          {"grid": fig2_cores.FULL_GRID if args.full else
           fig2_cores.DEFAULT_GRID}),
         ("fig3", fig3_scaling.run, {}),
         ("roofline", roofline.run, {}),
     ]
+    common.reset_records()
+    known = {name for name, _, _ in suites}
+    if want and not want <= known:
+        ap.error(f"unknown suite(s) {sorted(want - known)}; "
+                 f"choose from {sorted(known)}")
     print("name,us_per_call,derived")
     failures = 0
     for name, fn, kw in suites:
@@ -43,11 +58,18 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             fn(**kw)
-            print(f"suite/{name},{(time.perf_counter() - t0) * 1e6:.0f},ok")
+            common.emit(f"suite/{name}",
+                        (time.perf_counter() - t0) * 1e6, "ok")
         except Exception as e:      # noqa: BLE001
             failures += 1
-            print(f"suite/{name},0,FAILED:{type(e).__name__}:{e}")
+            common.emit(f"suite/{name}", 0,
+                        f"FAILED:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        payload = {"rows": common.RECORDS, "failures": failures}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
 

@@ -45,7 +45,10 @@ def shard_ctx(mesh: Mesh, logical_map: dict | None = None):
     for name, axes in mapping.items():
         present = tuple(a for a in axes if a in mesh.axis_names)
         resolved[name] = present
-    _state.ctx = (mesh, resolved)
+    # fused groups (>1 configured mesh axes, e.g. batch = pod+data) keep the
+    # tuple form in specs even when only one member axis is present
+    fused = {name for name, axes in mapping.items() if len(axes) > 1}
+    _state.ctx = (mesh, resolved, fused)
     try:
         yield
     finally:
@@ -57,7 +60,7 @@ def resolve_spec(*logical: str | None) -> P:
     ctx = _current()
     if ctx is None:
         return P(*logical)  # unused; constrain() no-ops without ctx
-    _, mapping = ctx
+    _, mapping, fused = ctx
     parts = []
     for ax in logical:
         if ax is None:
@@ -66,7 +69,7 @@ def resolve_spec(*logical: str | None) -> P:
             mesh_axes = mapping.get(ax, ())
             if len(mesh_axes) == 0:
                 parts.append(None)
-            elif len(mesh_axes) == 1:
+            elif len(mesh_axes) == 1 and ax not in fused:
                 parts.append(mesh_axes[0])
             else:
                 parts.append(tuple(mesh_axes))
@@ -83,7 +86,7 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
     ctx = _current()
     if ctx is None:
         return x
-    mesh, _ = ctx
+    mesh = ctx[0]
     spec = resolve_spec(*logical)
     parts = list(spec) + [None] * (x.ndim - len(spec))
     for i, part in enumerate(parts):
@@ -102,3 +105,16 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
 def active_mesh() -> Mesh | None:
     ctx = _current()
     return ctx[0] if ctx else None
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """jax.shard_map across jax versions: older releases keep it in
+    jax.experimental.shard_map and spell ``check_vma`` as ``check_rep``."""
+    try:
+        from jax import shard_map as _shard_map
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _shard_map
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

@@ -1,4 +1,4 @@
-"""Pallas TPU ELL SpMV — FORA's push relaxation as a gather kernel.
+"""Pallas TPU ELL SpMV/SpMM — FORA's push relaxation as a gather kernel.
 
 Pull formulation (DESIGN.md §5): the frontier-synchronous push
 ``r' = P^T (spread)`` becomes, per destination node i,
@@ -13,8 +13,17 @@ graph is node-sharded so each shard's x slice is its local residual
 load rather than an HBM scatter. One fori_loop accumulates K in chunks of
 128 lanes, keeping the (block_n, 128) gather/multiply on the VPU.
 
+``ell_spmm_pallas`` is the batched generalisation serving the fused FORA hot
+path (DESIGN.md §7): x is a (B, n) residual block, carried through the kernel
+transposed as (n, B) so the query batch rides the lane axis while rows stay
+on the sublane axis. It optionally fuses FORA's push condition: with a
+per-source ``threshold`` vector, gathered values x[nbr] are zeroed unless
+x[nbr] > threshold[nbr], i.e. the kernel consumes the *raw* residual and
+applies front/spread selection in-register instead of materialising
+``r * front`` in HBM between sweeps.
+
 Also used by the GNN SpMM regime (GCN's \\hat{A} X when X is a vector batch).
-Validated in interpret mode against ref.ell_spmv_ref.
+Validated in interpret mode against ref.ell_spmv_ref / ref.ell_spmm_ref.
 """
 
 from __future__ import annotations
@@ -81,3 +90,75 @@ def ell_spmv_pallas(neighbors, mask, weights, x, *, block_n: int = 256,
         interpret=interpret,
     )(neighbors, mask, weights.astype(jnp.float32), x.astype(jnp.float32))
     return y[:n]
+
+
+def _ell_spmm_kernel(nbr_ref, mask_ref, w_ref, xT_ref, thr_ref, yT_ref, *,
+                     k_chunks: int, chunk: int, fuse_threshold: bool):
+    nbr = nbr_ref[...]                                # (bn, Kp) int32
+    msk = mask_ref[...]                               # (bn, Kp) bool
+    xT = xT_ref[...]                                  # (n, B) f32, B on lanes
+
+    def body(c, acc):
+        start = c * chunk
+        idx = jax.lax.dynamic_slice_in_dim(nbr, start, chunk, axis=1)
+        vals = jnp.take(xT, idx, axis=0)              # (bn, chunk, B) gather
+        if fuse_threshold:
+            thr = jnp.take(thr_ref[...], idx, axis=0)  # (bn, chunk)
+            vals = jnp.where(vals > thr[..., None], vals, 0.0)
+        wts = (jax.lax.dynamic_slice_in_dim(w_ref[...], start, chunk, axis=1)
+               * jax.lax.dynamic_slice_in_dim(msk, start, chunk, axis=1
+                                              ).astype(vals.dtype))
+        return acc + jnp.sum(vals * wts[..., None], axis=1)
+
+    acc0 = jnp.zeros((nbr.shape[0], xT.shape[1]), jnp.float32)
+    yT_ref[...] = jax.lax.fori_loop(0, k_chunks, body, acc0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "interpret"))
+def ell_spmm_pallas(neighbors, mask, weights, x, threshold=None, *,
+                    block_n: int = 256, interpret: bool = True):
+    """Batched pull-form SpMM: y[b, i] = sum_j mask*w*x[b, neighbors[i,j]].
+
+    neighbors/mask/weights: (n, K); x: (B, n) float32 — the batch rides the
+    lane axis inside the kernel as x^T (n, B). With ``threshold`` (n,) the
+    FORA push condition is fused: gathered x[b, src] contributes only where
+    it exceeds threshold[src]. Returns (B, n) float32.
+    """
+    n, K = neighbors.shape
+    B = x.shape[0]
+    chunk = 128
+    Kp = -(-K // chunk) * chunk
+    bn = min(block_n, n)
+    nb = -(-n // bn)
+    n_pad = nb * bn - n
+    if Kp != K:
+        neighbors = jnp.pad(neighbors, ((0, 0), (0, Kp - K)))
+        mask = jnp.pad(mask, ((0, 0), (0, Kp - K)))
+        weights = jnp.pad(weights, ((0, 0), (0, Kp - K)))
+    if n_pad:
+        neighbors = jnp.pad(neighbors, ((0, n_pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, n_pad), (0, 0)))
+        weights = jnp.pad(weights, ((0, n_pad), (0, 0)))
+
+    fuse = threshold is not None
+    if not fuse:
+        threshold = jnp.zeros((n,), jnp.float32)
+    kernel = functools.partial(_ell_spmm_kernel, k_chunks=Kp // chunk,
+                               chunk=chunk, fuse_threshold=fuse)
+    yT = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bn, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((bn, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((bn, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((n, B), lambda i: (0, 0)),   # x^T resident per step
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * bn, B), jnp.float32),
+        interpret=interpret,
+    )(neighbors, mask, weights.astype(jnp.float32),
+      x.astype(jnp.float32).T, threshold.astype(jnp.float32))
+    return yT[:n].T

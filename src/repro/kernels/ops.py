@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 
 from . import ref
-from .ell_spmv import ell_spmv_pallas
+from .ell_spmv import ell_spmm_pallas, ell_spmv_pallas
 from .embedding_bag import embedding_bag_pallas
 from .flash_attention import flash_attention_pallas
 
@@ -37,6 +37,17 @@ def ell_spmv(neighbors, mask, weights, x, *, force: str | None = None):
         return ell_spmv_pallas(neighbors, mask, weights, x,
                                interpret=not _on_tpu())
     return ref.ell_spmv_ref(neighbors, mask, x, weights)
+
+
+def ell_spmm(neighbors, mask, weights, x, *, threshold=None,
+             force: str | None = None):
+    """Batched (B, n) pull-form SpMM; ``threshold`` fuses FORA's push
+    condition into the gather (see ell_spmv.ell_spmm_pallas)."""
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if use_pallas:
+        return ell_spmm_pallas(neighbors, mask, weights, x, threshold,
+                               interpret=not _on_tpu())
+    return ref.ell_spmm_ref(neighbors, mask, x, weights, threshold)
 
 
 def embedding_bag(table, ids, weights, *, force: str | None = None):

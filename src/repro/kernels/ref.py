@@ -46,6 +46,26 @@ def ell_spmv_ref(neighbors, mask, x, weights=None):
     return jnp.sum(w * gathered, axis=1)
 
 
+def ell_spmm_ref(neighbors, mask, x, weights=None, threshold=None):
+    """Batched pull-form ELL SpMM: the (B, n) generalisation of ell_spmv_ref.
+
+        y[b, i] = sum_j mask[i,j] * w[i,j] * f(x[b, neighbors[i,j]])
+
+    where f is identity, or — with ``threshold`` (n,) — FORA's fused push
+    selection f(v) = v * [v > threshold[src]] (DESIGN.md §7): feeding the raw
+    residual r and the per-node push threshold yields P^T (r * front) without
+    materialising the frontier between sweeps.
+    """
+    gathered = x[:, neighbors]                    # (B, n, K)
+    if threshold is not None:
+        thr = threshold[neighbors]                # (n, K) per-source bound
+        gathered = jnp.where(gathered > thr[None, :, :], gathered, 0.0)
+    w = mask.astype(x.dtype)
+    if weights is not None:
+        w = w * weights.astype(x.dtype)
+    return jnp.einsum("nk,bnk->bn", w, gathered)
+
+
 def embedding_bag_ref(table, ids, weights=None):
     """EmbeddingBag(sum): out[b] = sum_l w[b,l] * table[ids[b,l]].
 

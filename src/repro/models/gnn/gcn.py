@@ -68,7 +68,7 @@ def loss_fn_owner_computes(params, cfg: GCNConfig, batch: GraphBatch, mesh):
     all-gather of the (already projected, d_hidden-narrow) source features —
     replacing GSPMD's per-layer psum/permute storm over (n, d) scatters.
     """
-    from jax import shard_map
+    from ...distributed.ctx import shard_map_compat as shard_map
     from jax.sharding import PartitionSpec as P
 
     D = mesh.shape["data"]

@@ -95,7 +95,7 @@ def _moe_apply_local_select(params, cfg: MoEConfig, x: jax.Array, mesh):
     single psum of the combined output (each token's k expert contributions
     live on at most k shards). No all-to-all, no scatter-merge all-reduce.
     """
-    from jax import shard_map
+    from ..distributed.ctx import shard_map_compat as shard_map
     from jax.sharding import PartitionSpec as P
 
     B, S, d = x.shape

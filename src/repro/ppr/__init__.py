@@ -2,19 +2,22 @@
 
 from .datasets import TABLE1, DatasetSpec, load, small_test_graph, synthesize
 from .executor import ForaExecutor, PprWorkload
-from .fora import ForaParams, ForaResult, ResolvedFora, fora, fora_query_block
-from .forward_push import PushResult, forward_push, forward_push_np
-from .graph import Graph
+from .fora import (ForaParams, ForaResult, FusedForaResult, ResolvedFora,
+                   fora, fora_fused, fora_query_block)
+from .forward_push import (PushResult, forward_push, forward_push_coo,
+                           forward_push_np)
+from .graph import DeviceGraph, Graph
 from .montecarlo import monte_carlo_ppr
 from .power_iteration import ppr_power_iteration, ppr_single_pair
 from .random_walk import (residual_walks, residual_walks_batched,
                           source_walks, walk_length_for_tail)
 
 __all__ = [
-    "TABLE1", "DatasetSpec", "ForaExecutor", "ForaParams", "ForaResult",
-    "Graph", "PprWorkload", "PushResult", "ResolvedFora", "fora",
-    "fora_query_block", "forward_push", "forward_push_np", "load",
-    "monte_carlo_ppr", "ppr_power_iteration", "ppr_single_pair",
-    "residual_walks", "residual_walks_batched", "small_test_graph",
-    "source_walks", "synthesize", "walk_length_for_tail",
+    "TABLE1", "DatasetSpec", "DeviceGraph", "ForaExecutor", "ForaParams",
+    "ForaResult", "FusedForaResult", "Graph", "PprWorkload", "PushResult",
+    "ResolvedFora", "fora", "fora_fused", "fora_query_block", "forward_push",
+    "forward_push_coo", "forward_push_np", "load", "monte_carlo_ppr",
+    "ppr_power_iteration", "ppr_single_pair", "residual_walks",
+    "residual_walks_batched", "small_test_graph", "source_walks",
+    "synthesize", "walk_length_for_tail",
 ]

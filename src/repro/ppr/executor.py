@@ -6,10 +6,19 @@ times. Queries are (source vertex) ids; a query-id -> source mapping comes
 from the workload. One query per call reproduces the paper's one-query-per-
 core model; ``block_size > 1`` is the beyond-paper vectorised mode where a
 whole slot executes as one batched device step and the block time is shared.
+
+By default the executor runs the **fused device-resident hot path**
+(DESIGN.md §7): the graph is uploaded once as a :class:`DeviceGraph`, the
+static walk lane count is calibrated once per workload from a probe push,
+and every measured query is a single jitted ``fora_fused`` call whose only
+host sync is the final readout. ``fused=False`` keeps the legacy multi-call
+``fora()`` path (host round-trips between push and walk) for comparison —
+``benchmarks/fora_hot_path.py`` measures both.
 """
 
 from __future__ import annotations
 
+import math
 import time
 from collections.abc import Sequence
 from dataclasses import dataclass, field
@@ -18,8 +27,10 @@ import jax
 import numpy as np
 
 from ..core.estimator import RuntimeStats
-from .fora import ForaParams, fora
-from .graph import Graph
+from .fora import (ForaParams, _pow2_ceil_host, default_walk_budget, fora,
+                   fora_fused)
+from .forward_push import forward_push_np
+from .graph import DeviceGraph, Graph
 
 
 @dataclass
@@ -50,30 +61,86 @@ class ForaExecutor:
     workload: PprWorkload
     params: ForaParams = field(default_factory=ForaParams)
     block_size: int = 1            # 1 = paper-faithful
+    fused: bool = True             # device-resident single-jit hot path
+    walk_safety: float = 1.0       # calibration headroom on the probe r_sum
     _warmed: bool = field(default=False, init=False)
     calls: int = field(default=0, init=False)
+    _device_graph: DeviceGraph | None = field(default=None, init=False,
+                                              repr=False)
+    _num_walks: int | None = field(default=None, init=False)
+    _warmed_sizes: set = field(default_factory=set, init=False)
+
+    # -- helpers ---------------------------------------------------------------
+    def _block_sources(self, qids: Sequence[int]) -> np.ndarray:
+        return np.array([self.workload.source_of(q) for q in qids],
+                        dtype=np.int64)
 
     def _run_block(self, sources: np.ndarray, seed: int) -> None:
         key = jax.random.PRNGKey(seed)
-        res = fora(self.workload.graph, sources, self.params, key)
-        res.pi.block_until_ready() if hasattr(res.pi, "block_until_ready") else None
+        if self.fused:
+            res = fora_fused(self._device_graph, sources, self.params, key,
+                             num_walks=self._num_walks)
+            res.pi.block_until_ready()    # the block's single host sync
+        else:
+            res = fora(self.workload.graph, sources, self.params, key)
+            pi = res.pi
+            if hasattr(pi, "block_until_ready"):
+                pi.block_until_ready()
+
+    def _calibrate_walk_budget(self) -> int:
+        """Pick ONE static walk lane count for the whole workload: push a
+        probe block (warmup only — this sync never lands in measured time),
+        read the worst residual mass, and budget pow2(ceil(r_max * omega))
+        with ``walk_safety`` headroom. Rows whose true budget exceeds the
+        calibrated lanes are still unbiased (weight r_sum/W), merely a bit
+        noisier — the same trade the seed path's batch-max budget made."""
+        rp = self.params.resolve(self.workload.graph)
+        probe_qids = range(min(8, self.workload.num_queries))
+        sources = self._block_sources(probe_qids)
+        push = forward_push_np(self.workload.graph, sources,
+                               alpha=rp.alpha, rmax=rp.rmax)
+        r_max = float(np.asarray(push.r.sum(axis=1)).max())
+        need = max(1, math.ceil(r_max * rp.omega * self.walk_safety))
+        return min(_pow2_ceil_host(need), default_walk_budget(rp))
+
+    def _probe_qids(self) -> list[int]:
+        probes = {0, 1, self.workload.num_queries // 2,
+                  self.workload.num_queries - 1}
+        return sorted(q for q in probes if q >= 0)
 
     def warmup(self) -> None:
-        """Pre-compile every plausible executable variant: distinct sources
-        can land on different (pow2-quantised) walk budgets, and a compile
-        spike inside a measured query would contaminate the D&A statistics
-        the way no real steady-state deployment is contaminated."""
-        if not self._warmed:
-            probes = {0, self.workload.num_queries // 2,
-                      self.workload.num_queries - 1, 1}
-            for qid in sorted(probes):
-                src = np.array([self.workload.source_of(qid)]
-                               * min(self.block_size, 1) or [0])
-                if self.block_size > 1:
-                    src = np.array([self.workload.source_of(q)
-                                    for q in range(qid, qid + self.block_size)])
-                self._run_block(src, seed=qid)
-            self._warmed = True
+        """Pre-compile every executable variant that measured queries can
+        hit: distinct sources can land on different (pow2-quantised) walk
+        budgets on the legacy path, and a compile spike inside a measured
+        query would contaminate the D&A statistics the way no real
+        steady-state deployment is contaminated. The fused path compiles
+        exactly one executable (static budget), but probing still warms the
+        dispatch path and the DeviceGraph upload."""
+        if self._warmed:
+            return
+        if self.fused:
+            if self._device_graph is None:
+                self._device_graph = self.workload.graph.device()
+            if self._num_walks is None:
+                self._num_walks = self._calibrate_walk_budget()
+        for qid in self._probe_qids():
+            if self.block_size <= 1:
+                src = self._block_sources([qid])
+            else:
+                src = self._block_sources(
+                    range(qid, qid + self.block_size))
+            self._run_block(src, seed=qid)
+            self._warmed_sizes.add(len(src))
+        self._warmed = True
+
+    def _warm_size(self, size: int) -> None:
+        """Compile an executable variant for an unseen batch size (e.g. the
+        remainder chunk of a query list) OUTSIDE the measured region."""
+        if size in self._warmed_sizes:
+            return
+        src = self._block_sources(range(size))
+        self._run_block(src, seed=0)
+        self._warmed_sizes.add(size)
 
     def __call__(self, query_ids: Sequence[int]) -> RuntimeStats:
         ids = list(query_ids)
@@ -83,15 +150,18 @@ class ForaExecutor:
         times = np.empty(len(ids), dtype=np.float64)
         if self.block_size <= 1:
             for i, qid in enumerate(ids):
-                src = np.array([self.workload.source_of(qid)])
+                src = self._block_sources([qid])
                 t0 = time.perf_counter()
                 self._run_block(src, seed=qid)
                 times[i] = time.perf_counter() - t0
                 self.calls += 1
         else:
+            tail = len(ids) % self.block_size
+            if tail:
+                self._warm_size(tail)   # compile spike stays out of the clock
             for lo in range(0, len(ids), self.block_size):
                 chunk = ids[lo: lo + self.block_size]
-                src = np.array([self.workload.source_of(q) for q in chunk])
+                src = self._block_sources(chunk)
                 t0 = time.perf_counter()
                 self._run_block(src, seed=chunk[0])
                 dt = time.perf_counter() - t0

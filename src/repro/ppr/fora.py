@@ -18,15 +18,17 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .forward_push import forward_push_np
-from .graph import Graph
-from .random_walk import residual_walks_batched
+from .forward_push import forward_push, forward_push_np
+from .graph import DeviceGraph, Graph
+from .random_walk import (_BULK_RNG_ELEMS, residual_walks,
+                          residual_walks_batched, walk_length_for_tail)
 
 
 @dataclass(frozen=True)
@@ -39,7 +41,7 @@ class ForaParams:
     walk_tail: float = 1e-4
     max_walks: int = 1 << 22       # hard cap keeping the walk phase jit-static
 
-    def resolve(self, graph: Graph) -> "ResolvedFora":
+    def resolve(self, graph: "Graph | DeviceGraph") -> "ResolvedFora":
         n, m = graph.n, graph.m
         delta = self.delta if self.delta is not None else 1.0 / n
         p_f = self.p_f if self.p_f is not None else 1.0 / n
@@ -104,6 +106,113 @@ def fora_query_block(graph: Graph, sources: np.ndarray,
     return fora(graph, sources, params, key).pi
 
 
+class FusedForaResult(NamedTuple):
+    """Device-resident FORA result — nothing here has touched the host.
+
+    Readout (``np.asarray(res.pi)`` / ``block_until_ready``) is the caller's
+    single host sync per query block.
+    """
+
+    pi: jax.Array              # (B, n) PPR estimates, on device
+    residual_mass: jax.Array   # (B,) r_sum after push, on device
+    push_iters: jax.Array      # () int32, on device
+    walks_effective: jax.Array  # (B,) int32 pow2-quantised budgets, on device
+    walks_budget: int          # static lane count W the executable was built at
+
+
+def _pow2_ceil_host(v: int) -> int:
+    return 1 << (max(1, int(v)) - 1).bit_length()
+
+
+def default_walk_budget(rp: ResolvedFora) -> int:
+    """Static walk lane count when no calibrated budget is supplied: the
+    worst case r_sum = 1 (pushes cannot increase total residual mass)."""
+    return _pow2_ceil_host(min(rp.max_walks, math.ceil(rp.omega)))
+
+
+def _fora_fused_impl(in_neighbors, in_mask, in_weights, edge_dst, out_offsets,
+                     out_degree, sources, key, *, alpha: float, rmax: float,
+                     omega: float, n: int, num_walks: int, num_steps: int,
+                     max_push_iters: int, force: str | None = None):
+    """The whole FORA query block as ONE executable: seed construction,
+    frontier push (pull-form ELL SpMM), pow2 walk-budget quantisation and
+    the residual walks all stay on device. See DESIGN.md §7 for the
+    host<->device dataflow."""
+    B = sources.shape[0]
+    seeds = jnp.zeros((B, n), jnp.float32).at[
+        jnp.arange(B), sources].set(1.0)
+    push = forward_push(in_neighbors, in_mask, in_weights, out_degree, seeds,
+                        alpha=alpha, rmax=rmax, n=n,
+                        max_iters=max_push_iters, force=force)
+    r_sum = push.r.sum(axis=1)                               # (B,)
+    # FORA budget ceil(r_sum * omega), quantised UP to the next power of two
+    # on device (mirrors the host-side quantisation of fora()) and clipped to
+    # the static lane count; lanes beyond the effective budget get weight 0.
+    need = jnp.maximum(jnp.ceil(r_sum * omega), 1.0)
+    w_eff = jnp.exp2(jnp.ceil(jnp.log2(need)))
+    w_eff = jnp.clip(w_eff, 1.0, float(num_walks)).astype(jnp.int32)
+    keys = jax.random.split(key, B)
+    # bulk-RNG decision must count the vmapped batch: the (L, W) draw
+    # batches to (B, L, W) under vmap
+    bulk = B * num_steps * num_walks <= _BULK_RNG_ELEMS
+    endpoint = jax.vmap(lambda r, k, a: residual_walks(
+        edge_dst, out_offsets, out_degree, r, k, alpha=alpha, n=n,
+        num_walks=num_walks, num_steps=num_steps, active_walks=a,
+        bulk_rng=bulk))(push.r, keys, w_eff)
+    return push.pi + endpoint, r_sum, push.iters, w_eff
+
+
+_FUSED_STATICS = ("alpha", "rmax", "omega", "n", "num_walks", "num_steps",
+                  "max_push_iters", "force")
+_fora_fused = jax.jit(_fora_fused_impl, static_argnames=_FUSED_STATICS)
+# On TPU the (B,) sources buffer is donated (it aliases the int32
+# walks_effective output). On CPU donation is a measured ~1.7 ms/call
+# pessimisation (XLA CPU takes a defensive-copy path), so the plain
+# executable is used there.
+_fora_fused_donating = jax.jit(_fora_fused_impl,
+                               static_argnames=_FUSED_STATICS,
+                               donate_argnames=("sources",))
+
+
+def fora_fused(dg: DeviceGraph, sources, params: ForaParams = ForaParams(),
+               key: jax.Array | None = None, *,
+               num_walks: int | None = None,
+               force: str | None = None) -> FusedForaResult:
+    """Zero-host-sync FORA on a :class:`DeviceGraph`.
+
+    One jitted call chains push -> pow2 walk-budget quantisation ->
+    residual walks; the only host transfer per query block is the caller's
+    final readout of the returned device arrays. ``num_walks`` pins the
+    static walk lane count (e.g. a workload-calibrated budget from
+    :class:`repro.ppr.executor.ForaExecutor`); by default it covers the
+    worst case r_sum = 1 so the estimator never under-samples.
+    """
+    rp = params.resolve(dg)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if num_walks is None:
+        num_walks = default_walk_budget(rp)
+    num_walks = _pow2_ceil_host(num_walks)
+    steps = walk_length_for_tail(rp.alpha, rp.walk_tail)
+    if jax.default_backend() == "tpu":
+        # copy before donating: the int32/reshape conversions are no-ops for
+        # an already-1D-int32 input, and donating the caller's own buffer
+        # would invalidate it for reuse
+        sources = jnp.array(sources, jnp.int32, copy=True).reshape(-1)
+        fused_fn = _fora_fused_donating
+    else:
+        sources = jnp.asarray(sources).astype(jnp.int32).reshape(-1)
+        fused_fn = _fora_fused
+    pi, r_sum, iters, w_eff = fused_fn(
+        dg.in_neighbors, dg.in_mask, dg.in_weights, dg.edge_dst,
+        dg.out_offsets, dg.out_degree, sources, key,
+        alpha=rp.alpha, rmax=rp.rmax, omega=rp.omega, n=dg.n,
+        num_walks=num_walks, num_steps=steps, max_push_iters=10_000,
+        force=force)
+    return FusedForaResult(pi=pi, residual_mass=r_sum, push_iters=iters,
+                           walks_effective=w_eff, walks_budget=num_walks)
+
+
 def fora_step_calib(edge_src, edge_dst, out_offsets, out_degree, seeds, key,
                     *, alpha: float, rmax: float, n: int, num_walks: int,
                     push_sweeps: int, walk_steps: int):
@@ -157,12 +266,11 @@ def fora_step(edge_src, edge_dst, out_offsets, out_degree, seeds, key, *,
 
     seeds: (B, n) one-hot residuals. Returns pi_hat (B, n).
     """
-    from .forward_push import forward_push
-    from .random_walk import residual_walks
+    from .forward_push import forward_push_coo
 
-    push = forward_push(edge_src, edge_dst, out_degree, seeds,
-                        alpha=alpha, rmax=rmax, n=n,
-                        max_iters=max_push_iters)
+    push = forward_push_coo(edge_src, edge_dst, out_degree, seeds,
+                            alpha=alpha, rmax=rmax, n=n,
+                            max_iters=max_push_iters)
     keys = jax.random.split(key, seeds.shape[0])
     walk = jax.vmap(lambda r, k: residual_walks(
         edge_dst, out_offsets, out_degree, r, k, alpha=alpha, n=n,

@@ -7,10 +7,16 @@ we relax **every** above-threshold node per iteration:
     front(v)   = r(v) > rmax * deg_out(v)          (FORA's push condition)
     pi        += alpha * r * front
     spread(v)  = (1 - alpha) * r(v) * front(v) / deg_out(v)
-    r         <- r * (1 - front) + scatter_add(spread[src] -> dst)
+    r         <- r * (1 - front) + P^T (r * front) * (1 - alpha)
 
-Each iteration is one ``segment_sum`` over the edge list (SpMM regime) under
-``jax.lax.while_loop`` until no node is above threshold (or ``max_iters``).
+The relaxation is the *pull-form* ELL SpMM (DESIGN.md §5): each sweep is one
+``kernels.ops.ell_spmm`` over the padded in-neighbor table with weights
+1/deg_out(src), under ``jax.lax.while_loop`` until no node is above threshold
+(or ``max_iters``). On the Pallas path the push condition itself is fused
+into the kernel via the ``threshold`` argument — the kernel gathers the raw
+residual and zeroes below-threshold sources in-register, so ``r * front``
+never round-trips through HBM between sweeps.
+
 Changing push *order* does not affect FORA's invariant
 
     pi_true(s,t) = pi(t) + sum_v r(v) * pi_true(v,t)
@@ -19,9 +25,12 @@ which holds after every iteration and is what the walk phase consumes; the
 termination condition (all r(v) <= rmax*deg(v)) is identical to sequential
 FORA's, so the approximation guarantee carries over unchanged.
 
-Batched over B sources (leading axis); the edge scatter vectorises across the
-batch. Residual/reserve live as dense (B, n) — the same layout the
+Batched over B sources (leading axis); inside the kernel the batch rides the
+lane axis. Residual/reserve live as dense (B, n) — the same layout the
 ``model``-axis sharding partitions in the distributed path.
+``forward_push_coo`` keeps the original edge-list ``segment_sum`` relaxation
+for the edge-sharded calibration path (``fora_step``), where edges rather
+than rows are partitioned across the mesh.
 """
 
 from __future__ import annotations
@@ -33,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops
 from .graph import Graph
 
 
@@ -48,15 +58,53 @@ class PushResult(NamedTuple):
     iters: jax.Array     # () number of frontier sweeps executed
 
 
-@partial(jax.jit, static_argnames=("n", "max_iters"))
-def forward_push(edge_src: jax.Array, edge_dst: jax.Array,
-                 out_degree: jax.Array, seeds: jax.Array,
-                 *, alpha: float, rmax: float, n: int,
-                 max_iters: int = 10_000) -> PushResult:
-    """Batched frontier push. ``seeds`` is (B, n) one-hot (or any residual).
+@partial(jax.jit, static_argnames=("n", "max_iters", "force"))
+def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
+                 in_weights: jax.Array, out_degree: jax.Array,
+                 seeds: jax.Array, *, alpha: float, rmax: float, n: int,
+                 max_iters: int = 10_000,
+                 force: str | None = None) -> PushResult:
+    """Batched frontier push over the pull-form ELL view.
 
-    Returns (pi, r) with the FORA invariant; every residual entry satisfies
-    r(v) <= rmax * deg_out(v) on normal termination.
+    ``in_neighbors``/``in_mask``/``in_weights`` are the (n, K) padded
+    in-neighbor table from :meth:`Graph.ell_in` (weights 1/deg_out(src));
+    ``seeds`` is (B, n) one-hot (or any residual). Returns (pi, r) with the
+    FORA invariant; every residual entry satisfies r(v) <= rmax * deg_out(v)
+    on normal termination.
+    """
+    deg = out_degree.astype(jnp.float32)
+    deg_safe = jnp.maximum(deg, 1.0)
+    threshold = rmax * deg_safe                      # (n,)
+
+    def cond(state: PushState) -> jax.Array:
+        active = jnp.any(state.r > threshold[None, :])
+        return jnp.logical_and(active, state.iters < max_iters)
+
+    def body(state: PushState) -> PushState:
+        front = (state.r > threshold[None, :]).astype(state.r.dtype)  # (B,n)
+        pi = state.pi + alpha * state.r * front
+        # one pull-form SpMM == P^T (r * front); the kernel applies the
+        # push condition to the gathered residual itself (fused threshold)
+        moved = (1.0 - alpha) * ops.ell_spmm(
+            in_neighbors, in_mask, in_weights, state.r,
+            threshold=threshold, force=force)
+        r = state.r * (1.0 - front) + moved
+        return PushState(pi=pi, r=r, iters=state.iters + 1)
+
+    init = PushState(pi=jnp.zeros_like(seeds), r=seeds,
+                     iters=jnp.zeros((), jnp.int32))
+    final = jax.lax.while_loop(cond, body, init)
+    return PushResult(pi=final.pi, r=final.r, iters=final.iters)
+
+
+@partial(jax.jit, static_argnames=("n", "max_iters"))
+def forward_push_coo(edge_src: jax.Array, edge_dst: jax.Array,
+                     out_degree: jax.Array, seeds: jax.Array,
+                     *, alpha: float, rmax: float, n: int,
+                     max_iters: int = 10_000) -> PushResult:
+    """Edge-list relaxation (``segment_sum`` per sweep) — kept for the
+    edge-sharded ``fora_step`` path where the mesh partitions edges, not
+    rows. Math identical to :func:`forward_push`.
     """
     deg = out_degree.astype(jnp.float32)
     deg_safe = jnp.maximum(deg, 1.0)
@@ -85,12 +133,15 @@ def forward_push(edge_src: jax.Array, edge_dst: jax.Array,
 
 def forward_push_np(graph: Graph, sources: np.ndarray, *, alpha: float,
                     rmax: float, max_iters: int = 10_000) -> PushResult:
-    """Convenience wrapper building device arrays from a Graph."""
+    """Convenience wrapper: one-hot seeds + device arrays from a Graph.
+
+    Uses the upload-once :class:`DeviceGraph` mirror, so repeated calls on
+    the same Graph never re-transfer the adjacency.
+    """
+    dg = graph.device()
     sources = np.asarray(sources, dtype=np.int32).reshape(-1)
     seeds = np.zeros((sources.size, graph.n), dtype=np.float32)
     seeds[np.arange(sources.size), sources] = 1.0
-    return forward_push(jnp.asarray(graph.edge_src),
-                        jnp.asarray(graph.edge_dst),
-                        jnp.asarray(graph.out_degree),
-                        jnp.asarray(seeds), alpha=alpha, rmax=rmax,
-                        n=graph.n, max_iters=max_iters)
+    return forward_push(dg.in_neighbors, dg.in_mask, dg.in_weights,
+                        dg.out_degree, jnp.asarray(seeds), alpha=alpha,
+                        rmax=rmax, n=graph.n, max_iters=max_iters)

@@ -10,15 +10,24 @@ self-loop at construction so both push and walk semantics are total):
 * **CSR**  — ``out_offsets`` into ``edge_dst``: O(1) uniform out-neighbor
   sampling for random walks (``edge_dst[offsets[v] + u % deg(v)]``).
 * **ELL**  — ``(n, k_max)`` padded neighbor table + validity mask: the
-  VMEM-tileable layout consumed by the Pallas ``ell_spmv`` kernel.
+  VMEM-tileable layout consumed by the Pallas ``ell_spmv``/``ell_spmm``
+  kernels. ``ell()`` is the out-neighbor view; ``ell_in()`` is the pull-form
+  in-neighbor view (rows indexed by destination, weights 1/deg_out(src))
+  that turns a push sweep into one SpMM (DESIGN.md §5).
 
 All index arrays are int32 (TPU-native); n and m up to ~2^31.
+
+``DeviceGraph`` (via ``Graph.device()``) is the upload-once device-resident
+mirror: CSR + pull-ELL arrays are put on device exactly once per Graph and
+reused by every query of a workload — the fused FORA hot path (DESIGN.md §7)
+never re-transfers graph structure.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import cached_property
+from typing import Any, ClassVar
 
 import numpy as np
 
@@ -97,6 +106,47 @@ class Graph:
         del deg
         return neighbors, mask
 
+    @cached_property
+    def max_in_degree(self) -> int:
+        return int(np.bincount(self.edge_dst, minlength=self.n).max()) \
+            if self.m else 0
+
+    def ell_in(self, pad_multiple: int = 8
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Pull-form padded in-neighbor table for the push-as-SpMM kernel.
+
+        Returns (neighbors (n,K) int32, mask (n,K) bool, weights (n,K) f32):
+        row i lists the sources of i's in-edges; weights carry FORA's spread
+        factor 1/deg_out(src) so that  ell_spmm(nbr, mask, w, pushed) ==
+        P^T pushed  (DESIGN.md §5). Padding entries point at node 0 with
+        mask False and weight 0.
+        """
+        order = np.argsort(self.edge_dst, kind="stable")
+        src_s = self.edge_src[order]
+        dst_s = self.edge_dst[order]
+        in_deg = np.bincount(dst_s, minlength=self.n)
+        K = self.max_in_degree if self.m else 1
+        K = max(pad_multiple,
+                ((K + pad_multiple - 1) // pad_multiple) * pad_multiple)
+        neighbors = np.zeros((self.n, K), dtype=np.int32)
+        mask = np.zeros((self.n, K), dtype=bool)
+        off = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(in_deg, out=off[1:])
+        pos = np.arange(self.m, dtype=np.int64) - off[dst_s]
+        neighbors[dst_s, pos] = src_s
+        mask[dst_s, pos] = True
+        inv_deg = 1.0 / np.maximum(self.out_degree, 1).astype(np.float32)
+        weights = inv_deg[neighbors] * mask
+        return neighbors, mask, weights.astype(np.float32)
+
+    @cached_property
+    def _device(self) -> "DeviceGraph":
+        return DeviceGraph.from_graph(self)
+
+    def device(self) -> "DeviceGraph":
+        """Upload-once device mirror; repeated calls return the same object."""
+        return self._device
+
     # -- constructors ----------------------------------------------------------
     @staticmethod
     def from_edges(n: int, src: np.ndarray, dst: np.ndarray, *,
@@ -135,3 +185,44 @@ class Graph:
                 "type": "Directed" if self.directed else "Undirected",
                 "avg_out_degree": round(self.avg_out_degree, 2),
                 "max_out_degree": self.max_out_degree}
+
+
+@dataclass(frozen=True, eq=False)
+class DeviceGraph:
+    """Device-resident graph arrays for the fused FORA hot path.
+
+    Holds jax arrays for the CSR walk view (edge_dst / out_offsets /
+    out_degree) and the pull-form ELL push view (in_neighbors / in_mask /
+    in_weights, weights = 1/deg_out(src)). Built exactly once per Graph via
+    ``Graph.device()``; ``DeviceGraph.uploads`` counts constructions so tests
+    and benchmarks can assert the upload-once contract.
+    """
+
+    n: int
+    m: int
+    edge_src: Any
+    edge_dst: Any
+    out_offsets: Any
+    out_degree: Any
+    in_neighbors: Any
+    in_mask: Any
+    in_weights: Any
+
+    uploads: ClassVar[int] = 0
+
+    @classmethod
+    def from_graph(cls, graph: Graph) -> "DeviceGraph":
+        import jax.numpy as jnp  # deferred: graph.py stays importable sans jax
+
+        nbr, mask, weights = graph.ell_in()
+        DeviceGraph.uploads += 1
+        return cls(
+            n=graph.n, m=graph.m,
+            edge_src=jnp.asarray(graph.edge_src),
+            edge_dst=jnp.asarray(graph.edge_dst),
+            out_offsets=jnp.asarray(graph.out_offsets),
+            out_degree=jnp.asarray(graph.out_degree),
+            in_neighbors=jnp.asarray(nbr),
+            in_mask=jnp.asarray(mask),
+            in_weights=jnp.asarray(weights),
+        )

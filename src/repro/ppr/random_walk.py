@@ -12,6 +12,13 @@ lengths. TPU adaptation (DESIGN.md deviation 3):
 * **Transition**: uniform out-neighbor via CSR gather
   ``edge_dst[offsets[v] + u % deg(v)]`` — one ``jnp.take`` per step, no ELL
   padding needed, no per-step collectives in the sharded path.
+* **Randomness**: ONE int32 draw per (step, walker) serves both decisions —
+  ``u < floor(alpha * 2^30)`` is the Bernoulli(alpha) stop (bias < 2^-30)
+  and ``u % deg`` the neighbor choice (modulo/conditioning bias O(deg/2^30));
+  drawn as one bulk (L, W) table when it fits ``_BULK_RNG_ELEMS`` (per-step
+  RNG calls dominate the scan body on CPU otherwise), else per step from
+  pre-split keys so multi-million-walk budgets don't materialise a
+  multi-hundred-MB table.
 
 Estimate: endpoints accumulate weight r_sum/W via segment_sum, giving the
 unbiased FORA estimator  pi_hat = pi_push + sum_v r(v) * (MC endpoint dist).
@@ -41,14 +48,37 @@ class WalkResult(NamedTuple):
     walks: int                 # W actually used (static)
 
 
-@partial(jax.jit, static_argnames=("n", "num_walks", "num_steps"))
+# one bulk (num_steps, num_walks) int32 draw is ~10x cheaper than per-step
+# RNG calls on CPU, but must not materialise GBs at the max_walks budget:
+# cap the table at 2^25 elements (128 MB int32) and fall back to per-step
+# generation beyond it.
+_BULK_RNG_ELEMS = 1 << 25
+
+
+@partial(jax.jit, static_argnames=("n", "num_walks", "num_steps", "bulk_rng"))
 def residual_walks(edge_dst: jax.Array, out_offsets: jax.Array,
                    out_degree: jax.Array, residual: jax.Array,
                    key: jax.Array, *, alpha: float, n: int,
-                   num_walks: int, num_steps: int) -> jax.Array:
+                   num_walks: int, num_steps: int,
+                   active_walks: jax.Array | None = None,
+                   bulk_rng: bool | None = None) -> jax.Array:
     """Monte-Carlo estimate of sum_v r(v) * pi(v, t) for one batch row.
 
     residual: (n,) non-negative. Returns (n,) endpoint mass.
+
+    ``num_walks`` is the static lane count; ``active_walks`` (traced scalar,
+    1 <= active_walks <= num_walks) is the *effective* budget used by the
+    fused path's on-device pow2 quantisation: walker i contributes weight
+    r_sum/active_walks iff i < active_walks, zero otherwise. This keeps the
+    per-row budget adaptive (matching FORA's ceil(r_sum * omega)) without a
+    host sync or a shape-dependent recompile. Estimator stays unbiased:
+    starts are iid ~ residual/r_sum, so E[endpoint mass] = r_sum * pi_walk
+    for any positive effective count.
+
+    ``bulk_rng`` (static) selects the bulk (L, W) draw vs per-step keys;
+    callers that vmap this function over a batch MUST size the decision to
+    B * L * W (this function only sees per-row shapes) — None falls back to
+    the per-row heuristic.
     """
     r_sum = residual.sum()
     csum = jnp.cumsum(residual)
@@ -59,25 +89,38 @@ def residual_walks(edge_dst: jax.Array, out_offsets: jax.Array,
     starts = jnp.clip(starts, 0, n - 1)
 
     deg = jnp.maximum(out_degree, 1).astype(jnp.int32)
+    stop_bound = jnp.floor(alpha * (1 << 30)).astype(jnp.int32)
 
-    def step(carry, step_key):
-        pos, alive = carry
-        k_stop, k_next = jax.random.split(step_key)
-        stop = jax.random.uniform(k_stop, (num_walks,)) < alpha
-        # choose uniform out-neighbor for surviving walkers
-        u_next = jax.random.randint(k_next, (num_walks,), 0, 1 << 30)
-        nbr_idx = out_offsets[pos] + (u_next % deg[pos])
-        nxt = edge_dst[nbr_idx]
+    def advance(pos, alive, u_step):
+        stop = u_step < stop_bound
+        nxt = edge_dst[out_offsets[pos] + (u_step % deg[pos])]
         new_alive = jnp.logical_and(alive, jnp.logical_not(stop))
-        new_pos = jnp.where(new_alive, nxt, pos)
-        return (new_pos, new_alive), None
+        return jnp.where(new_alive, nxt, pos), new_alive
 
-    keys = jax.random.split(k_walk, num_steps)
-    (endpos, _), _ = jax.lax.scan(step, (starts, jnp.ones(num_walks, bool)), keys)
-    weight = r_sum / num_walks
-    return jax.ops.segment_sum(
-        jnp.full((num_walks,), weight, residual.dtype), endpos,
-        num_segments=n)
+    init = (starts, jnp.ones(num_walks, bool))
+    if bulk_rng is None:
+        bulk_rng = num_steps * num_walks <= _BULK_RNG_ELEMS
+    if bulk_rng:
+        us = jax.random.randint(k_walk, (num_steps, num_walks), 0, 1 << 30)
+
+        def step(carry, u_step):
+            return advance(*carry, u_step), None
+
+        (endpos, _), _ = jax.lax.scan(step, init, us)
+    else:
+        def step_keyed(carry, step_key):
+            u_step = jax.random.randint(step_key, (num_walks,), 0, 1 << 30)
+            return advance(*carry, u_step), None
+
+        keys = jax.random.split(k_walk, num_steps)
+        (endpos, _), _ = jax.lax.scan(step_keyed, init, keys)
+    if active_walks is None:
+        weights = jnp.full((num_walks,), r_sum / num_walks, residual.dtype)
+    else:
+        act = jnp.clip(active_walks, 1, num_walks).astype(residual.dtype)
+        lane = jnp.arange(num_walks)
+        weights = jnp.where(lane < act, r_sum / act, 0.0).astype(residual.dtype)
+    return jax.ops.segment_sum(weights, endpos, num_segments=n)
 
 
 def residual_walks_batched(graph: Graph, residual: np.ndarray | jax.Array,
@@ -88,11 +131,13 @@ def residual_walks_batched(graph: Graph, residual: np.ndarray | jax.Array,
     if residual.ndim == 1:
         residual = residual[None, :]
     steps = walk_length_for_tail(alpha, tail)
-    keys = jax.random.split(key, residual.shape[0])
+    B = residual.shape[0]
+    bulk = B * steps * num_walks <= _BULK_RNG_ELEMS
+    keys = jax.random.split(key, B)
     fn = jax.vmap(lambda r, k: residual_walks(
         jnp.asarray(graph.edge_dst), jnp.asarray(graph.out_offsets),
         jnp.asarray(graph.out_degree), r, k, alpha=alpha, n=graph.n,
-        num_walks=num_walks, num_steps=steps))
+        num_walks=num_walks, num_steps=steps, bulk_rng=bulk))
     return WalkResult(endpoint_mass=fn(residual, keys), walks=num_walks)
 
 

@@ -1,0 +1,73 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The tier-1 suite must collect and run on a bare interpreter (hypothesis is
+an *optional* dev dependency, see requirements-dev.txt). This shim keeps the
+property tests meaningful without it: each strategy exposes a small set of
+deterministic boundary examples (min / max / midpoint), and ``given`` runs
+the test body over a capped cartesian product of those examples. With
+hypothesis installed the real library is used instead (see the try/except
+import in each test module) and nothing here executes.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+def _integers(min_value, max_value):
+    mid = (min_value + max_value) // 2
+    return _Strategy(dict.fromkeys([min_value, max_value, mid]))
+
+
+def _floats(min_value, max_value):
+    mid = (min_value + max_value) / 2.0
+    return _Strategy(dict.fromkeys([min_value, max_value, mid]))
+
+
+def _lists(elements, min_size=0, max_size=10):
+    base = elements.examples or [0]
+    short = max(min_size, 1)
+    long = max(min_size, min(max_size, 4))
+    cycled = list(itertools.islice(itertools.cycle(base), long))
+    out = [base[:1] * short, [base[-1]] * long, cycled]
+    if min_size == 0:
+        out.append([])
+    return _Strategy(out)
+
+
+class _StrategiesModule:
+    integers = staticmethod(_integers)
+    floats = staticmethod(_floats)
+    lists = staticmethod(_lists)
+
+
+st = _StrategiesModule()
+strategies = st
+MAX_COMBOS = 32
+
+
+def given(*strats):
+    def decorate(test_fn):
+        def runner():
+            combos = itertools.product(*(s.examples for s in strats))
+            for combo in itertools.islice(combos, MAX_COMBOS):
+                test_fn(*combo)
+
+        runner.__name__ = test_fn.__name__
+        runner.__doc__ = test_fn.__doc__
+        runner.__module__ = test_fn.__module__
+        return runner
+
+    return decorate
+
+
+def settings(**_kwargs):
+    def decorate(test_fn):
+        return test_fn
+
+    return decorate

@@ -6,7 +6,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # optional dev dep (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (BoundReport, InfeasibleDeadline, RuntimeStats,
                         SimulatedTimeSource, build_slot_plan,

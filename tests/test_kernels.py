@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.ell_spmv import ell_spmv_pallas
+from repro.kernels.ell_spmv import ell_spmm_pallas, ell_spmv_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
@@ -50,6 +50,78 @@ def test_ell_spmv_sweep(n, K, block_n):
     out = ell_spmv_pallas(nbr, msk, w, x, block_n=block_n)
     expect = ref.ell_spmv_ref(nbr, msk, x, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,n,K,block_n", [
+    (1, 100, 7, 64),       # K far from a 128 multiple, ragged row tail
+    (5, 130, 130, 64),     # K just past one 128 chunk, n % block_n != 0
+    (5, 300, 33, 128),     # multi-block grid, odd K
+    (1, 64, 200, 32),      # K spanning two chunks at B=1
+    (5, 257, 8, 256),      # single ragged tail row in its own block
+])
+def test_ell_spmm_sweep(B, n, K, block_n):
+    """Batched kernel vs oracle at awkward shapes, incl. zero-degree rows."""
+    ks = jax.random.split(KEY, 4)
+    nbr = jax.random.randint(ks[0], (n, K), 0, n)
+    msk = jax.random.bernoulli(ks[1], 0.7, (n, K))
+    msk = msk.at[0].set(False).at[n // 2].set(False)   # zero-degree rows
+    w = jax.random.normal(ks[2], (n, K))
+    x = jax.random.normal(ks[3], (B, n))
+    out = ell_spmm_pallas(nbr, msk, w, x, block_n=block_n)
+    expect = ref.ell_spmm_ref(nbr, msk, x, w)
+    assert out.shape == (B, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+    assert np.abs(np.asarray(out)[:, [0, n // 2]]).max() == 0.0
+
+
+@pytest.mark.parametrize("B", [1, 5])
+def test_ell_spmm_fused_threshold(B):
+    """threshold fuses FORA's push condition: only x[src] > thr[src]
+    contributes — parity vs oracle and vs explicit masking."""
+    n, K = 150, 19
+    ks = jax.random.split(KEY, 5)
+    nbr = jax.random.randint(ks[0], (n, K), 0, n)
+    msk = jax.random.bernoulli(ks[1], 0.8, (n, K))
+    w = jax.random.normal(ks[2], (n, K))
+    x = jax.random.normal(ks[3], (B, n))
+    thr = jnp.abs(jax.random.normal(ks[4], (n,))) * 0.5
+    out = ell_spmm_pallas(nbr, msk, w, x, thr, block_n=64)
+    expect = ref.ell_spmm_ref(nbr, msk, x, w, threshold=thr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+    masked = jnp.where(x > thr[None, :], x, 0.0)
+    explicit = ref.ell_spmm_ref(nbr, msk, masked, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(explicit),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ell_spmm_batch1_matches_spmv():
+    """The B=1 row of the batched kernel is exactly the SpMV kernel."""
+    n, K = 96, 11
+    ks = jax.random.split(KEY, 4)
+    nbr = jax.random.randint(ks[0], (n, K), 0, n)
+    msk = jax.random.bernoulli(ks[1], 0.7, (n, K))
+    w = jax.random.normal(ks[2], (n, K))
+    x = jax.random.normal(ks[3], (n,))
+    spmm = ell_spmm_pallas(nbr, msk, w, x[None, :], block_n=32)
+    spmv = ell_spmv_pallas(nbr, msk, w, x, block_n=32)
+    np.testing.assert_allclose(np.asarray(spmm[0]), np.asarray(spmv),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_ops_ell_spmm_dispatch():
+    from repro.kernels import ops
+    n, K, B = 80, 9, 3
+    ks = jax.random.split(KEY, 4)
+    nbr = jax.random.randint(ks[0], (n, K), 0, n)
+    msk = jax.random.bernoulli(ks[1], 0.7, (n, K))
+    w = jax.random.normal(ks[2], (n, K))
+    x = jax.random.normal(ks[3], (B, n))
+    out = ops.ell_spmm(nbr, msk, w, x)               # CPU -> oracle path
+    out_forced = ops.ell_spmm(nbr, msk, w, x, force="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_forced),
                                atol=1e-4, rtol=1e-4)
 
 

@@ -7,9 +7,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # optional dev dep (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
-from repro.ppr import (ForaParams, fora, forward_push_np, load,
+from repro.ppr import (DeviceGraph, ForaExecutor, ForaParams, PprWorkload,
+                       fora, fora_fused, forward_push_np, load,
                        monte_carlo_ppr, ppr_power_iteration,
                        small_test_graph)
 from repro.ppr.fora import fora_step
@@ -84,6 +88,72 @@ def test_fora_step_jit_single_shot(graph):
     out = np.asarray(pi)
     assert out.shape == (2, graph.n)
     assert np.allclose(out.sum(axis=1), 1.0, atol=1e-3)
+
+
+# -- fused device-resident hot path (DESIGN.md §7) ---------------------------
+
+def test_device_graph_uploads_once():
+    g = small_test_graph(n=40, avg_deg=4, seed=7)
+    before = DeviceGraph.uploads
+    dg1 = g.device()
+    assert DeviceGraph.uploads == before + 1
+    dg2 = g.device()
+    assert dg2 is dg1                       # cached, no second upload
+    assert DeviceGraph.uploads == before + 1
+    # ELL pull view is consistent with the edge list
+    assert int(np.asarray(dg1.in_mask).sum()) == g.m
+
+
+def test_fora_fused_matches_fora(graph, exact):
+    """Regression: fused path reproduces the legacy fora() within MC
+    tolerance — identical push phase (deterministic) and the same FORA
+    guarantee on the walk phase."""
+    params = ForaParams(alpha=0.2, epsilon=0.5)
+    res = fora(graph, np.array([0, 7, 42]), params, jax.random.PRNGKey(0))
+    fres = fora_fused(graph.device(), np.array([0, 7, 42]), params,
+                      jax.random.PRNGKey(0))
+    # push phase is deterministic: residual mass must match exactly-ish
+    np.testing.assert_allclose(np.asarray(fres.residual_mass),
+                               res.residual_mass, rtol=1e-5)
+    assert int(fres.push_iters) == res.push_iters
+    # walk phase is MC: both must satisfy the eps guarantee vs the oracle
+    pi = np.asarray(fres.pi)
+    delta = 1.0 / graph.n
+    mask = exact >= delta
+    rel = np.abs(pi - exact)[mask] / exact[mask]
+    assert rel.max() < 0.5, f"fused rel err {rel.max()} exceeds eps"
+    assert np.allclose(pi.sum(axis=1), 1.0, atol=1e-3)
+    # on-device pow2 quantisation lands on the same budget the legacy
+    # host-side quantisation picked (same r_sum, same omega)
+    assert np.asarray(fres.walks_effective).max() == res.walks_used
+
+
+def test_fora_fused_no_host_transfer(graph):
+    """The fused query block is one jitted call with zero host syncs between
+    push and walk: with every input device-resident, the whole call runs
+    under jax.transfer_guard('disallow')."""
+    params = ForaParams(alpha=0.2, epsilon=0.5)
+    dg = graph.device()
+    warm_src = jnp.asarray(np.array([0, 7], np.int32))
+    fora_fused(dg, warm_src, params, jax.random.PRNGKey(0), num_walks=2048)
+    srcs = jnp.asarray(np.array([3, 9], np.int32))
+    key = jax.random.PRNGKey(1)
+    with jax.transfer_guard("disallow"):
+        res = fora_fused(dg, srcs, params, key, num_walks=2048)
+    pi = np.asarray(res.pi)                     # readout outside the guard
+    assert pi.shape == (2, graph.n)
+    assert np.allclose(pi.sum(axis=1), 1.0, atol=1e-3)
+
+
+def test_fora_executor_fused_smoke(graph):
+    workload = PprWorkload(graph, num_queries=6, seed=0)
+    ex = ForaExecutor(workload, ForaParams(alpha=0.2, epsilon=0.5),
+                      block_size=2, fused=True)
+    stats = ex(list(range(6)))
+    times = np.asarray(stats.times)
+    assert times.shape == (6,)
+    assert (times > 0).all() and np.isfinite(times).all()
+    assert ex._num_walks is not None and ex._num_walks >= 1
 
 
 @given(st.integers(16, 200), st.floats(2.0, 10.0), st.integers(0, 5))

@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # optional dev dep (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint.store import (AsyncCheckpointer, latest_step, restore,
                                     save)

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 gate + kernel perf snapshot. Run from anywhere:
+#
+#     tools/ci.sh
+#
+# Writes BENCH_kernels.json at the repo root (the per-PR perf trajectory).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.run --only kernels --json BENCH_kernels.json
