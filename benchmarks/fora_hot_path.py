@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.ppr import ForaExecutor, ForaParams, PprWorkload, small_test_graph
 from repro.ppr.forward_push import forward_push_coo
+from repro.ppr.graph import Graph
 from repro.ppr.random_walk import walk_length_for_tail
 
 from .common import emit
@@ -131,6 +132,31 @@ def run(num_queries: int = NUM_QUERIES,
     emit("fora/hot_path_speedup", fused_us,
          f"vs_seed={seed_us / fused_us:.2f}x;"
          f"vs_legacy={legacy_us / fused_us:.2f}x;target_vs_seed>=2x")
+
+    _run_powerlaw()
+
+
+def _run_powerlaw(n: int = 4000, num_queries: int = 64) -> None:
+    """Fused serving on a power-law graph: the sliced-ELL substrate
+    (DESIGN.md §8). The dense (n, k_max) table this shape implies is what
+    blocked web-scale graphs before slicing; the row reports per-query time
+    through the sliced table plus the dense-vs-sliced resident bytes."""
+    rng = np.random.default_rng(0)
+    src = np.concatenate([np.arange(1, n), rng.integers(0, n, 4 * n)])
+    dst = np.concatenate([np.zeros(n - 1, np.int64),
+                          rng.integers(0, n, 4 * n)])
+    graph = Graph.from_edges(n, src, dst, name="powerlaw-hot")
+    dg = graph.device()
+    params = ForaParams(alpha=0.2, epsilon=0.5, delta=1e-2, p_f=1e-2)
+    workload = PprWorkload(graph, num_queries=num_queries, seed=0)
+    ex = ForaExecutor(workload, params, fused=True)
+    us = float(np.mean(ex(list(range(num_queries))).times)) * 1e6
+    dense_mib = graph.ell_in_dense_nbytes() / 2**20
+    sliced_mib = dg.ell_nbytes / 2**20
+    emit("fora/powerlaw_fused_per_query", us,
+         f"n={n};m={graph.m};layout={dg.layout};W={dg.ell_width};"
+         f"sliced_MiB={sliced_mib:.2f};dense_MiB={dense_mib:.2f};"
+         f"walk_budget={ex._num_walks}")
 
 
 if __name__ == "__main__":

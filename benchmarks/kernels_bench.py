@@ -12,9 +12,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.ell_spmv import ell_spmm_pallas, ell_spmv_pallas
+from repro.kernels.ell_spmv import (ell_spmm_pallas, ell_spmm_sliced_pallas,
+                                    ell_spmv_pallas)
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.ppr.graph import Graph
 
 from .common import emit, timed
 
@@ -59,6 +61,33 @@ def run() -> None:
     err = float(jnp.abs(pal - refo).max())
     emit("kernels/ell_spmm_fused_push", us,
          f"maxerr={err:.2e};n={n};K={K};B={Bq}")
+
+    # sliced ELL at a power-law shape (hub in-degree ~ n): the web-scale
+    # serving layout (DESIGN.md §8). Also reports the resident ELL bytes —
+    # dense (n, k_max) vs sliced (n_virtual, W) — so layout regressions
+    # (e.g. a worse width heuristic) fail the tolerance gate on peak MiB.
+    rng = np.random.default_rng(0)
+    n_pl = 4096
+    src = np.concatenate([np.arange(1, n_pl),
+                          rng.integers(0, n_pl, 4 * n_pl)])
+    dst = np.concatenate([np.zeros(n_pl - 1, np.int64),
+                          rng.integers(0, n_pl, 4 * n_pl)])
+    g = Graph.from_edges(n_pl, src, dst, name="powerlaw-bench")
+    sl = g.ell_in_sliced()
+    xp = jax.random.normal(key, (Bq, n_pl))
+    s_nbr, s_msk = jnp.asarray(sl.neighbors), jnp.asarray(sl.mask)
+    s_w, s_map = jnp.asarray(sl.weights), jnp.asarray(sl.row_map)
+    refo, us = timed(lambda: np.asarray(ref.ell_spmm_sliced_ref(
+        s_nbr, s_msk, xp, s_w, row_map=s_map)))
+    pal = ell_spmm_sliced_pallas(s_nbr, s_msk, s_w, s_map, xp)
+    err = float(jnp.abs(pal - refo).max())
+    emit("kernels/ell_spmm_sliced", us,
+         f"maxerr={err:.2e};n={n_pl};W={sl.width};nv={sl.n_virtual};B={Bq}")
+    dense_mib = g.ell_in_dense_nbytes() / 2**20
+    sliced_mib = sl.nbytes / 2**20
+    emit("kernels/ell_peak_mib", sliced_mib * 1e3,   # milli-MiB for precision
+         f"sliced_MiB={sliced_mib:.2f};dense_MiB={dense_mib:.2f};"
+         f"ratio={dense_mib / sliced_mib:.0f}x;n={n_pl};W={sl.width}")
 
     # embedding bag at a DIN-ish shape
     V, d, Bb, L = 50_000, 18, 512, 100

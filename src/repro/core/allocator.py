@@ -82,24 +82,44 @@ class DeviceAllocator:
     def readmit(self, num_queries_left: int, deadline_left: float,
                 stats: RuntimeStats) -> "Admission":
         """Re-run the Lemma-1 admission over the *remaining* work after a
-        failure. If infeasible, compute the minimal deadline extension that
-        restores feasibility (paper §III-A) instead of failing the job."""
+        failure, through the shared :func:`lemma1_lower_bound` (which also
+        rejects ``t_max > T`` and non-positive deadlines — the cases a raw
+        ``X*t_max/T`` ratio silently mis-scores). ``feasible`` is honest: it
+        reports whether the work fits *at the deadline that was asked*; when
+        it does not, the minimal extension restoring feasibility (paper
+        §III-A "prolong the duration") is returned with ``extended=True``
+        instead of failing the job."""
         if num_queries_left <= 0:
             return Admission(feasible=True, cores=0, deadline=deadline_left,
                              extended=False)
-        bound = num_queries_left * stats.t_max / max(deadline_left, 1e-12)
-        need = required_cores(bound)
-        if need <= self.capacity:
-            return Admission(feasible=True, cores=need,
-                             deadline=deadline_left, extended=False)
-        # Minimal T' with X * t_max / T' <= capacity:
-        new_deadline = num_queries_left * stats.t_max / self.capacity
-        return Admission(feasible=True, cores=self.capacity,
+        try:
+            bound = lemma1_lower_bound(num_queries_left, stats.t_max,
+                                       deadline_left)
+        except ValueError:   # t_max > T (InfeasibleDeadline) or T <= 0
+            bound = None
+        if bound is not None:
+            need = required_cores(bound)
+            if need <= self.capacity:
+                return Admission(feasible=True, cores=need,
+                                 deadline=deadline_left, extended=False)
+        # Minimal T' with X * t_max / T' <= capacity (and T' >= t_max so a
+        # single worst-case query fits). The t_max clamp can leave slack, so
+        # re-derive the core need at T' rather than assuming full capacity.
+        new_deadline = max(stats.t_max,
+                           num_queries_left * stats.t_max / self.capacity)
+        cores = required_cores(
+            num_queries_left * stats.t_max / new_deadline)
+        return Admission(feasible=False, cores=cores,
                          deadline=new_deadline, extended=True)
 
 
 @dataclass(frozen=True)
 class Admission:
+    """Outcome of a Lemma-1 readmission check. ``feasible`` refers to the
+    deadline the caller asked about; an infeasible answer still carries the
+    minimal extended deadline (``extended=True``) that would restore
+    feasibility at the current capacity."""
+
     feasible: bool
     cores: int
     deadline: float

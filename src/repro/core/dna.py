@@ -14,8 +14,9 @@ count into an actual device slice of the production mesh.
 
 from __future__ import annotations
 
-from collections.abc import Sequence
 from dataclasses import dataclass, field
+
+import numpy as np
 
 from .bounds import (BoundReport, InfeasibleDeadline, lemma1_lower_bound,
                      required_cores)
@@ -53,6 +54,20 @@ class DnaResult:
         return self.bounds.reduction_vs_lemma2(self.cores)
 
 
+def _draw_sample(rng: np.random.Generator, num_queries: int,
+                 s: int) -> tuple[list[int], list[int]]:
+    """A uniform size-s sample WITHOUT replacement and its complement.
+
+    Eq. 1's premise is a random sample of the query population — the first s
+    ids would bias t_max/t_avg whenever query cost correlates with id order
+    (e.g. sources sorted by degree). Both lists come back sorted for
+    deterministic slot assignment.
+    """
+    sample = np.sort(rng.choice(num_queries, size=s, replace=False))
+    rest = np.setdiff1d(np.arange(num_queries), sample, assume_unique=True)
+    return sample.tolist(), rest.tolist()
+
+
 def dna(
     num_queries: int,
     deadline: float,
@@ -64,17 +79,21 @@ def dna(
     sample_size: int | None = None,
     p_f: float = 0.05,
     max_attempts: int = 3,
+    seed: int | None = 0,
 ) -> DnaResult:
     """Algorithm 1: D&A(X, T).
 
     Line-by-line correspondence:
       L1  sample size s from Eq. 1 (or caller-fixed ``sample_size``)
-      L2  preprocess s queries in parallel on s cores
+      L2  preprocess a RANDOM sample of s queries in parallel on s cores
       L3  t_max over the sample
       L4  ell = floor((T - t_max) / t_max)
       L5  k = ceil((X - s)/ell), slot execution
       L6-7  per-core totals T_j, T_max
       L8-11 accept iff t_max + T_max <= T, else retry (fresh sample)
+
+    ``seed`` drives the sample draws (deterministic per seed); every retry
+    redraws a FRESH sample, so a one-off unlucky draw cannot pin t_max.
     """
     _check_args(num_queries, deadline)
     plan_info = None
@@ -85,12 +104,14 @@ def dna(
     else:
         s = sample_size
     s = min(s, num_queries)
+    rng = np.random.default_rng(seed)
     log: list[str] = [f"s={s}"]
 
     last_exc: Exception | None = None
     for attempt in range(1, max_attempts + 1):
-        # L2-3: preprocess in parallel on s cores -> wall time is t_max.
-        sample_ids = list(range(s))
+        # L2-3: preprocess a fresh random sample in parallel on s cores ->
+        # wall time is t_max.
+        sample_ids, rest_ids = _draw_sample(rng, num_queries, s)
         stats = executor(sample_ids)
         t_max = stats.t_max
         if t_max > deadline:
@@ -119,7 +140,7 @@ def dna(
             continue
         # L5: k queries per slot, executed slot-parallel.
         k = queries_per_slot(remaining, ell)
-        plan = build_slot_plan(range(s, num_queries), ell, k)
+        plan = build_slot_plan(rest_ids, ell, k)
         execution = execute_plan(plan, executor)
         # L7-9: accept iff t_max + T_max <= T.
         t_total = t_max + execution.t_max_core
@@ -127,9 +148,10 @@ def dna(
                    f"t_max={t_max:.6g} T_max={execution.t_max_core:.6g} "
                    f"total={t_total:.6g} T={deadline:.6g}")
         if t_total <= deadline:
-            cores = max(k, s if s <= k else k)  # s<=k assumed; preprocess used s
+            # the answer covers both stages: s cores preprocessed, k slotted
+            cores = max(k, s)
             bounds = BoundReport.from_stats(num_queries, deadline, stats, p_f)
-            return DnaResult(cores=max(cores, s), accepted=True,
+            return DnaResult(cores=cores, accepted=True,
                              deadline=deadline, num_queries=num_queries,
                              sample=plan_info, sample_stats=stats,
                              preprocess_time=t_max, ell=ell, plan=plan,
@@ -150,11 +172,13 @@ def dna_real(
     scaling_factor: float = 1.0,
     p_f: float = 0.05,
     sample_executor: Executor | None = None,
+    seed: int | None = 0,
 ) -> DnaResult:
     """Algorithm 2: D&A_REAL(X, T, C_max).
 
     Line-by-line correspondence:
-      L1   preprocess s samples on c << s cores (c=1 in the paper's runs)
+      L1   preprocess a RANDOM sample of s queries on c << s cores (c=1 in
+           the paper's runs)
       L2   t_max, t_pre = sum t_i, t_avg
       L3   Lemma-1 lower bound C
       L4-5 admission: error if C_max < ceil(C)
@@ -162,6 +186,8 @@ def dna_real(
       L8   k = ceil((X - s)/ell); slot execution with at most k cores
       L9-10 T_j totals, T_max
       L11-14 accept iff t_pre + T_max <= T, else error
+
+    ``seed`` drives the sample draw (deterministic per seed).
     """
     _check_args(num_queries, deadline)
     if not 0.0 < scaling_factor <= 1.0:
@@ -171,11 +197,13 @@ def dna_real(
     if sample_size < 1:
         raise ValueError("sample_size must be >= 1")
     s = min(sample_size, num_queries)
+    rng = np.random.default_rng(seed)
     log: list[str] = [f"s={s} c={preprocess_cores} d={scaling_factor}"]
 
     # L1-2: sample on c cores; wall time is the c-core makespan of the times.
     src = sample_executor if sample_executor is not None else executor
-    stats = src(list(range(s)))
+    sample_ids, rest_ids = _draw_sample(rng, num_queries, s)
+    stats = src(sample_ids)
     t_pre = stats.t_pre_on(preprocess_cores)
     t_avg, t_max = stats.t_avg, stats.t_max
 
@@ -213,7 +241,7 @@ def dna_real(
     if k > max_cores:
         raise InfeasibleDeadline(
             f"k={k} exceeds available cores C_max={max_cores}")
-    plan = build_slot_plan(range(s, num_queries), ell, k)
+    plan = build_slot_plan(rest_ids, ell, k)
     execution = execute_plan(plan, executor)
     t_total = t_pre + execution.t_max_core
     accepted = t_total <= deadline
@@ -244,5 +272,4 @@ def _check_args(num_queries: int, deadline: float) -> None:
 
 
 def _zeros(n: int):
-    import numpy as np
     return np.zeros(n, dtype=np.float64)

@@ -62,7 +62,8 @@ class ElasticController:
             adm = self.allocator.readmit(queries_left, deadline_left, stats)
             event["readmission"] = {"cores": adm.cores,
                                     "deadline": adm.deadline,
-                                    "extended": adm.extended}
+                                    "extended": adm.extended,
+                                    "feasible": adm.feasible}
         self.rescale_events.append(event)
         if self.on_rescale is not None:
             self.on_rescale(len(self.allocator.healthy))
@@ -116,8 +117,12 @@ class HeartbeatMonitor:
 def admission_or_extend(allocator: DeviceAllocator, num_queries: int,
                         deadline: float, stats: RuntimeStats) -> float:
     """The paper's §III-A policy as one call: return a feasible deadline
-    (possibly extended) for the current healthy capacity, or raise."""
+    (possibly extended) for the current healthy capacity, or raise.
+
+    ``Admission.feasible`` now reports feasibility at the *asked* deadline;
+    an infeasible answer with ``extended=True`` carries the minimal restoring
+    extension, which is exactly what this policy adopts."""
     adm = allocator.readmit(num_queries, deadline, stats)
-    if not adm.feasible:
+    if not adm.feasible and not adm.extended:
         raise InfeasibleDeadline("no capacity at any deadline")
     return adm.deadline

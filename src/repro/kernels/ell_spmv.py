@@ -22,6 +22,14 @@ x[nbr] > threshold[nbr], i.e. the kernel consumes the *raw* residual and
 applies front/spread selection in-register instead of materialising
 ``r * front`` in HBM between sweeps.
 
+``ell_spmm_sliced_pallas`` is the power-law-safe variant (DESIGN.md §8): the
+same kernel body runs over *virtual* rows of a sliced ELL table (high-degree
+rows split into width-<=W slices by ``Graph.ell_in_sliced``), and the slice
+partials are folded back onto real rows with a sorted ``segment_sum`` over
+``row_map``. Gather indices are global node ids, so the resident source
+vector, the fused threshold semantics and the kernel body are identical to
+the dense variant — only the row axis is virtualised.
+
 Also used by the GNN SpMM regime (GCN's \\hat{A} X when X is a vector batch).
 Validated in interpret mode against ref.ell_spmv_ref / ref.ell_spmm_ref.
 """
@@ -125,13 +133,25 @@ def ell_spmm_pallas(neighbors, mask, weights, x, threshold=None, *,
     FORA push condition is fused: gathered x[b, src] contributes only where
     it exceeds threshold[src]. Returns (B, n) float32.
     """
-    n, K = neighbors.shape
+    n = neighbors.shape[0]
+    yT = _spmm_virtual_rows(neighbors, mask, weights, x, threshold,
+                            block_n=block_n, interpret=interpret)
+    return yT[:n].T
+
+
+def _spmm_virtual_rows(neighbors, mask, weights, x, threshold, *,
+                       block_n: int, interpret: bool):
+    """The (B, n_rows) SpMM over an arbitrary row table whose gather indices
+    address the full (n,)-resident x — shared by the dense and sliced
+    wrappers. Returns yT (n_rows_padded, B) float32 (padding rows trail)."""
+    n_rows, K = neighbors.shape
+    n = x.shape[1]
     B = x.shape[0]
     chunk = 128
     Kp = -(-K // chunk) * chunk
-    bn = min(block_n, n)
-    nb = -(-n // bn)
-    n_pad = nb * bn - n
+    bn = min(block_n, n_rows)
+    nb = -(-n_rows // bn)
+    n_pad = nb * bn - n_rows
     if Kp != K:
         neighbors = jnp.pad(neighbors, ((0, 0), (0, Kp - K)))
         mask = jnp.pad(mask, ((0, 0), (0, Kp - K)))
@@ -146,7 +166,7 @@ def ell_spmm_pallas(neighbors, mask, weights, x, threshold=None, *,
         threshold = jnp.zeros((n,), jnp.float32)
     kernel = functools.partial(_ell_spmm_kernel, k_chunks=Kp // chunk,
                                chunk=chunk, fuse_threshold=fuse)
-    yT = pl.pallas_call(
+    return pl.pallas_call(
         kernel,
         grid=(nb,),
         in_specs=[
@@ -161,4 +181,25 @@ def ell_spmm_pallas(neighbors, mask, weights, x, threshold=None, *,
         interpret=interpret,
     )(neighbors, mask, weights.astype(jnp.float32),
       x.astype(jnp.float32).T, threshold.astype(jnp.float32))
-    return yT[:n].T
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "interpret"))
+def ell_spmm_sliced_pallas(neighbors, mask, weights, row_map, x,
+                           threshold=None, *, block_n: int = 256,
+                           interpret: bool = True):
+    """Sliced-ELL pull-form SpMM (DESIGN.md §8).
+
+    neighbors/mask/weights: (n_virtual, W) — virtual rows from
+    ``Graph.ell_in_sliced``; ``row_map`` (n_virtual,) int32 (ascending) maps
+    each virtual row to its real row; x: (B, n). The kernel computes per-
+    virtual-row partials exactly like :func:`ell_spmm_pallas`, then folds
+    them onto real rows with a sorted ``segment_sum``. Returns (B, n).
+    """
+    n_virtual = neighbors.shape[0]
+    n = x.shape[1]
+    yT = _spmm_virtual_rows(neighbors, mask, weights, x, threshold,
+                            block_n=block_n, interpret=interpret)
+    folded = jax.ops.segment_sum(yT[:n_virtual], row_map, num_segments=n,
+                                 indices_are_sorted=True)
+    return folded.T

@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 
 from . import ref
-from .ell_spmv import ell_spmm_pallas, ell_spmv_pallas
+from .ell_spmv import (ell_spmm_pallas, ell_spmm_sliced_pallas,
+                       ell_spmv_pallas)
 from .embedding_bag import embedding_bag_pallas
 from .flash_attention import flash_attention_pallas
 
@@ -48,6 +49,19 @@ def ell_spmm(neighbors, mask, weights, x, *, threshold=None,
         return ell_spmm_pallas(neighbors, mask, weights, x, threshold,
                                interpret=not _on_tpu())
     return ref.ell_spmm_ref(neighbors, mask, x, weights, threshold)
+
+
+def ell_spmm_sliced(neighbors, mask, weights, row_map, x, *, threshold=None,
+                    force: str | None = None):
+    """Sliced-ELL batched SpMM: virtual rows (n_virtual, W) + ``row_map``
+    fold-back (DESIGN.md §8); drop-in for :func:`ell_spmm` on graphs whose
+    dense (n, k_max) table would not fit memory."""
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if use_pallas:
+        return ell_spmm_sliced_pallas(neighbors, mask, weights, row_map, x,
+                                      threshold, interpret=not _on_tpu())
+    return ref.ell_spmm_sliced_ref(neighbors, mask, x, weights, threshold,
+                                   row_map)
 
 
 def embedding_bag(table, ids, weights, *, force: str | None = None):

@@ -66,6 +66,27 @@ def ell_spmm_ref(neighbors, mask, x, weights=None, threshold=None):
     return jnp.einsum("nk,bnk->bn", w, gathered)
 
 
+def ell_spmm_sliced_ref(neighbors, mask, x, weights=None, threshold=None,
+                        row_map=None):
+    """Sliced-ELL pull-form SpMM (DESIGN.md §8): virtual-row partials via
+    :func:`ell_spmm_ref` (gather indices are global node ids, so the dense
+    oracle applies row-wise unchanged), folded onto the real rows with a
+    ``segment_sum`` over ``row_map``.
+
+        y[b, i] = sum_{v: row_map[v]=i} sum_j mask[v,j]*w[v,j]*f(x[b, nbr[v,j]])
+
+    neighbors/mask/weights: (n_virtual, W); row_map: (n_virtual,) int32
+    ascending; x: (B, n). Returns (B, n).
+    """
+    if row_map is None:
+        raise ValueError("row_map is required for the sliced oracle")
+    partials = ell_spmm_ref(neighbors, mask, x, weights, threshold)  # (B, nv)
+    folded = jax.ops.segment_sum(partials.T, row_map,
+                                 num_segments=x.shape[1],
+                                 indices_are_sorted=True)
+    return folded.T
+
+
 def embedding_bag_ref(table, ids, weights=None):
     """EmbeddingBag(sum): out[b] = sum_l w[b,l] * table[ids[b,l]].
 

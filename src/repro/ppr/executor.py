@@ -63,6 +63,7 @@ class ForaExecutor:
     block_size: int = 1            # 1 = paper-faithful
     fused: bool = True             # device-resident single-jit hot path
     walk_safety: float = 1.0       # calibration headroom on the probe r_sum
+    ell_layout: str = "auto"       # auto|dense|sliced push table (DESIGN §8)
     _warmed: bool = field(default=False, init=False)
     calls: int = field(default=0, init=False)
     _device_graph: DeviceGraph | None = field(default=None, init=False,
@@ -120,7 +121,12 @@ class ForaExecutor:
             return
         if self.fused:
             if self._device_graph is None:
-                self._device_graph = self.workload.graph.device()
+                # "auto" reuses the graph's cached upload-once mirror; a
+                # forced layout builds its own device copy for this executor
+                self._device_graph = (
+                    self.workload.graph.device() if self.ell_layout == "auto"
+                    else DeviceGraph.from_graph(self.workload.graph,
+                                                layout=self.ell_layout))
             if self._num_walks is None:
                 self._num_walks = self._calibrate_walk_budget()
         for qid in self._probe_qids():

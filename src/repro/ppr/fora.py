@@ -130,20 +130,22 @@ def default_walk_budget(rp: ResolvedFora) -> int:
     return _pow2_ceil_host(min(rp.max_walks, math.ceil(rp.omega)))
 
 
-def _fora_fused_impl(in_neighbors, in_mask, in_weights, edge_dst, out_offsets,
-                     out_degree, sources, key, *, alpha: float, rmax: float,
-                     omega: float, n: int, num_walks: int, num_steps: int,
-                     max_push_iters: int, force: str | None = None):
+def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
+                     out_offsets, out_degree, sources, key, *, alpha: float,
+                     rmax: float, omega: float, n: int, num_walks: int,
+                     num_steps: int, max_push_iters: int,
+                     force: str | None = None):
     """The whole FORA query block as ONE executable: seed construction,
-    frontier push (pull-form ELL SpMM), pow2 walk-budget quantisation and
-    the residual walks all stay on device. See DESIGN.md §7 for the
-    host<->device dataflow."""
+    frontier push (pull-form ELL SpMM, dense or sliced view), pow2
+    walk-budget quantisation and the residual walks all stay on device.
+    See DESIGN.md §7 for the host<->device dataflow."""
     B = sources.shape[0]
     seeds = jnp.zeros((B, n), jnp.float32).at[
         jnp.arange(B), sources].set(1.0)
     push = forward_push(in_neighbors, in_mask, in_weights, out_degree, seeds,
                         alpha=alpha, rmax=rmax, n=n,
-                        max_iters=max_push_iters, force=force)
+                        max_iters=max_push_iters, row_map=in_row_map,
+                        force=force)
     r_sum = push.r.sum(axis=1)                               # (B,)
     # FORA budget ceil(r_sum * omega), quantised UP to the next power of two
     # on device (mirrors the host-side quantisation of fora()) and clipped to
@@ -204,8 +206,8 @@ def fora_fused(dg: DeviceGraph, sources, params: ForaParams = ForaParams(),
         sources = jnp.asarray(sources).astype(jnp.int32).reshape(-1)
         fused_fn = _fora_fused
     pi, r_sum, iters, w_eff = fused_fn(
-        dg.in_neighbors, dg.in_mask, dg.in_weights, dg.edge_dst,
-        dg.out_offsets, dg.out_degree, sources, key,
+        dg.in_neighbors, dg.in_mask, dg.in_weights, dg.in_row_map,
+        dg.edge_dst, dg.out_offsets, dg.out_degree, sources, key,
         alpha=rp.alpha, rmax=rp.rmax, omega=rp.omega, n=dg.n,
         num_walks=num_walks, num_steps=steps, max_push_iters=10_000,
         force=force)

@@ -11,8 +11,9 @@ we relax **every** above-threshold node per iteration:
 
 The relaxation is the *pull-form* ELL SpMM (DESIGN.md §5): each sweep is one
 ``kernels.ops.ell_spmm`` over the padded in-neighbor table with weights
-1/deg_out(src), under ``jax.lax.while_loop`` until no node is above threshold
-(or ``max_iters``). On the Pallas path the push condition itself is fused
+1/deg_out(src) — or ``ell_spmm_sliced`` when the graph's DeviceGraph carries
+a sliced table (``row_map`` set; power-law graphs, DESIGN.md §8) — under
+``jax.lax.while_loop`` until no node is above threshold (or ``max_iters``). On the Pallas path the push condition itself is fused
 into the kernel via the ``threshold`` argument — the kernel gathers the raw
 residual and zeroes below-threshold sources in-register, so ``r * front``
 never round-trips through HBM between sweeps.
@@ -62,12 +63,14 @@ class PushResult(NamedTuple):
 def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
                  in_weights: jax.Array, out_degree: jax.Array,
                  seeds: jax.Array, *, alpha: float, rmax: float, n: int,
-                 max_iters: int = 10_000,
+                 max_iters: int = 10_000, row_map: jax.Array | None = None,
                  force: str | None = None) -> PushResult:
     """Batched frontier push over the pull-form ELL view.
 
     ``in_neighbors``/``in_mask``/``in_weights`` are the (n, K) padded
-    in-neighbor table from :meth:`Graph.ell_in` (weights 1/deg_out(src));
+    in-neighbor table from :meth:`Graph.ell_in` (weights 1/deg_out(src)) —
+    or, with ``row_map`` (n_virtual,), the sliced (n_virtual, W) table from
+    :meth:`Graph.ell_in_sliced`, consumed transparently (DESIGN.md §8);
     ``seeds`` is (B, n) one-hot (or any residual). Returns (pi, r) with the
     FORA invariant; every residual entry satisfies r(v) <= rmax * deg_out(v)
     on normal termination.
@@ -85,9 +88,14 @@ def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
         pi = state.pi + alpha * state.r * front
         # one pull-form SpMM == P^T (r * front); the kernel applies the
         # push condition to the gathered residual itself (fused threshold)
-        moved = (1.0 - alpha) * ops.ell_spmm(
-            in_neighbors, in_mask, in_weights, state.r,
-            threshold=threshold, force=force)
+        if row_map is None:
+            moved = ops.ell_spmm(in_neighbors, in_mask, in_weights, state.r,
+                                 threshold=threshold, force=force)
+        else:
+            moved = ops.ell_spmm_sliced(in_neighbors, in_mask, in_weights,
+                                        row_map, state.r,
+                                        threshold=threshold, force=force)
+        moved = (1.0 - alpha) * moved
         r = state.r * (1.0 - front) + moved
         return PushState(pi=pi, r=r, iters=state.iters + 1)
 
@@ -144,4 +152,5 @@ def forward_push_np(graph: Graph, sources: np.ndarray, *, alpha: float,
     seeds[np.arange(sources.size), sources] = 1.0
     return forward_push(dg.in_neighbors, dg.in_mask, dg.in_weights,
                         dg.out_degree, jnp.asarray(seeds), alpha=alpha,
-                        rmax=rmax, n=graph.n, max_iters=max_iters)
+                        rmax=rmax, n=graph.n, max_iters=max_iters,
+                        row_map=dg.in_row_map)

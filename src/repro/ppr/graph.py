@@ -14,22 +14,62 @@ self-loop at construction so both push and walk semantics are total):
   kernels. ``ell()`` is the out-neighbor view; ``ell_in()`` is the pull-form
   in-neighbor view (rows indexed by destination, weights 1/deg_out(src))
   that turns a push sweep into one SpMM (DESIGN.md §5).
+* **Sliced ELL** — ``ell_in_sliced()``: the power-law-safe variant of
+  ``ell_in``. Rows with in-degree > W are split into ceil(deg/W) *virtual*
+  rows of width <= W; ``row_map (n_virtual,) int32`` points each virtual row
+  back at its real row, and the SpMM combines slice partials with a
+  ``segment_sum``. Memory is O(m + n_virtual·W) instead of O(n·k_max) — on
+  LiveJournal-class graphs (max in-degree in the tens of thousands) that is
+  the difference between tens of GiB and a CSR-sized table (DESIGN.md §8).
 
 All index arrays are int32 (TPU-native); n and m up to ~2^31.
 
 ``DeviceGraph`` (via ``Graph.device()``) is the upload-once device-resident
 mirror: CSR + pull-ELL arrays are put on device exactly once per Graph and
 reused by every query of a workload — the fused FORA hot path (DESIGN.md §7)
-never re-transfers graph structure.
+never re-transfers graph structure. The mirror picks the dense or sliced ELL
+layout automatically from the degree distribution (``layout="auto"``).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import cached_property
-from typing import Any, ClassVar
+from typing import Any, ClassVar, NamedTuple
 
 import numpy as np
+
+
+def _round_up(v: int, multiple: int) -> int:
+    return max(multiple, ((v + multiple - 1) // multiple) * multiple)
+
+
+class SlicedEll(NamedTuple):
+    """Sliced pull-form ELL view: high-degree rows split into virtual rows.
+
+    ``neighbors``/``mask``/``weights`` are (n_virtual, width); ``row_map``
+    (n_virtual,) int32 maps each virtual row to its real destination row and
+    is sorted ascending (slices of one row are contiguous), so the SpMM
+    combine is a sorted ``segment_sum``. Real rows with in-degree 0
+    contribute no virtual row — the segment combine leaves them at 0.
+    """
+
+    neighbors: np.ndarray   # (n_virtual, width) int32, global source ids
+    mask: np.ndarray        # (n_virtual, width) bool
+    weights: np.ndarray     # (n_virtual, width) f32, 1/deg_out(src)
+    row_map: np.ndarray     # (n_virtual,) int32, ascending
+    width: int              # W — slice width (lane-aligned)
+    n: int                  # real row count the view folds back into
+
+    @property
+    def n_virtual(self) -> int:
+        return int(self.neighbors.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the sliced table (+ row_map)."""
+        return (self.neighbors.nbytes + self.mask.nbytes
+                + self.weights.nbytes + self.row_map.nbytes)
 
 
 @dataclass(frozen=True)
@@ -93,7 +133,8 @@ class Graph:
         K = self.max_out_degree if k_max is None else k_max
         if K < self.max_out_degree:
             raise ValueError(f"k_max={K} < max out-degree {self.max_out_degree}"
-                             " — split high-degree rows before calling ell()")
+                             " — high-degree rows need the sliced layout "
+                             "(see ell_in_sliced for the pull view)")
         K = max(pad_multiple, ((K + pad_multiple - 1) // pad_multiple) * pad_multiple)
         neighbors = np.zeros((self.n, K), dtype=np.int32)
         mask = np.zeros((self.n, K), dtype=bool)
@@ -107,9 +148,12 @@ class Graph:
         return neighbors, mask
 
     @cached_property
+    def in_degree(self) -> np.ndarray:
+        return np.bincount(self.edge_dst, minlength=self.n).astype(np.int32)
+
+    @cached_property
     def max_in_degree(self) -> int:
-        return int(np.bincount(self.edge_dst, minlength=self.n).max()) \
-            if self.m else 0
+        return int(self.in_degree.max()) if self.m else 0
 
     def ell_in(self, pad_multiple: int = 8
                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -138,6 +182,83 @@ class Graph:
         inv_deg = 1.0 / np.maximum(self.out_degree, 1).astype(np.float32)
         weights = inv_deg[neighbors] * mask
         return neighbors, mask, weights.astype(np.float32)
+
+    def ell_in_dense_nbytes(self, pad_multiple: int = 8) -> int:
+        """Resident bytes :meth:`ell_in` *would* allocate — computed without
+        materialising it, so web-scale infeasibility can be detected (and
+        benchmarked) before an allocation that would OOM."""
+        K = _round_up(self.max_in_degree if self.m else 1, pad_multiple)
+        # int32 neighbors + bool mask + f32 weights per cell
+        return self.n * K * (4 + 1 + 4)
+
+    def _sliced_width_cells(self, pad_multiple: int = 8) -> tuple[int, int]:
+        """(width, padded cell count) minimising the sliced-table area —
+        the single source of the cost formula used by both the width
+        heuristic and the DeviceGraph auto-layout policy."""
+        if pad_multiple < 1:
+            raise ValueError("pad_multiple must be >= 1")
+        dense_w = _round_up(self.max_in_degree if self.m else 1, pad_multiple)
+        deg = self.in_degree.astype(np.int64)
+        candidates = []
+        w = pad_multiple
+        while w < dense_w:
+            candidates.append(w)
+            w *= 2
+        candidates.append(dense_w)
+        costs = {W: int(np.ceil(deg / W).sum()) * W for W in candidates}
+        best = min(candidates, key=lambda W: (costs[W], W))
+        return best, costs[best]
+
+    def sliced_ell_width(self, pad_multiple: int = 8) -> int:
+        """Slice width W minimising the padded sliced-table area.
+
+        Candidates are ``pad_multiple * 2^j`` (lane-aligned, geometric — the
+        cost landscape is smooth enough that power-of-two steps find the
+        basin) plus the dense width itself; cost(W) = sum_i ceil(deg_in(i)/W)
+        * W, the cell count of the resulting (n_virtual, W) table. Ties go to
+        the smaller W (less VMEM per row block).
+        """
+        return self._sliced_width_cells(pad_multiple)[0]
+
+    def ell_in_sliced(self, width: int | None = None,
+                      pad_multiple: int = 8) -> SlicedEll:
+        """Power-law-safe pull-form ELL: rows wider than ``width`` are split.
+
+        Same semantics as :meth:`ell_in` after folding virtual rows back
+        through ``row_map`` with a segment sum; memory is O(m + n_virtual·W)
+        instead of O(n·k_max). ``width=None`` applies
+        :meth:`sliced_ell_width`'s area-minimising heuristic.
+        """
+        W = self.sliced_ell_width(pad_multiple) if width is None \
+            else _round_up(width, pad_multiple)
+        order = np.argsort(self.edge_dst, kind="stable")
+        src_s = self.edge_src[order]
+        dst_s = self.edge_dst[order]
+        in_deg = self.in_degree.astype(np.int64)
+        slices = -(-in_deg // W)                       # ceil; 0 for deg-0 rows
+        n_virtual = int(slices.sum())
+        if n_virtual == 0:                             # edgeless graph
+            return SlicedEll(neighbors=np.zeros((1, W), np.int32),
+                             mask=np.zeros((1, W), bool),
+                             weights=np.zeros((1, W), np.float32),
+                             row_map=np.zeros(1, np.int32), width=W, n=self.n)
+        voff = np.zeros(self.n + 1, dtype=np.int64)    # first virtual row of i
+        np.cumsum(slices, out=voff[1:])
+        row_map = np.repeat(np.arange(self.n, dtype=np.int32),
+                            slices).astype(np.int32)
+        off = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(in_deg, out=off[1:])
+        pos = np.arange(self.m, dtype=np.int64) - off[dst_s]  # rank in row
+        vrow = voff[dst_s] + pos // W
+        vpos = pos % W
+        neighbors = np.zeros((n_virtual, W), dtype=np.int32)
+        mask = np.zeros((n_virtual, W), dtype=bool)
+        neighbors[vrow, vpos] = src_s
+        mask[vrow, vpos] = True
+        inv_deg = 1.0 / np.maximum(self.out_degree, 1).astype(np.float32)
+        weights = (inv_deg[neighbors] * mask).astype(np.float32)
+        return SlicedEll(neighbors=neighbors, mask=mask, weights=weights,
+                         row_map=row_map, width=W, n=self.n)
 
     @cached_property
     def _device(self) -> "DeviceGraph":
@@ -196,6 +317,12 @@ class DeviceGraph:
     in_weights, weights = 1/deg_out(src)). Built exactly once per Graph via
     ``Graph.device()``; ``DeviceGraph.uploads`` counts constructions so tests
     and benchmarks can assert the upload-once contract.
+
+    The push view is either the dense ``(n, k_max)`` table
+    (``in_row_map is None``) or the sliced ``(n_virtual, W)`` table with its
+    ``row_map`` (DESIGN.md §8). ``layout="auto"`` slices only when the dense
+    table would waste >= ``AUTO_SLICE_RATIO`` x the sliced cells — power-law
+    graphs slice, small near-uniform test graphs keep the dense fast path.
     """
 
     n: int
@@ -207,14 +334,49 @@ class DeviceGraph:
     in_neighbors: Any
     in_mask: Any
     in_weights: Any
+    in_row_map: Any = None     # (n_virtual,) int32 on device, or None (dense)
+    ell_width: int = 0         # K of the resident table (dense or sliced)
 
     uploads: ClassVar[int] = 0
+    AUTO_SLICE_RATIO: ClassVar[float] = 4.0
+
+    @property
+    def layout(self) -> str:
+        return "dense" if self.in_row_map is None else "sliced"
+
+    @property
+    def ell_nbytes(self) -> int:
+        """Resident bytes of the device push table (+ row_map when sliced)."""
+        arrays = (self.in_neighbors, self.in_mask, self.in_weights,
+                  self.in_row_map)
+        return int(sum(a.size * a.dtype.itemsize
+                       for a in arrays if a is not None))
 
     @classmethod
-    def from_graph(cls, graph: Graph) -> "DeviceGraph":
+    def from_graph(cls, graph: Graph, *, layout: str = "auto",
+                   width: int | None = None,
+                   pad_multiple: int = 8) -> "DeviceGraph":
         import jax.numpy as jnp  # deferred: graph.py stays importable sans jax
 
-        nbr, mask, weights = graph.ell_in()
+        if layout not in ("auto", "dense", "sliced"):
+            raise ValueError(f"layout must be auto|dense|sliced, got {layout!r}")
+        if layout == "auto":
+            sl_width, sliced_cells = graph._sliced_width_cells(pad_multiple)
+            dense_cells = graph.n * _round_up(
+                graph.max_in_degree if graph.m else 1, pad_multiple)
+            layout = "sliced" if dense_cells >= cls.AUTO_SLICE_RATIO * \
+                max(1, sliced_cells) else "dense"
+            if width is None:
+                width = sl_width          # reuse the scan's answer
+        if layout == "sliced":
+            sl = graph.ell_in_sliced(width=width, pad_multiple=pad_multiple)
+            nbr, mask, weights = sl.neighbors, sl.mask, sl.weights
+            row_map = jnp.asarray(sl.row_map)
+            ell_width = sl.width
+        else:
+            nbr, mask, weights = graph.ell_in(pad_multiple=pad_multiple)
+            row_map = None
+            ell_width = int(nbr.shape[1])
         DeviceGraph.uploads += 1
         return cls(
             n=graph.n, m=graph.m,
@@ -225,4 +387,6 @@ class DeviceGraph:
             in_neighbors=jnp.asarray(nbr),
             in_mask=jnp.asarray(mask),
             in_weights=jnp.asarray(weights),
+            in_row_map=row_map,
+            ell_width=ell_width,
         )

@@ -11,8 +11,8 @@ try:
 except ModuleNotFoundError:          # optional dev dep (requirements-dev.txt)
     from _hypothesis_fallback import given, settings, st
 
-from repro.core import (BoundReport, InfeasibleDeadline, RuntimeStats,
-                        SimulatedTimeSource, build_slot_plan,
+from repro.core import (BoundReport, DeviceAllocator, InfeasibleDeadline,
+                        RuntimeStats, SimulatedTimeSource, build_slot_plan,
                         cochran_sample_size, dna, dna_real, execute_plan,
                         fraction_sample_size, lemma1_lower_bound,
                         lemma2_hoeffding_bound, num_slots, queries_per_slot,
@@ -198,3 +198,108 @@ def test_smaller_d_never_fewer_cores():
 def test_required_cores_ceil():
     assert required_cores(3.01) == 4
     assert required_cores(0.0) == 1
+
+
+# ---------------------------------------------------------------------------
+# sampling / admission correctness regressions (ISSUE 2)
+
+
+class _RecordingExecutor:
+    """Wraps an executor and records every id block it is asked to run."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.calls: list[list[int]] = []
+
+    def __call__(self, ids):
+        ids = list(ids)
+        self.calls.append(ids)
+        return self.inner(ids)
+
+
+def test_dna_preprocesses_a_random_sample():
+    """Regression: the preprocessing sample must be a seeded random draw
+    without replacement — not the first s query ids (which bias t_max/t_avg
+    whenever cost correlates with id order, against Eq. 1's premise)."""
+    ex = _RecordingExecutor(_executor(mean=0.01, cv=0.1, seed=0))
+    res = dna(500, deadline=5.0, executor=ex, sample_size=20, seed=123)
+    sample = ex.calls[0]
+    assert len(sample) == 20 and len(set(sample)) == 20
+    assert all(0 <= q < 500 for q in sample)
+    assert sample != list(range(20))
+    # sample + slotted remainder partition the workload exactly
+    slotted = [q for slot in res.plan.slots for q in slot]
+    assert sorted(sample + slotted) == list(range(500))
+
+
+def test_dna_retry_redraws_fresh_sample():
+    """Regression: a deadline-missing attempt must NOT re-execute the same
+    sample ids — the docstring's "retry (fresh sample)" is a redraw."""
+    inner = _executor(mean=0.01, cv=0.1, seed=1)
+    calls: list[list[int]] = []
+
+    def ex(ids):
+        ids = list(ids)
+        calls.append(ids)
+        if len(calls) == 1:               # poison only the first attempt
+            return RuntimeStats(np.full(len(ids), 99.0))   # t_max > T
+        return inner(ids)
+
+    res = dna(300, deadline=5.0, executor=ex, sample_size=15, seed=7)
+    assert res.attempts == 2
+    assert calls[0] != calls[1], "retry re-executed the same sample"
+    assert len(set(calls[1])) == 15
+
+
+def test_dna_sample_deterministic_per_seed():
+    ex_a = _RecordingExecutor(_executor(mean=0.01, cv=0.1, seed=3))
+    ex_b = _RecordingExecutor(_executor(mean=0.01, cv=0.1, seed=3))
+    res_a = dna(200, deadline=5.0, executor=ex_a, sample_size=10, seed=42)
+    res_b = dna(200, deadline=5.0, executor=ex_b, sample_size=10, seed=42)
+    assert ex_a.calls[0] == ex_b.calls[0]
+    assert res_a.cores == res_b.cores
+
+
+def test_dna_real_preprocesses_a_random_sample():
+    ex = _RecordingExecutor(_executor(mean=0.01, cv=0.1, seed=5))
+    res = dna_real(400, deadline=10.0, executor=ex, max_cores=64,
+                   sample_size=25, seed=9)
+    sample = ex.calls[0]
+    assert len(sample) == 25 and len(set(sample)) == 25
+    assert sample != list(range(25))
+    slotted = [q for slot in res.plan.slots for q in slot]
+    assert sorted(sample + slotted) == list(range(400))
+
+
+def test_readmit_honest_feasibility():
+    """Regression: readmit routes through lemma1_lower_bound (t_max > T and
+    T <= 0 are infeasible, not ratio-masked) and reports feasible=False when
+    the asked deadline does not hold — with the minimal §III-A extension."""
+    alloc = DeviceAllocator(devices=list(range(4)), spares_fraction=0.0)
+    stats = RuntimeStats(np.full(5, 1.0))
+    ok = alloc.readmit(2, 10.0, stats)
+    assert ok.feasible and not ok.extended and ok.cores == 1
+    bad = alloc.readmit(100, 1.0, stats)
+    assert not bad.feasible and bad.extended
+    assert bad.deadline == pytest.approx(25.0)
+    assert bad.cores == 4                    # full capacity genuinely needed
+    # t_max exceeds the deadline: the raw X*t_max/T ratio can still be small
+    # (here 1*1/0.5 = 2 <= 4 cores) — the shared bound rejects it instead
+    tight = alloc.readmit(1, 0.5, stats)
+    assert not tight.feasible and tight.extended
+    assert tight.deadline >= stats.t_max
+    assert tight.cores == 1                  # one query fits one core at T'
+    # non-positive deadline is no longer masked by max(deadline, 1e-12)
+    zero = alloc.readmit(10, 0.0, stats)
+    assert not zero.feasible and zero.extended and zero.deadline >= 2.5
+    done = alloc.readmit(0, 1.0, stats)
+    assert done.feasible and done.cores == 0
+
+
+def test_admission_or_extend_adopts_extension():
+    from repro.ft.elastic import admission_or_extend
+
+    alloc = DeviceAllocator(devices=list(range(4)), spares_fraction=0.0)
+    stats = RuntimeStats(np.full(5, 1.0))
+    assert admission_or_extend(alloc, 4, 10.0, stats) == 10.0
+    assert admission_or_extend(alloc, 100, 1.0, stats) == pytest.approx(25.0)

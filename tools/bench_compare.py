@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate: compare fresh run(s) against the committed
+baseline JSON (all produced by ``benchmarks/run.py --json``).
+
+    python tools/bench_compare.py BASELINE FRESH [FRESH2 ...]
+                                  [--tol 2.0] [--merged-out PATH]
+
+Rules:
+* every fresh run must have recorded zero suite failures;
+* multiple fresh files are min-merged per row first — the per-call floor
+  across independent process runs is the noise-robust statistic on a loaded
+  box (each row is already a min-of-repeats within its run, see
+  ``benchmarks.common.timed``);
+* every row present in BOTH baseline and merge must satisfy
+  ``new <= tol * old`` (``old`` also gates deterministic values like
+  resident MiB, where any growth past the band is a layout regression);
+* rows only on one side are informational (new benchmarks land with their
+  first baseline; retired ones drop out);
+* aggregate ``suite/*`` rows are informational only (they fold compile time
+  and machine load into one number — the per-kernel rows are the gate);
+* a missing baseline file passes with a note (first run of a trajectory);
+* ``--merged-out`` writes the min-merged measurement set as the next
+  baseline candidate.
+
+Exit code 0 = gate passed, 1 = regression (or fresh failures).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_by_name(payload: dict) -> dict[str, dict]:
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh", nargs="+")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_TOL", "2.0")),
+                    help="fail when new > tol * old (default 2.0, or "
+                         "$BENCH_TOL)")
+    ap.add_argument("--merged-out", default="",
+                    help="write the min-merged fresh rows to this path")
+    args = ap.parse_args()
+    if args.tol <= 1.0:
+        ap.error("--tol must be > 1.0")
+
+    merged: dict[str, dict] = {}
+    failures = 0
+    for path in args.fresh:
+        payload = load(path)
+        failures += int(payload.get("failures", 0))
+        for name, row in rows_by_name(payload).items():
+            if name not in merged or \
+                    row["us_per_call"] < merged[name]["us_per_call"]:
+                merged[name] = row
+    if args.merged_out:
+        with open(args.merged_out, "w") as f:
+            json.dump({"rows": list(merged.values()), "failures": failures},
+                      f, indent=2)
+            f.write("\n")
+    if failures:
+        print(f"bench_compare: FRESH RUN(S) RECORDED {failures} SUITE "
+              "FAILURE(S) — gate fails")
+        return 1
+
+    if not os.path.exists(args.baseline):
+        print(f"bench_compare: no baseline at {args.baseline} — "
+              "first run, gate passes")
+        return 0
+    base = {n: float(r["us_per_call"])
+            for n, r in rows_by_name(load(args.baseline)).items()}
+
+    regressions: list[str] = []
+    for name in sorted(set(base) | set(merged)):
+        if name not in merged:
+            print(f"  {name}: retired (baseline only)")
+            continue
+        new = float(merged[name]["us_per_call"])
+        if name not in base:
+            print(f"  {name}: new (no baseline yet) = {new:.1f}")
+            continue
+        old = base[name]
+        if old <= 0:
+            print(f"  {name}: baseline <= 0, skipped")
+            continue
+        ratio = new / old
+        gated = not name.startswith("suite/")
+        bad = gated and ratio > args.tol
+        tag = "REGRESSION" if bad else ("info" if not gated else "ok")
+        print(f"  {name}: {old:.1f} -> {new:.1f} ({ratio:.2f}x) {tag}")
+        if bad:
+            regressions.append(f"{name} {ratio:.2f}x > {args.tol:.2f}x")
+    if regressions:
+        print("bench_compare: FAILED —")
+        for r in regressions:
+            print(f"  {r}")
+        return 1
+    print(f"bench_compare: gate passed (tol {args.tol:.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

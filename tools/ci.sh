@@ -1,13 +1,36 @@
 #!/usr/bin/env bash
-# Tier-1 gate + kernel perf snapshot. Run from anywhere:
+# Tier-1 gate + kernel perf snapshot with a regression gate. Run from
+# anywhere:
 #
 #     tools/ci.sh
 #
-# Writes BENCH_kernels.json at the repo root (the per-PR perf trajectory).
+# The kernel bench runs TWICE and the per-row minima (each row is already a
+# min-of-repeats, benchmarks/common.py) are compared against the COMMITTED
+# BENCH_kernels.json baseline (git HEAD when available, else the working-tree
+# file) through tools/bench_compare.py with a tolerance band ($BENCH_TOL,
+# default 2.0x), FAILING the build on regression. Comparing against the
+# committed file — not the last run's output — keeps repeated sub-tolerance
+# slowdowns from ratcheting past the band unnoticed. On a passing run the
+# working-tree baseline is refreshed with the min-merge; committing it
+# records the per-PR perf trajectory.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
-python -m benchmarks.run --only kernels --json BENCH_kernels.json
+
+trap 'rm -f BENCH_kernels.committed.json BENCH_kernels.fresh1.json \
+            BENCH_kernels.fresh2.json BENCH_kernels.merged.json' EXIT
+python -m benchmarks.run --only kernels --json BENCH_kernels.fresh1.json
+python -m benchmarks.run --only kernels --json BENCH_kernels.fresh2.json
+
+baseline=BENCH_kernels.json
+if git show HEAD:BENCH_kernels.json > BENCH_kernels.committed.json 2>/dev/null
+then
+    baseline=BENCH_kernels.committed.json
+fi
+python tools/bench_compare.py "$baseline" \
+    BENCH_kernels.fresh1.json BENCH_kernels.fresh2.json \
+    --tol "${BENCH_TOL:-2.0}" --merged-out BENCH_kernels.merged.json
+mv BENCH_kernels.merged.json BENCH_kernels.json
