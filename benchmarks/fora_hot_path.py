@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ppr import ForaExecutor, ForaParams, PprWorkload, small_test_graph
+from repro.ppr import (ForaExecutor, ForaParams, PprWorkload, fora_fused,
+                       small_test_graph)
 from repro.ppr.forward_push import forward_push_coo
 from repro.ppr.graph import Graph
 from repro.ppr.random_walk import walk_length_for_tail
@@ -133,7 +134,38 @@ def run(num_queries: int = NUM_QUERIES,
          f"vs_seed={seed_us / fused_us:.2f}x;"
          f"vs_legacy={legacy_us / fused_us:.2f}x;target_vs_seed>=2x")
 
+    _run_sharded(workload, params, fused._num_walks, nb)
     _run_powerlaw()
+
+
+def _run_sharded(workload: PprWorkload, params: ForaParams,
+                 walk_budget: int, num_queries: int) -> None:
+    """The same fused hot path through the node-sharded residency
+    (DESIGN.md §9): `fora_fused` under shard_map over every local device.
+    On the single-device CI box this prices the shard_map wrapper itself
+    (all-gather/psum degenerate to copies), so the tolerance gate catches a
+    wrapper regression; on a real mesh the row measures row/lane scaling."""
+    import time
+
+    graph = workload.graph
+    k = len(jax.devices())
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("shard",))
+    sdg = graph.device(mesh=mesh)
+    for qid in (0, num_queries - 1):                         # warmup/compile
+        res = fora_fused(sdg, np.array([workload.source_of(qid)]), params,
+                         jax.random.PRNGKey(qid), num_walks=walk_budget)
+        res.pi.block_until_ready()
+    times = np.empty(num_queries)
+    for i in range(num_queries):
+        src = np.array([workload.source_of(i)])
+        t0 = time.perf_counter()
+        res = fora_fused(sdg, src, params, jax.random.PRNGKey(i),
+                         num_walks=walk_budget)
+        res.pi.block_until_ready()
+        times[i] = time.perf_counter() - t0
+    emit("fora/sharded_per_query", float(np.mean(times)) * 1e6,
+         f"n={graph.n};shards={k};layout={sdg.layout};"
+         f"walk_budget={res.walks_budget};measured={num_queries}")
 
 
 def _run_powerlaw(n: int = 4000, num_queries: int = 64) -> None:

@@ -6,9 +6,11 @@ Public API:
     lemma1_lower_bound, lemma2_hoeffding_bound  (paper Lemma 1 / Lemma 2)
     dna, dna_real                               (paper Alg. 1 / Alg. 2)
     DeviceAllocator, StragglerMonitor           (TPU adaptation layer)
+    MeshPlan, plan_core_mesh                    (cores -> devices x lanes)
 """
 
-from .allocator import Admission, DeviceAllocator, StragglerMonitor
+from .allocator import (Admission, DeviceAllocator, MeshPlan,
+                        StragglerMonitor, plan_core_mesh)
 from .bounds import (BoundReport, InfeasibleDeadline, lemma1_lower_bound,
                      lemma2_hoeffding_bound, required_cores)
 from .dna import DnaResult, dna, dna_real
@@ -21,11 +23,11 @@ from .slots import (SlotExecution, SlotPlan, build_slot_plan, execute_plan,
 
 __all__ = [
     "Admission", "BoundReport", "DeviceAllocator", "DnaResult",
-    "InfeasibleDeadline", "MeasuredTimeSource", "RooflineTerms",
+    "InfeasibleDeadline", "MeasuredTimeSource", "MeshPlan", "RooflineTerms",
     "RooflineTimeSource", "RuntimeStats", "SamplePlan", "SimulatedTimeSource",
     "SlotExecution", "SlotPlan", "StragglerMonitor", "TimeSource", "Z_TABLE",
     "build_slot_plan", "cochran_sample_size", "dna", "dna_real",
     "execute_plan", "fraction_sample_size", "lemma1_lower_bound",
-    "lemma2_hoeffding_bound", "num_slots", "queries_per_slot",
-    "required_cores", "z_score",
+    "lemma2_hoeffding_bound", "num_slots", "plan_core_mesh",
+    "queries_per_slot", "required_cores", "z_score",
 ]

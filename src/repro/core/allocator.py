@@ -73,6 +73,14 @@ class DeviceAllocator:
                 f"({len(healthy)} healthy, {self.spares} spares)")
         return healthy[:k]
 
+    def mesh_plan(self, cores: int, *,
+                  max_lanes_per_device: int | None = None) -> MeshPlan:
+        """Map a D&A core count onto this allocator's healthy capacity
+        (cores = devices x lanes, :func:`plan_core_mesh`); pair with
+        ``allocate(plan.devices)`` for the actual device slice."""
+        return plan_core_mesh(cores, self.capacity,
+                              max_lanes_per_device=max_lanes_per_device)
+
     # -- failure handling ---------------------------------------------------
     def mark_failed(self, device_index: int) -> None:
         if not 0 <= device_index < len(self.devices):
@@ -111,6 +119,59 @@ class DeviceAllocator:
             num_queries_left * stats.t_max / new_deadline)
         return Admission(feasible=False, cores=cores,
                          deadline=new_deadline, extended=True)
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    """A D&A core count mapped onto real hardware: cores = devices x lanes.
+
+    The paper's abstract "k cores" become a mesh of ``devices`` chips, each
+    running ``lanes`` parallel query lanes (a ``ForaExecutor`` slot with
+    ``devices=k`` serves one lane across its whole mesh; extra lanes are
+    per-device query batching). Devices are maximised first — real parallel
+    silicon — then ``lanes = ceil(cores / devices)`` absorbs the rest, so
+    ``cores_granted >= cores`` with at most ``devices - 1`` cores of
+    rounding slack (a narrower rectangle may exist, but would idle chips).
+    """
+
+    cores: int            # k the allocator asked for
+    devices: int          # mesh devices granted
+    lanes: int            # parallel query lanes per device
+
+    @property
+    def cores_granted(self) -> int:
+        return self.devices * self.lanes
+
+    def __str__(self) -> str:
+        return (f"{self.devices} device(s) x {self.lanes} lane(s) = "
+                f"{self.cores_granted} cores (asked {self.cores})")
+
+
+def plan_core_mesh(cores: int, num_devices: int, *,
+                   max_lanes_per_device: int | None = None) -> MeshPlan:
+    """Map a D&A core count onto a device mesh shape.
+
+    ``devices = min(cores, num_devices)``; ``lanes = ceil(cores / devices)``.
+    With ``max_lanes_per_device`` set, a demand that cannot fit
+    ``num_devices * max_lanes_per_device`` raises :class:`InfeasibleDeadline`
+    (the hardware analogue of Alg. 2's ``C_max`` admission check); ``None``
+    leaves lanes uncapped — lanes time-multiplex a device, they are slower
+    cores, not absent ones.
+    """
+    if cores < 1:
+        raise ValueError("cores must be >= 1")
+    if num_devices < 1:
+        raise ValueError("num_devices must be >= 1")
+    if max_lanes_per_device is not None:
+        if max_lanes_per_device < 1:
+            raise ValueError("max_lanes_per_device must be >= 1")
+        if cores > num_devices * max_lanes_per_device:
+            raise InfeasibleDeadline(
+                f"cores={cores} exceed mesh capacity "
+                f"{num_devices} devices x {max_lanes_per_device} lanes")
+    devices = min(cores, num_devices)
+    lanes = math.ceil(cores / devices)
+    return MeshPlan(cores=cores, devices=devices, lanes=lanes)
 
 
 @dataclass(frozen=True)

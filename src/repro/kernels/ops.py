@@ -64,6 +64,32 @@ def ell_spmm_sliced(neighbors, mask, weights, row_map, x, *, threshold=None,
                                    row_map)
 
 
+def ell_spmm_shard(neighbors, mask, weights, x, *, axis_name: str,
+                   threshold=None, force: str | None = None):
+    """Per-shard dense SpMM under ``shard_map`` (DESIGN.md §9): each shard
+    holds a contiguous block of destination rows; gather indices are global
+    node ids and ``x``/``threshold`` are replicated, so the local block is a
+    plain :func:`ell_spmm`. The (B, rows_local) blocks are reassembled in row
+    order with one tiled all-gather — returns (B, num_shards * rows_local);
+    the caller slices off any row padding."""
+    local = ell_spmm(neighbors, mask, weights, x, threshold=threshold,
+                     force=force)
+    return jax.lax.all_gather(local, axis_name, axis=1, tiled=True)
+
+
+def ell_spmm_sliced_shard(neighbors, mask, weights, row_map, x, *,
+                          axis_name: str, threshold=None,
+                          force: str | None = None):
+    """Per-shard sliced SpMM under ``shard_map`` (DESIGN.md §9): the table is
+    sharded by *virtual* row, so each shard folds its local slice partials
+    onto the full (B, n) frame through its local ``row_map`` segment sum
+    (:func:`ell_spmm_sliced` unchanged — ids are global), and the partial
+    frames combine with one ``psum`` all-reduce. Returns (B, n)."""
+    partial = ell_spmm_sliced(neighbors, mask, weights, row_map, x,
+                              threshold=threshold, force=force)
+    return jax.lax.psum(partial, axis_name)
+
+
 def embedding_bag(table, ids, weights, *, force: str | None = None):
     use_pallas = force == "pallas" or (force is None and _on_tpu())
     if use_pallas:

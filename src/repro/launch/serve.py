@@ -6,35 +6,55 @@ decides how many "cores" (devices / per-device lanes) the job needs, slots
 the requests, executes them, and reports the Lemma-2 comparison — for PPR
 queries (the paper's workload) or for LM decode / DIN scoring batches.
 
+The returned core count is then mapped onto the machine's actual device set
+(``plan_core_mesh``: cores = devices x lanes, DESIGN.md §9) instead of
+staying a simulated integer; ``--devices k`` additionally runs every slot as
+a node-sharded mesh of k chips (``ForaExecutor(devices=k)``).
+
     PYTHONPATH=src python -m repro.launch.serve --workload ppr \\
-        --dataset web-stanford --queries 512 --deadline 30 --max-cores 64
+        --dataset web-stanford --queries 512 --deadline 30 --max-cores 64 \\
+        [--platform tpu] [--devices 4] [--ell-layout auto] [--no-fused]
 """
 
 from __future__ import annotations
 
 import argparse
 
-import jax
-import numpy as np
-
-from ..core import (InfeasibleDeadline, SimulatedTimeSource, dna_real,
-                    fraction_sample_size)
-from ..ppr import ForaExecutor, ForaParams, PprWorkload, load
-from ..ppr.datasets import TABLE1
-
 
 def serve_ppr(args) -> None:
+    import jax
+
+    from ..core import (InfeasibleDeadline, dna_real, fraction_sample_size,
+                        plan_core_mesh)
+    from ..ppr import ForaExecutor, ForaParams, PprWorkload, load
+    from ..ppr.datasets import TABLE1
+
+    if args.devices > 1 and not args.fused:
+        raise SystemExit("REJECTED: --devices > 1 requires the fused hot "
+                         "path (drop --no-fused)")
+    if args.devices > len(jax.devices()):
+        raise SystemExit(f"REJECTED: --devices {args.devices} but only "
+                         f"{len(jax.devices())} jax device(s) present")
     graph = load(args.dataset, scale=args.scale)
     spec = TABLE1[args.dataset.lower()]
     workload = PprWorkload(graph=graph, num_queries=args.queries,
                            seed=args.seed)
     executor = ForaExecutor(workload=workload,
                             params=ForaParams(alpha=0.2, epsilon=args.epsilon),
-                            block_size=args.block_size)
+                            block_size=args.block_size,
+                            fused=args.fused,
+                            ell_layout=args.ell_layout,
+                            walk_safety=args.walk_safety,
+                            devices=args.devices)
     s = fraction_sample_size(args.queries, 0.05)
+    # fold the mesh capacity into Alg. 2's C_max so an over-cap demand is
+    # rejected by the up-front Lemma-1 admission, not after the workload ran
+    max_cores = args.max_cores
+    if args.max_lanes:
+        max_cores = min(max_cores, len(jax.devices()) * args.max_lanes)
     try:
         res = dna_real(args.queries, args.deadline, executor,
-                       max_cores=args.max_cores, sample_size=s,
+                       max_cores=max_cores, sample_size=s,
                        scaling_factor=spec.scaling_factor_d)
     except InfeasibleDeadline as e:
         raise SystemExit(f"REJECTED: {e}") from e
@@ -45,10 +65,24 @@ def serve_ppr(args) -> None:
     print(f"  reduction          : {res.reduction_vs_lemma2_pct:.2f}%")
     print(f"  completion         : {res.completion_time:.3f}s "
           f"(accepted={res.accepted})")
+    # The paper stops at an integer; here the grant becomes a mesh shape on
+    # the hardware actually present (lanes time-multiplex a device when the
+    # demand exceeds the chip count).
+    try:
+        plan = plan_core_mesh(res.cores, len(jax.devices()),
+                              max_lanes_per_device=args.max_lanes or None)
+    except InfeasibleDeadline as e:
+        raise SystemExit(f"REJECTED at mesh mapping: {e}") from e
+    slot_note = (f"slot mesh: {args.devices}-chip shard" if args.devices > 1
+                 else "slot mesh: single chip")
+    print(f"  cores->mesh        : {plan} on "
+          f"{jax.default_backend()} ({slot_note})")
 
 
 def serve_sim(args) -> None:
     """Generic serve-step workload with modelled times (LM decode / DIN)."""
+    from ..core import InfeasibleDeadline, SimulatedTimeSource, dna_real
+
     src = SimulatedTimeSource(mean=args.step_time, cv=args.cv, seed=args.seed)
     try:
         res = dna_real(args.queries, args.deadline, lambda ids: src.measure(ids),
@@ -63,7 +97,7 @@ def serve_sim(args) -> None:
     print(f"  reduction          : {res.reduction_vs_lemma2_pct:.2f}%")
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=["ppr", "lm-decode", "din-serve"],
                     default="ppr")
@@ -74,12 +108,35 @@ def main() -> None:
     ap.add_argument("--max-cores", type=int, default=64)
     ap.add_argument("--epsilon", type=float, default=0.5)
     ap.add_argument("--block-size", type=int, default=1)
+    ap.add_argument("--platform", default=None,
+                    choices=["cpu", "gpu", "tpu"],
+                    help="pin jax_platform_name; default lets jax pick the "
+                         "best backend present (the old hardcoded cpu pin "
+                         "is gone — pass --platform cpu to restore it)")
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="fused device-resident hot path (DESIGN.md §7); "
+                         "--no-fused keeps the legacy multi-call fora()")
+    ap.add_argument("--ell-layout", default="auto",
+                    choices=["auto", "dense", "sliced"],
+                    help="push-table layout (DESIGN.md §8)")
+    ap.add_argument("--walk-safety", type=float, default=1.0,
+                    help="walk-budget calibration headroom factor")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="chips per slot: >1 node-shards the graph over a "
+                         "k-device mesh (DESIGN.md §9)")
+    ap.add_argument("--max-lanes", type=int, default=0,
+                    help="admission cap on query lanes per device for the "
+                         "cores->mesh mapping (0 = uncapped)")
     ap.add_argument("--step-time", type=float, default=0.05)
     ap.add_argument("--cv", type=float, default=0.3)
     ap.add_argument("--d", type=float, default=0.9)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-    jax.config.update("jax_platform_name", "cpu")
+    args = ap.parse_args(argv)
+    if args.platform is not None:
+        import jax
+
+        jax.config.update("jax_platform_name", args.platform)
     if args.workload == "ppr":
         serve_ppr(args)
     else:

@@ -6,7 +6,7 @@ from .fora import (ForaParams, ForaResult, FusedForaResult, ResolvedFora,
                    fora, fora_fused, fora_query_block)
 from .forward_push import (PushResult, forward_push, forward_push_coo,
                            forward_push_np)
-from .graph import DeviceGraph, Graph, SlicedEll
+from .graph import DeviceGraph, Graph, ShardedDeviceGraph, SlicedEll
 from .montecarlo import monte_carlo_ppr
 from .power_iteration import ppr_power_iteration, ppr_single_pair
 from .random_walk import (residual_walks, residual_walks_batched,
@@ -15,7 +15,8 @@ from .random_walk import (residual_walks, residual_walks_batched,
 __all__ = [
     "TABLE1", "DatasetSpec", "DeviceGraph", "ForaExecutor", "ForaParams",
     "ForaResult", "FusedForaResult", "Graph", "PprWorkload", "PushResult",
-    "ResolvedFora", "SlicedEll", "fora", "fora_fused", "fora_query_block",
+    "ResolvedFora", "ShardedDeviceGraph", "SlicedEll", "fora", "fora_fused",
+    "fora_query_block",
     "forward_push",
     "forward_push_coo", "forward_push_np", "load", "monte_carlo_ppr",
     "ppr_power_iteration", "ppr_single_pair", "residual_walks",

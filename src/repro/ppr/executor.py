@@ -14,6 +14,11 @@ and every measured query is a single jitted ``fora_fused`` call whose only
 host sync is the final readout. ``fused=False`` keeps the legacy multi-call
 ``fora()`` path (host round-trips between push and walk) for comparison —
 ``benchmarks/fora_hot_path.py`` measures both.
+
+``devices=k`` makes one *slot* a mesh of k chips (DESIGN.md §9): the graph
+residency becomes a node-sharded :class:`ShardedDeviceGraph` and the same
+fused call runs under ``shard_map`` — push rows and walk lanes split across
+the mesh, so the D&A allocator's "k cores" grant real parallel hardware.
 """
 
 from __future__ import annotations
@@ -30,7 +35,7 @@ from ..core.estimator import RuntimeStats
 from .fora import (ForaParams, _pow2_ceil_host, default_walk_budget, fora,
                    fora_fused)
 from .forward_push import forward_push_np
-from .graph import DeviceGraph, Graph
+from .graph import DeviceGraph, Graph, ShardedDeviceGraph
 
 
 @dataclass
@@ -64,17 +69,37 @@ class ForaExecutor:
     fused: bool = True             # device-resident single-jit hot path
     walk_safety: float = 1.0       # calibration headroom on the probe r_sum
     ell_layout: str = "auto"       # auto|dense|sliced push table (DESIGN §8)
+    devices: int = 1               # >1: a slot is a mesh of k chips (DESIGN §9)
     _warmed: bool = field(default=False, init=False)
     calls: int = field(default=0, init=False)
-    _device_graph: DeviceGraph | None = field(default=None, init=False,
-                                              repr=False)
+    _device_graph: "DeviceGraph | ShardedDeviceGraph | None" = field(
+        default=None, init=False, repr=False)
     _num_walks: int | None = field(default=None, init=False)
     _warmed_sizes: set = field(default_factory=set, init=False)
+
+    def __post_init__(self) -> None:
+        if self.devices < 1:
+            raise ValueError("devices must be >= 1")
+        if self.devices > 1 and not self.fused:
+            raise ValueError("devices>1 (node-sharded slots) requires the "
+                             "fused hot path; the legacy fora() path is "
+                             "single-device only")
 
     # -- helpers ---------------------------------------------------------------
     def _block_sources(self, qids: Sequence[int]) -> np.ndarray:
         return np.array([self.workload.source_of(q) for q in qids],
                         dtype=np.int64)
+
+    def _build_mesh(self):
+        """A 1-D ("shard",) mesh over the first ``devices`` jax devices —
+        the slot's hardware slice (cores = devices x lanes, DESIGN.md §9)."""
+        from jax.sharding import Mesh
+
+        devs = jax.devices()
+        if self.devices > len(devs):
+            raise ValueError(f"devices={self.devices} requested but only "
+                             f"{len(devs)} present")
+        return Mesh(np.array(devs[:self.devices]), ("shard",))
 
     def _run_block(self, sources: np.ndarray, seed: int) -> None:
         key = jax.random.PRNGKey(seed)
@@ -88,6 +113,20 @@ class ForaExecutor:
             if hasattr(pi, "block_until_ready"):
                 pi.block_until_ready()
 
+    def _calibration_qids(self, size: int = 8) -> list[int]:
+        """Seeded random probe block WITHOUT replacement. The first-``size``
+        ids would bias the calibrated budget whenever query cost correlates
+        with id order (sources sorted by degree, say) — the same first-s bias
+        PR 2 removed from the ``dna``/``dna_real`` sample draw. Deterministic
+        per workload seed so calibration is reproducible, but on a stream
+        distinct from the one that drew the workload's sources (the [seed]
+        stream) so the probe selection is not coupled to the realized
+        source vertices."""
+        nq = self.workload.num_queries
+        rng = np.random.default_rng([self.workload.seed, 1])
+        return np.sort(rng.choice(nq, size=min(size, nq),
+                                  replace=False)).tolist()
+
     def _calibrate_walk_budget(self) -> int:
         """Pick ONE static walk lane count for the whole workload: push a
         probe block (warmup only — this sync never lands in measured time),
@@ -96,8 +135,7 @@ class ForaExecutor:
         calibrated lanes are still unbiased (weight r_sum/W), merely a bit
         noisier — the same trade the seed path's batch-max budget made."""
         rp = self.params.resolve(self.workload.graph)
-        probe_qids = range(min(8, self.workload.num_queries))
-        sources = self._block_sources(probe_qids)
+        sources = self._block_sources(self._calibration_qids())
         push = forward_push_np(self.workload.graph, sources,
                                alpha=rp.alpha, rmax=rp.rmax)
         r_max = float(np.asarray(push.r.sum(axis=1)).max())
@@ -123,10 +161,15 @@ class ForaExecutor:
             if self._device_graph is None:
                 # "auto" reuses the graph's cached upload-once mirror; a
                 # forced layout builds its own device copy for this executor
-                self._device_graph = (
-                    self.workload.graph.device() if self.ell_layout == "auto"
-                    else DeviceGraph.from_graph(self.workload.graph,
-                                                layout=self.ell_layout))
+                mesh = self._build_mesh() if self.devices > 1 else None
+                if self.ell_layout == "auto":
+                    self._device_graph = self.workload.graph.device(mesh=mesh)
+                elif mesh is not None:
+                    self._device_graph = ShardedDeviceGraph.from_graph(
+                        self.workload.graph, mesh, layout=self.ell_layout)
+                else:
+                    self._device_graph = DeviceGraph.from_graph(
+                        self.workload.graph, layout=self.ell_layout)
             if self._num_walks is None:
                 self._num_walks = self._calibrate_walk_budget()
         for qid in self._probe_qids():

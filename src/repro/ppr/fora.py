@@ -16,6 +16,7 @@ exactly the phenomenon the paper's scaling factor d addresses.
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 from functools import partial
@@ -26,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .forward_push import forward_push, forward_push_np
-from .graph import DeviceGraph, Graph
+from .graph import DeviceGraph, Graph, ShardedDeviceGraph
 from .random_walk import (_BULK_RNG_ELEMS, residual_walks,
                           residual_walks_batched, walk_length_for_tail)
 
@@ -134,18 +135,27 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
                      out_offsets, out_degree, sources, key, *, alpha: float,
                      rmax: float, omega: float, n: int, num_walks: int,
                      num_steps: int, max_push_iters: int,
-                     force: str | None = None):
+                     force: str | None = None,
+                     shard_axis: str | None = None, num_shards: int = 1):
     """The whole FORA query block as ONE executable: seed construction,
     frontier push (pull-form ELL SpMM, dense or sliced view), pow2
     walk-budget quantisation and the residual walks all stay on device.
-    See DESIGN.md §7 for the host<->device dataflow."""
+    See DESIGN.md §7 for the host<->device dataflow.
+
+    With ``shard_axis`` (the body runs per-shard under ``shard_map`` over a
+    :class:`ShardedDeviceGraph` mesh, DESIGN.md §9) the push combines row
+    blocks per sweep via the per-shard collectives, and the walk budget is
+    split into ``num_walks / num_shards`` lanes per shard (global lane ids —
+    the union of the shards' RNG streams is the single-device stream);
+    endpoint masses are psum-combined, so every returned array is replicated.
+    """
     B = sources.shape[0]
     seeds = jnp.zeros((B, n), jnp.float32).at[
         jnp.arange(B), sources].set(1.0)
     push = forward_push(in_neighbors, in_mask, in_weights, out_degree, seeds,
                         alpha=alpha, rmax=rmax, n=n,
                         max_iters=max_push_iters, row_map=in_row_map,
-                        force=force)
+                        force=force, shard_axis=shard_axis)
     r_sum = push.r.sum(axis=1)                               # (B,)
     # FORA budget ceil(r_sum * omega), quantised UP to the next power of two
     # on device (mirrors the host-side quantisation of fora()) and clipped to
@@ -157,15 +167,25 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
     # bulk-RNG decision must count the vmapped batch: the (L, W) draw
     # batches to (B, L, W) under vmap
     bulk = B * num_steps * num_walks <= _BULK_RNG_ELEMS
-    endpoint = jax.vmap(lambda r, k, a: residual_walks(
-        edge_dst, out_offsets, out_degree, r, k, alpha=alpha, n=n,
-        num_walks=num_walks, num_steps=num_steps, active_walks=a,
-        bulk_rng=bulk))(push.r, keys, w_eff)
+    if shard_axis is None:
+        endpoint = jax.vmap(lambda r, k, a: residual_walks(
+            edge_dst, out_offsets, out_degree, r, k, alpha=alpha, n=n,
+            num_walks=num_walks, num_steps=num_steps, active_walks=a,
+            bulk_rng=bulk))(push.r, keys, w_eff)
+    else:
+        lanes = num_walks // num_shards           # caller rounds num_walks up
+        offset = jax.lax.axis_index(shard_axis) * lanes
+        endpoint = jax.vmap(lambda r, k, a: residual_walks(
+            edge_dst, out_offsets, out_degree, r, k, alpha=alpha, n=n,
+            num_walks=num_walks, num_steps=num_steps, active_walks=a,
+            bulk_rng=bulk, lanes=lanes, lane_offset=offset))(
+                push.r, keys, w_eff)
+        endpoint = jax.lax.psum(endpoint, shard_axis)
     return push.pi + endpoint, r_sum, push.iters, w_eff
 
 
 _FUSED_STATICS = ("alpha", "rmax", "omega", "n", "num_walks", "num_steps",
-                  "max_push_iters", "force")
+                  "max_push_iters", "force", "shard_axis", "num_shards")
 _fora_fused = jax.jit(_fora_fused_impl, static_argnames=_FUSED_STATICS)
 # On TPU the (B,) sources buffer is donated (it aliases the int32
 # walks_effective output). On CPU donation is a measured ~1.7 ms/call
@@ -176,11 +196,79 @@ _fora_fused_donating = jax.jit(_fora_fused_impl,
                                donate_argnames=("sources",))
 
 
-def fora_fused(dg: DeviceGraph, sources, params: ForaParams = ForaParams(),
+@functools.lru_cache(maxsize=64)
+def _fora_fused_sharded_exe(mesh, axis: str, num_shards: int, sliced: bool,
+                            alpha: float, rmax: float, omega: float, n: int,
+                            num_walks: int, num_steps: int,
+                            max_push_iters: int, force: str | None):
+    """Build (and cache per mesh/statics) the shard_map'd fused executable.
+
+    The whole fused body runs per-shard: in_specs shard the push table by
+    (virtual) row along ``axis`` and replicate everything else; out_specs are
+    replicated because the body's collectives (all-gather / psum) already
+    leave every output identical on all shards."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..distributed.ctx import shard_map_compat
+
+    kwargs = dict(alpha=alpha, rmax=rmax, omega=omega, n=n,
+                  num_walks=num_walks, num_steps=num_steps,
+                  max_push_iters=max_push_iters, force=force,
+                  shard_axis=axis, num_shards=num_shards)
+    row = P(axis, None)
+    repl = P()
+    if sliced:
+        def fn(nbr, msk, wts, row_map, edge_dst, out_offsets, out_degree,
+               sources, key):
+            return _fora_fused_impl(nbr, msk, wts, row_map, edge_dst,
+                                    out_offsets, out_degree, sources, key,
+                                    **kwargs)
+        in_specs = (row, row, row, P(axis), repl, repl, repl, repl, repl)
+    else:
+        def fn(nbr, msk, wts, edge_dst, out_offsets, out_degree,
+               sources, key):
+            return _fora_fused_impl(nbr, msk, wts, None, edge_dst,
+                                    out_offsets, out_degree, sources, key,
+                                    **kwargs)
+        in_specs = (row, row, row, repl, repl, repl, repl, repl)
+    mapped = shard_map_compat(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=(repl, repl, repl, repl))
+    return jax.jit(mapped)
+
+
+def _fora_fused_sharded(dg: ShardedDeviceGraph, sources, rp: ResolvedFora,
+                        key: jax.Array, *, num_walks: int,
+                        force: str | None) -> FusedForaResult:
+    """shard_map dispatch of :func:`fora_fused` over a sharded residency."""
+    steps = walk_length_for_tail(rp.alpha, rp.walk_tail)
+    # pow2 budget, then rounded up so every shard gets an equal lane slice.
+    # When num_shards is itself a power of two (every TPU slice shape) the
+    # round-up is a no-op and the sharded RNG stream is bit-identical to the
+    # single-device one; a non-pow2 shard count widens the lane table, which
+    # is still a valid unbiased FORA draw but a *different* stream than a
+    # single device would sample.
+    num_walks = _pow2_ceil_host(num_walks)
+    num_walks = -(-num_walks // dg.num_shards) * dg.num_shards
+    sources = jnp.asarray(sources).astype(jnp.int32).reshape(-1)
+    exe = _fora_fused_sharded_exe(
+        dg.mesh, dg.axis, dg.num_shards, dg.in_row_map is not None,
+        rp.alpha, rp.rmax, rp.omega, dg.n, num_walks, steps, 10_000, force)
+    table = (dg.in_neighbors, dg.in_mask, dg.in_weights)
+    if dg.in_row_map is not None:
+        table = table + (dg.in_row_map,)
+    pi, r_sum, iters, w_eff = exe(*table, dg.edge_dst, dg.out_offsets,
+                                  dg.out_degree, sources, key)
+    return FusedForaResult(pi=pi, residual_mass=r_sum, push_iters=iters,
+                           walks_effective=w_eff, walks_budget=num_walks)
+
+
+def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
+               params: ForaParams = ForaParams(),
                key: jax.Array | None = None, *,
                num_walks: int | None = None,
                force: str | None = None) -> FusedForaResult:
-    """Zero-host-sync FORA on a :class:`DeviceGraph`.
+    """Zero-host-sync FORA on a :class:`DeviceGraph` (or, node-sharded
+    across a device mesh, a :class:`ShardedDeviceGraph` — DESIGN.md §9).
 
     One jitted call chains push -> pow2 walk-budget quantisation ->
     residual walks; the only host transfer per query block is the caller's
@@ -194,6 +282,9 @@ def fora_fused(dg: DeviceGraph, sources, params: ForaParams = ForaParams(),
         key = jax.random.PRNGKey(0)
     if num_walks is None:
         num_walks = default_walk_budget(rp)
+    if isinstance(dg, ShardedDeviceGraph):
+        return _fora_fused_sharded(dg, sources, rp, key,
+                                   num_walks=num_walks, force=force)
     num_walks = _pow2_ceil_host(num_walks)
     steps = walk_length_for_tail(rp.alpha, rp.walk_tail)
     if jax.default_backend() == "tpu":

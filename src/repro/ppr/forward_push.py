@@ -59,12 +59,13 @@ class PushResult(NamedTuple):
     iters: jax.Array     # () number of frontier sweeps executed
 
 
-@partial(jax.jit, static_argnames=("n", "max_iters", "force"))
+@partial(jax.jit, static_argnames=("n", "max_iters", "force", "shard_axis"))
 def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
                  in_weights: jax.Array, out_degree: jax.Array,
                  seeds: jax.Array, *, alpha: float, rmax: float, n: int,
                  max_iters: int = 10_000, row_map: jax.Array | None = None,
-                 force: str | None = None) -> PushResult:
+                 force: str | None = None,
+                 shard_axis: str | None = None) -> PushResult:
     """Batched frontier push over the pull-form ELL view.
 
     ``in_neighbors``/``in_mask``/``in_weights`` are the (n, K) padded
@@ -74,6 +75,14 @@ def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
     ``seeds`` is (B, n) one-hot (or any residual). Returns (pi, r) with the
     FORA invariant; every residual entry satisfies r(v) <= rmax * deg_out(v)
     on normal termination.
+
+    With ``shard_axis`` (inside ``shard_map`` over a
+    :class:`~repro.ppr.graph.ShardedDeviceGraph`'s mesh) the table arrays
+    are this shard's row block and each sweep reassembles the full (B, n)
+    relaxation via the per-shard collectives in :mod:`repro.kernels.ops`
+    (all-gather for dense rows, psum for sliced partials — DESIGN.md §9);
+    ``seeds``/``out_degree`` stay replicated so the frontier schedule is
+    identical on every shard.
     """
     deg = out_degree.astype(jnp.float32)
     deg_safe = jnp.maximum(deg, 1.0)
@@ -89,12 +98,23 @@ def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
         # one pull-form SpMM == P^T (r * front); the kernel applies the
         # push condition to the gathered residual itself (fused threshold)
         if row_map is None:
-            moved = ops.ell_spmm(in_neighbors, in_mask, in_weights, state.r,
-                                 threshold=threshold, force=force)
-        else:
+            if shard_axis is None:
+                moved = ops.ell_spmm(in_neighbors, in_mask, in_weights,
+                                     state.r, threshold=threshold,
+                                     force=force)
+            else:
+                moved = ops.ell_spmm_shard(
+                    in_neighbors, in_mask, in_weights, state.r,
+                    axis_name=shard_axis, threshold=threshold,
+                    force=force)[:, :n]              # drop row padding
+        elif shard_axis is None:
             moved = ops.ell_spmm_sliced(in_neighbors, in_mask, in_weights,
                                         row_map, state.r,
                                         threshold=threshold, force=force)
+        else:
+            moved = ops.ell_spmm_sliced_shard(
+                in_neighbors, in_mask, in_weights, row_map, state.r,
+                axis_name=shard_axis, threshold=threshold, force=force)
         moved = (1.0 - alpha) * moved
         r = state.r * (1.0 - front) + moved
         return PushState(pi=pi, r=r, iters=state.iters + 1)

@@ -29,6 +29,11 @@ mirror: CSR + pull-ELL arrays are put on device exactly once per Graph and
 reused by every query of a workload — the fused FORA hot path (DESIGN.md §7)
 never re-transfers graph structure. The mirror picks the dense or sliced ELL
 layout automatically from the degree distribution (``layout="auto"``).
+
+``ShardedDeviceGraph`` (via ``Graph.device(mesh=...)``) is the multi-chip
+generalisation (DESIGN.md §9): the push table is row-sharded over a mesh axis
+(dense by destination row, sliced by virtual row) while the CSR walk arrays
+are replicated — the D&A allocator's "k cores" become k shards of one mesh.
 """
 
 from __future__ import annotations
@@ -42,6 +47,18 @@ import numpy as np
 
 def _round_up(v: int, multiple: int) -> int:
     return max(multiple, ((v + multiple - 1) // multiple) * multiple)
+
+
+def _default_pad_multiple() -> int:
+    """Lane-alignment floor for the sliced push table: a real TPU chunks the
+    lane axis in 128s (DESIGN.md §8), so widths below 128 only add fold
+    overhead there; interpret/CPU runs keep the cheap 8. Deferred jax import
+    so graph.py stays importable without jax."""
+    try:
+        import jax
+        return 128 if jax.default_backend() == "tpu" else 8
+    except Exception:          # noqa: BLE001 — no jax / no backend yet
+        return 8
 
 
 class SlicedEll(NamedTuple):
@@ -191,10 +208,13 @@ class Graph:
         # int32 neighbors + bool mask + f32 weights per cell
         return self.n * K * (4 + 1 + 4)
 
-    def _sliced_width_cells(self, pad_multiple: int = 8) -> tuple[int, int]:
+    def _sliced_width_cells(self, pad_multiple: int | None = None
+                            ) -> tuple[int, int]:
         """(width, padded cell count) minimising the sliced-table area —
         the single source of the cost formula used by both the width
         heuristic and the DeviceGraph auto-layout policy."""
+        if pad_multiple is None:
+            pad_multiple = _default_pad_multiple()
         if pad_multiple < 1:
             raise ValueError("pad_multiple must be >= 1")
         dense_w = _round_up(self.max_in_degree if self.m else 1, pad_multiple)
@@ -209,19 +229,21 @@ class Graph:
         best = min(candidates, key=lambda W: (costs[W], W))
         return best, costs[best]
 
-    def sliced_ell_width(self, pad_multiple: int = 8) -> int:
+    def sliced_ell_width(self, pad_multiple: int | None = None) -> int:
         """Slice width W minimising the padded sliced-table area.
 
         Candidates are ``pad_multiple * 2^j`` (lane-aligned, geometric — the
         cost landscape is smooth enough that power-of-two steps find the
         basin) plus the dense width itself; cost(W) = sum_i ceil(deg_in(i)/W)
         * W, the cell count of the resulting (n_virtual, W) table. Ties go to
-        the smaller W (less VMEM per row block).
+        the smaller W (less VMEM per row block). ``pad_multiple=None``
+        resolves the backend-appropriate lane floor
+        (:func:`_default_pad_multiple`): 128 on real TPU, 8 elsewhere.
         """
         return self._sliced_width_cells(pad_multiple)[0]
 
     def ell_in_sliced(self, width: int | None = None,
-                      pad_multiple: int = 8) -> SlicedEll:
+                      pad_multiple: int | None = None) -> SlicedEll:
         """Power-law-safe pull-form ELL: rows wider than ``width`` are split.
 
         Same semantics as :meth:`ell_in` after folding virtual rows back
@@ -229,6 +251,8 @@ class Graph:
         instead of O(n·k_max). ``width=None`` applies
         :meth:`sliced_ell_width`'s area-minimising heuristic.
         """
+        if pad_multiple is None:
+            pad_multiple = _default_pad_multiple()
         W = self.sliced_ell_width(pad_multiple) if width is None \
             else _round_up(width, pad_multiple)
         order = np.argsort(self.edge_dst, kind="stable")
@@ -264,9 +288,36 @@ class Graph:
     def _device(self) -> "DeviceGraph":
         return DeviceGraph.from_graph(self)
 
-    def device(self) -> "DeviceGraph":
-        """Upload-once device mirror; repeated calls return the same object."""
-        return self._device
+    # most-recent sharded residencies kept per graph: elastic re-grants walk
+    # through different mesh shapes over a long-lived Graph, and an unbounded
+    # cache would pin every superseded full-graph device copy forever
+    SHARDED_CACHE_MAX: ClassVar[int] = 2
+
+    @cached_property
+    def _sharded_devices(self) -> dict:
+        return {}
+
+    def device(self, mesh: Any = None, *,
+               axis: str = "shard") -> "DeviceGraph | ShardedDeviceGraph":
+        """Upload-once device mirror; repeated calls return the same object.
+
+        Without ``mesh`` this is the single-device :class:`DeviceGraph`.
+        With a ``jax.sharding.Mesh`` it is the node-sharded
+        :class:`ShardedDeviceGraph` over that mesh's ``axis`` — cached per
+        (mesh, axis) for the ``SHARDED_CACHE_MAX`` most recent meshes (older
+        residencies stay alive only while an executor still holds them).
+        """
+        if mesh is None:
+            return self._device
+        cache = self._sharded_devices
+        key = (mesh, axis)
+        if key in cache:
+            cache[key] = cache.pop(key)            # refresh LRU recency
+        else:
+            cache[key] = ShardedDeviceGraph.from_graph(self, mesh, axis=axis)
+            while len(cache) > self.SHARDED_CACHE_MAX:
+                cache.pop(next(iter(cache)))       # evict least recently used
+        return cache[key]
 
     # -- constructors ----------------------------------------------------------
     @staticmethod
@@ -355,28 +406,10 @@ class DeviceGraph:
     @classmethod
     def from_graph(cls, graph: Graph, *, layout: str = "auto",
                    width: int | None = None,
-                   pad_multiple: int = 8) -> "DeviceGraph":
+                   pad_multiple: int | None = None) -> "DeviceGraph":
         import jax.numpy as jnp  # deferred: graph.py stays importable sans jax
 
-        if layout not in ("auto", "dense", "sliced"):
-            raise ValueError(f"layout must be auto|dense|sliced, got {layout!r}")
-        if layout == "auto":
-            sl_width, sliced_cells = graph._sliced_width_cells(pad_multiple)
-            dense_cells = graph.n * _round_up(
-                graph.max_in_degree if graph.m else 1, pad_multiple)
-            layout = "sliced" if dense_cells >= cls.AUTO_SLICE_RATIO * \
-                max(1, sliced_cells) else "dense"
-            if width is None:
-                width = sl_width          # reuse the scan's answer
-        if layout == "sliced":
-            sl = graph.ell_in_sliced(width=width, pad_multiple=pad_multiple)
-            nbr, mask, weights = sl.neighbors, sl.mask, sl.weights
-            row_map = jnp.asarray(sl.row_map)
-            ell_width = sl.width
-        else:
-            nbr, mask, weights = graph.ell_in(pad_multiple=pad_multiple)
-            row_map = None
-            ell_width = int(nbr.shape[1])
+        lay = _resolve_push_layout(graph, layout, width, pad_multiple)
         DeviceGraph.uploads += 1
         return cls(
             n=graph.n, m=graph.m,
@@ -384,9 +417,152 @@ class DeviceGraph:
             edge_dst=jnp.asarray(graph.edge_dst),
             out_offsets=jnp.asarray(graph.out_offsets),
             out_degree=jnp.asarray(graph.out_degree),
-            in_neighbors=jnp.asarray(nbr),
-            in_mask=jnp.asarray(mask),
-            in_weights=jnp.asarray(weights),
-            in_row_map=row_map,
-            ell_width=ell_width,
+            in_neighbors=jnp.asarray(lay.neighbors),
+            in_mask=jnp.asarray(lay.mask),
+            in_weights=jnp.asarray(lay.weights),
+            in_row_map=None if lay.row_map is None else jnp.asarray(lay.row_map),
+            ell_width=lay.width,
+        )
+
+
+class _PushLayout(NamedTuple):
+    """Host-side pull table + the dense/sliced decision — the single layout
+    policy shared by the single-device and sharded residencies."""
+
+    layout: str             # "dense" | "sliced"
+    neighbors: np.ndarray   # (rows, K) int32 — real rows (dense) or virtual
+    mask: np.ndarray        # (rows, K) bool
+    weights: np.ndarray     # (rows, K) f32
+    row_map: np.ndarray | None   # (rows,) int32 ascending, None when dense
+    width: int              # K of the resident table
+
+
+def _resolve_push_layout(graph: Graph, layout: str, width: int | None,
+                         pad_multiple: int | None) -> _PushLayout:
+    if layout not in ("auto", "dense", "sliced"):
+        raise ValueError(f"layout must be auto|dense|sliced, got {layout!r}")
+    if pad_multiple is None:
+        pad_multiple = _default_pad_multiple()
+    if layout == "auto":
+        sl_width, sliced_cells = graph._sliced_width_cells(pad_multiple)
+        dense_cells = graph.n * _round_up(
+            graph.max_in_degree if graph.m else 1, pad_multiple)
+        layout = "sliced" if dense_cells >= DeviceGraph.AUTO_SLICE_RATIO * \
+            max(1, sliced_cells) else "dense"
+        if width is None:
+            width = sl_width              # reuse the scan's answer
+    if layout == "sliced":
+        sl = graph.ell_in_sliced(width=width, pad_multiple=pad_multiple)
+        return _PushLayout(layout="sliced", neighbors=sl.neighbors,
+                           mask=sl.mask, weights=sl.weights,
+                           row_map=sl.row_map, width=sl.width)
+    nbr, mask, weights = graph.ell_in(pad_multiple=pad_multiple)
+    return _PushLayout(layout="dense", neighbors=nbr, mask=mask,
+                       weights=weights, row_map=None, width=int(nbr.shape[1]))
+
+
+@dataclass(frozen=True, eq=False)
+class ShardedDeviceGraph:
+    """Node-sharded device residency for multi-chip fused FORA (DESIGN.md §9).
+
+    The pull-form push table is row-sharded across ``mesh`` along ``axis``:
+
+    * **dense** tables by destination row — each shard computes its own
+      (B, rows_local) output block and the blocks are reassembled with one
+      tiled all-gather per sweep;
+    * **sliced** tables by *virtual* row — each shard folds its local slice
+      partials onto the full (B, n) frame through its ``row_map`` segment
+      sum, and the partial frames are combined with one ``psum`` all-reduce.
+
+    The CSR walk arrays (edge_dst / out_offsets / out_degree) are
+    **replicated** so ``residual_walks`` stays shard-local: the walk lane
+    budget is split across shards (global lane ids keep the estimator's
+    weights exact) and endpoint masses are psum-combined. Gather indices of
+    the push table are global node ids, so the kernel body is untouched —
+    only the row axis is partitioned.
+
+    Built via ``Graph.device(mesh=...)`` (upload-once per (graph, mesh));
+    ``uploads`` counts constructions like :class:`DeviceGraph`'s.
+    """
+
+    n: int
+    m: int
+    mesh: Any                  # jax.sharding.Mesh
+    axis: str                  # mesh axis the rows are sharded over
+    num_shards: int
+    rows_per_shard: int        # local (virtual) row count (row-padded)
+    edge_dst: Any              # replicated CSR walk arrays
+    out_offsets: Any
+    out_degree: Any
+    in_neighbors: Any          # (rows_pad, K), P(axis, None)
+    in_mask: Any
+    in_weights: Any
+    in_row_map: Any = None     # (rows_pad,) int32, P(axis), or None (dense)
+    ell_width: int = 0
+
+    uploads: ClassVar[int] = 0
+
+    @property
+    def layout(self) -> str:
+        return "dense" if self.in_row_map is None else "sliced"
+
+    @property
+    def ell_nbytes(self) -> int:
+        """Resident bytes of the sharded push table summed over all shards."""
+        arrays = (self.in_neighbors, self.in_mask, self.in_weights,
+                  self.in_row_map)
+        return int(sum(a.size * a.dtype.itemsize
+                       for a in arrays if a is not None))
+
+    def replicate(self, x: Any) -> Any:
+        """Stage a broadcast input (query sources, PRNG key) replicated over
+        the mesh — the caller-side transfer that keeps the measured fused
+        region transfer-free, mirroring the single-device contract where the
+        caller uploads sources before the clock starts."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(x, NamedSharding(self.mesh, P()))
+
+    @classmethod
+    def from_graph(cls, graph: Graph, mesh: Any, *, axis: str = "shard",
+                   layout: str = "auto", width: int | None = None,
+                   pad_multiple: int | None = None) -> "ShardedDeviceGraph":
+        import jax  # deferred: graph.py stays importable sans jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        if axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {axis!r} "
+                             f"(axes: {mesh.axis_names})")
+        k = int(mesh.shape[axis])
+        lay = _resolve_push_layout(graph, layout, width, pad_multiple)
+        nbr, mask, weights = lay.neighbors, lay.mask, lay.weights
+        row_map = lay.row_map
+        rows = int(nbr.shape[0])
+        rows_pad = -(-rows // k) * k
+        if rows_pad != rows:
+            pad = rows_pad - rows
+            nbr = np.pad(nbr, ((0, pad), (0, 0)))
+            mask = np.pad(mask, ((0, pad), (0, 0)))
+            weights = np.pad(weights, ((0, pad), (0, 0)))
+            if row_map is not None:
+                # padding rows carry no mass (mask False -> weight 0); repeat
+                # the last real id so every local segment stays ascending
+                row_map = np.concatenate(
+                    [row_map, np.full(pad, row_map[-1], np.int32)])
+        row_sh = NamedSharding(mesh, P(axis, None))
+        repl = NamedSharding(mesh, P())
+        ShardedDeviceGraph.uploads += 1
+        return cls(
+            n=graph.n, m=graph.m, mesh=mesh, axis=axis, num_shards=k,
+            rows_per_shard=rows_pad // k,
+            edge_dst=jax.device_put(graph.edge_dst, repl),
+            out_offsets=jax.device_put(graph.out_offsets, repl),
+            out_degree=jax.device_put(graph.out_degree, repl),
+            in_neighbors=jax.device_put(nbr, row_sh),
+            in_mask=jax.device_put(mask, row_sh),
+            in_weights=jax.device_put(weights.astype(np.float32), row_sh),
+            in_row_map=None if row_map is None else jax.device_put(
+                row_map, NamedSharding(mesh, P(axis))),
+            ell_width=lay.width,
         )

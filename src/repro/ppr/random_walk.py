@@ -55,13 +55,16 @@ class WalkResult(NamedTuple):
 _BULK_RNG_ELEMS = 1 << 25
 
 
-@partial(jax.jit, static_argnames=("n", "num_walks", "num_steps", "bulk_rng"))
+@partial(jax.jit, static_argnames=("n", "num_walks", "num_steps", "bulk_rng",
+                                   "lanes"))
 def residual_walks(edge_dst: jax.Array, out_offsets: jax.Array,
                    out_degree: jax.Array, residual: jax.Array,
                    key: jax.Array, *, alpha: float, n: int,
                    num_walks: int, num_steps: int,
                    active_walks: jax.Array | None = None,
-                   bulk_rng: bool | None = None) -> jax.Array:
+                   bulk_rng: bool | None = None,
+                   lanes: int | None = None,
+                   lane_offset: jax.Array | int = 0) -> jax.Array:
     """Monte-Carlo estimate of sum_v r(v) * pi(v, t) for one batch row.
 
     residual: (n,) non-negative. Returns (n,) endpoint mass.
@@ -79,12 +82,24 @@ def residual_walks(edge_dst: jax.Array, out_offsets: jax.Array,
     callers that vmap this function over a batch MUST size the decision to
     B * L * W (this function only sees per-row shapes) — None falls back to
     the per-row heuristic.
+
+    ``lanes``/``lane_offset`` carve this call's slice out of the global
+    ``num_walks`` lane budget (the node-sharded path, DESIGN.md §9): the RNG
+    stream is drawn for all num_walks lanes — so the union over shards is
+    bit-identical to a single-device run *at the same num_walks* (shard
+    counts dividing the pow2 budget keep it unchanged; others widen it) —
+    but only lanes [lane_offset, lane_offset + lanes) are advanced through
+    the graph, and weights use *global* lane ids so the active_walks cutoff
+    lands on the same walkers. Callers psum the per-shard endpoint masses.
     """
+    lanes_local = num_walks if lanes is None else lanes
     r_sum = residual.sum()
     csum = jnp.cumsum(residual)
     k_start, k_walk = jax.random.split(key)
     # inverse-CDF start sampling proportional to residual
     u = jax.random.uniform(k_start, (num_walks,)) * r_sum
+    if lanes is not None:
+        u = jax.lax.dynamic_slice_in_dim(u, lane_offset, lanes_local)
     starts = jnp.searchsorted(csum, u, side="left").astype(jnp.int32)
     starts = jnp.clip(starts, 0, n - 1)
 
@@ -97,11 +112,14 @@ def residual_walks(edge_dst: jax.Array, out_offsets: jax.Array,
         new_alive = jnp.logical_and(alive, jnp.logical_not(stop))
         return jnp.where(new_alive, nxt, pos), new_alive
 
-    init = (starts, jnp.ones(num_walks, bool))
+    init = (starts, jnp.ones(lanes_local, bool))
     if bulk_rng is None:
         bulk_rng = num_steps * num_walks <= _BULK_RNG_ELEMS
     if bulk_rng:
         us = jax.random.randint(k_walk, (num_steps, num_walks), 0, 1 << 30)
+        if lanes is not None:
+            us = jax.lax.dynamic_slice_in_dim(us, lane_offset, lanes_local,
+                                              axis=1)
 
         def step(carry, u_step):
             return advance(*carry, u_step), None
@@ -110,15 +128,18 @@ def residual_walks(edge_dst: jax.Array, out_offsets: jax.Array,
     else:
         def step_keyed(carry, step_key):
             u_step = jax.random.randint(step_key, (num_walks,), 0, 1 << 30)
+            if lanes is not None:
+                u_step = jax.lax.dynamic_slice_in_dim(u_step, lane_offset,
+                                                      lanes_local)
             return advance(*carry, u_step), None
 
         keys = jax.random.split(k_walk, num_steps)
         (endpos, _), _ = jax.lax.scan(step_keyed, init, keys)
     if active_walks is None:
-        weights = jnp.full((num_walks,), r_sum / num_walks, residual.dtype)
+        weights = jnp.full((lanes_local,), r_sum / num_walks, residual.dtype)
     else:
         act = jnp.clip(active_walks, 1, num_walks).astype(residual.dtype)
-        lane = jnp.arange(num_walks)
+        lane = lane_offset + jnp.arange(lanes_local)   # global lane ids
         weights = jnp.where(lane < act, r_sum / act, 0.0).astype(residual.dtype)
     return jax.ops.segment_sum(weights, endpos, num_segments=n)
 

@@ -72,6 +72,35 @@ def test_width_heuristic_lane_aligned_and_cheaper():
     assert dense_cells >= 10 * sliced_cells
 
 
+def test_width_floor_follows_backend():
+    """Real-TPU lane floor (ROADMAP follow-up): with the backend reporting
+    TPU the default sliced width snaps to multiples of 128 (the kernel's
+    lane-chunk width); interpret/CPU keeps the cheap 8."""
+    import repro.ppr.graph as graph_mod
+
+    g = powerlaw_graph(400, seed=1)
+    assert graph_mod._default_pad_multiple() == 8       # CPU test session
+    w_cpu = g.sliced_ell_width()
+    assert w_cpu % 8 == 0
+    # explicit 128 floor — what a TPU deployment resolves to
+    w_tpu = g.sliced_ell_width(pad_multiple=128)
+    assert w_tpu % 128 == 0 and w_tpu >= 128
+    deg = g.in_degree.astype(np.int64)
+    dense_w = ((g.max_in_degree + 127) // 128) * 128
+    cells = {W: int(np.ceil(deg / W).sum()) * W
+             for W in (128, 256, dense_w)}
+    assert cells[w_tpu] == min(cells.values())          # still area-minimal
+    # the backend hook itself drives the default resolution
+    orig = graph_mod._default_pad_multiple
+    try:
+        graph_mod.__dict__["_default_pad_multiple"] = lambda: 128
+        assert g.sliced_ell_width() % 128 == 0
+        sl = g.ell_in_sliced()
+        assert sl.width % 128 == 0
+    finally:
+        graph_mod.__dict__["_default_pad_multiple"] = orig
+
+
 def test_sliced_view_invariants():
     g = powerlaw_graph(300, seed=2)
     sl = g.ell_in_sliced(width=12, pad_multiple=8)   # rounds up to 16

@@ -4,10 +4,10 @@
 #
 #     tools/ci.sh
 #
-# The kernel bench runs TWICE and the per-row minima (each row is already a
-# min-of-repeats, benchmarks/common.py) are compared against the COMMITTED
-# BENCH_kernels.json baseline (git HEAD when available, else the working-tree
-# file) through tools/bench_compare.py with a tolerance band ($BENCH_TOL,
+# The kernel + fora-hot-path benches run TWICE and the per-row minima (each
+# row is already a min-of-repeats, benchmarks/common.py) are compared against
+# the COMMITTED BENCH_kernels.json baseline (git HEAD when available, else
+# the working-tree file) through tools/bench_compare.py with a band ($BENCH_TOL,
 # default 2.0x), FAILING the build on regression. Comparing against the
 # committed file — not the last run's output — keeps repeated sub-tolerance
 # slowdowns from ratcheting past the band unnoticed. On a passing run the
@@ -18,12 +18,19 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+# the forced-8-device leg below covers the sharded subprocess test directly,
+# so the main run skips the redundant inner relaunch
+REPRO_SHARDED_SUBPROCESS=skip python -m pytest -x -q
+
+# multi-device PPR: sharded-vs-single parity, transfer guard, executor
+# devices=k — on a host platform forced to 8 devices (DESIGN.md §9)
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -x -q tests/test_sharded.py -k "not subprocess"
 
 trap 'rm -f BENCH_kernels.committed.json BENCH_kernels.fresh1.json \
             BENCH_kernels.fresh2.json BENCH_kernels.merged.json' EXIT
-python -m benchmarks.run --only kernels --json BENCH_kernels.fresh1.json
-python -m benchmarks.run --only kernels --json BENCH_kernels.fresh2.json
+python -m benchmarks.run --only kernels,fora_hot --json BENCH_kernels.fresh1.json
+python -m benchmarks.run --only kernels,fora_hot --json BENCH_kernels.fresh2.json
 
 baseline=BENCH_kernels.json
 if git show HEAD:BENCH_kernels.json > BENCH_kernels.committed.json 2>/dev/null
