@@ -1,0 +1,125 @@
+"""Serving-runtime simulation: deadline hit-rate and core-hours versus
+static Lemma-2 provisioning, under Poisson arrivals and injected failures.
+
+Fully seeded and virtual-time — every number here is DETERMINISTIC (bit
+identical on replay), which is what lets the CI tolerance gate treat the
+quality metrics like perf rows. All gated rows are "lower is better"
+(miss rate, lateness, core-hour ratio), offset by +1 so a zero-baseline row
+stays gateable (tools/bench_compare.py skips rows with baseline <= 0):
+
+* ``serving/miss_rate_pct_p1``      — 100*(1-hit_rate) + 1
+* ``serving/lateness_p99_ms_p1``    — p99 lateness + 1 (ms)
+* ``serving/core_hours_vs_lemma2_pct`` — 100 * runtime/static core-seconds
+* ``serving/failure_unfinished_p1`` — unfinished jobs in the failure run + 1
+* ``serving/sim_wall_us``           — wall time of one simulation drive
+
+``--check`` mode (the CI smoke leg) re-runs the same seeded scenario twice
+and asserts: deterministic replay, >= 95% deadline hit-rate, total
+core-hours strictly below static per-job Lemma-2 provisioning, and the
+failure-injection run completing every job via readmission (no job loss).
+
+    PYTHONPATH=src python -m benchmarks.serving_sim [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.serving import (CorePool, ServingConfig, ServingReport,
+                           ServingRuntime, SimJobExecutor)
+
+from .common import emit
+
+SEED = 0
+NUM_JOBS = 24
+RATE = 0.6                 # jobs/second
+QUERIES = (150, 400)
+DEADLINE = (6.0, 12.0)
+POOL_CORES = 48
+# failure scenario: tight pool + losing 9 of 12 devices overcommits the
+# grants, forcing shed_plan cuts and per-job readmission (not just a
+# capacity note in the rescale event)
+FAIL_POOL_CORES = 12
+FAIL_RATE = 0.8
+FAIL_QUERIES = (250, 500)
+FAIL_DEADLINE = (5.0, 8.0)
+FAILURES = {4.0: [0, 1, 2, 3, 4, 5, 6, 7], 9.0: [8]}
+
+
+def _drive(pool_cores: int, *, failures: dict | None = None,
+           num_jobs: int = NUM_JOBS, seed: int = SEED,
+           rate: float = RATE, queries: tuple = QUERIES,
+           deadline: tuple = DEADLINE) -> ServingReport:
+    rt = ServingRuntime(
+        CorePool.of(pool_cores),
+        lambda job_id, nq, sd: SimJobExecutor(mean=0.05, cv=0.3, seed=sd),
+        ServingConfig(scaling_factor=0.9, sample_frac=0.05))
+    rt.submit_poisson(num_jobs, rate, queries=queries, deadline=deadline,
+                      seed=seed)
+    if failures:
+        rt.inject_failures(failures)
+    return rt.run()
+
+
+def _drive_failure_run() -> ServingReport:
+    return _drive(FAIL_POOL_CORES, failures=FAILURES, num_jobs=10,
+                  rate=FAIL_RATE, queries=FAIL_QUERIES,
+                  deadline=FAIL_DEADLINE)
+
+
+def run() -> None:
+    t0 = time.perf_counter()
+    rep = _drive(POOL_CORES)
+    wall_us = (time.perf_counter() - t0) * 1e6
+
+    miss_pct = 100.0 * (1.0 - rep.hit_rate)
+    ratio_pct = 100.0 * rep.core_seconds / rep.lemma2_core_seconds
+    emit("serving/miss_rate_pct_p1", miss_pct + 1.0,
+         f"hit_rate={rep.hit_rate:.3f};jobs={len(rep.records)}")
+    emit("serving/lateness_p99_ms_p1",
+         rep.lateness_quantile(0.99) * 1e3 + 1.0,
+         f"p50_ms={rep.lateness_quantile(0.5) * 1e3:.1f}")
+    emit("serving/core_hours_vs_lemma2_pct", ratio_pct,
+         f"core_s={rep.core_seconds:.1f};lemma2={rep.lemma2_core_seconds:.1f}")
+    emit("serving/sim_wall_us", wall_us, f"end_t={rep.end_time:.1f}s")
+
+    frep = _drive_failure_run()
+    unfinished = len(frep.records) - frep.completed
+    emit("serving/failure_unfinished_p1", unfinished + 1.0,
+         f"done={frep.completed};extended={frep.extended};"
+         f"degraded={frep.degraded}")
+
+
+def check() -> None:
+    """CI smoke assertions over the same seeded scenario (ISSUE 4)."""
+    rep_a = _drive(POOL_CORES)
+    rep_b = _drive(POOL_CORES)
+    assert rep_a == rep_b, "seeded serving sim is not replay-deterministic"
+    assert rep_a.hit_rate >= 0.95, \
+        f"deadline hit-rate {rep_a.hit_rate:.3f} < 0.95"
+    assert rep_a.core_seconds < rep_a.lemma2_core_seconds, (
+        f"runtime core-hours {rep_a.core_seconds:.1f} not below static "
+        f"Lemma-2 {rep_a.lemma2_core_seconds:.1f}")
+    frep = _drive_failure_run()
+    assert frep.completed == len(frep.records), (
+        f"failure run lost {len(frep.records) - frep.completed} job(s) "
+        "instead of readmitting")
+    assert frep.rejected == 0
+    assert frep.extended > 0, "failure run never exercised readmission"
+    print(f"serving_sim --check OK: hit_rate={rep_a.hit_rate:.3f} "
+          f"core_s={rep_a.core_seconds:.1f} < "
+          f"lemma2={rep_a.lemma2_core_seconds:.1f}; failure run "
+          f"done={frep.completed}/{len(frep.records)} "
+          f"(extended={frep.extended}, degraded={frep.degraded})")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="assert the CI smoke criteria instead of emitting "
+                         "benchmark rows")
+    if ap.parse_args().check:
+        check()
+    else:
+        run()

@@ -12,7 +12,8 @@ Public API:
 from .allocator import (Admission, DeviceAllocator, MeshPlan,
                         StragglerMonitor, plan_core_mesh)
 from .bounds import (BoundReport, InfeasibleDeadline, lemma1_lower_bound,
-                     lemma2_hoeffding_bound, required_cores)
+                     lemma2_hoeffding_bound, minimal_feasible_deadline,
+                     required_cores)
 from .dna import DnaResult, dna, dna_real
 from .estimator import (MeasuredTimeSource, RooflineTerms, RooflineTimeSource,
                         RuntimeStats, SimulatedTimeSource, TimeSource)
@@ -28,6 +29,6 @@ __all__ = [
     "SlotExecution", "SlotPlan", "StragglerMonitor", "TimeSource", "Z_TABLE",
     "build_slot_plan", "cochran_sample_size", "dna", "dna_real",
     "execute_plan", "fraction_sample_size", "lemma1_lower_bound",
-    "lemma2_hoeffding_bound", "num_slots", "plan_core_mesh",
-    "queries_per_slot", "required_cores", "z_score",
+    "lemma2_hoeffding_bound", "minimal_feasible_deadline", "num_slots",
+    "plan_core_mesh", "queries_per_slot", "required_cores", "z_score",
 ]

@@ -24,7 +24,8 @@ from typing import Any
 
 import numpy as np
 
-from .bounds import InfeasibleDeadline, lemma1_lower_bound, required_cores
+from .bounds import (InfeasibleDeadline, lemma1_lower_bound,
+                     minimal_feasible_deadline, required_cores)
 from .estimator import RuntimeStats
 
 
@@ -88,7 +89,8 @@ class DeviceAllocator:
         self.failed.add(device_index)
 
     def readmit(self, num_queries_left: int, deadline_left: float,
-                stats: RuntimeStats) -> "Admission":
+                stats: RuntimeStats, *,
+                cores_per_device: int = 1) -> "Admission":
         """Re-run the Lemma-1 admission over the *remaining* work after a
         failure, through the shared :func:`lemma1_lower_bound` (which also
         rejects ``t_max > T`` and non-positive deadlines — the cases a raw
@@ -96,7 +98,14 @@ class DeviceAllocator:
         reports whether the work fits *at the deadline that was asked*; when
         it does not, the minimal extension restoring feasibility (paper
         §III-A "prolong the duration") is returned with ``extended=True``
-        instead of failing the job."""
+        instead of failing the job.
+
+        ``cores_per_device`` converts the device-denominated capacity into
+        D&A cores when each device multiplexes several query lanes (the
+        serving runtime's ``CorePool`` passes its ``lanes_per_device``)."""
+        if cores_per_device < 1:
+            raise ValueError("cores_per_device must be >= 1")
+        capacity = self.capacity * cores_per_device
         if num_queries_left <= 0:
             return Admission(feasible=True, cores=0, deadline=deadline_left,
                              extended=False)
@@ -107,14 +116,13 @@ class DeviceAllocator:
             bound = None
         if bound is not None:
             need = required_cores(bound)
-            if need <= self.capacity:
+            if need <= capacity:
                 return Admission(feasible=True, cores=need,
                                  deadline=deadline_left, extended=False)
-        # Minimal T' with X * t_max / T' <= capacity (and T' >= t_max so a
-        # single worst-case query fits). The t_max clamp can leave slack, so
+        # The t_max clamp in the minimal extension can leave slack, so
         # re-derive the core need at T' rather than assuming full capacity.
-        new_deadline = max(stats.t_max,
-                           num_queries_left * stats.t_max / self.capacity)
+        new_deadline = minimal_feasible_deadline(num_queries_left,
+                                                 stats.t_max, capacity)
         cores = required_cores(
             num_queries_left * stats.t_max / new_deadline)
         return Admission(feasible=False, cores=cores,

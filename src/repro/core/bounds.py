@@ -63,6 +63,22 @@ def required_cores(bound: float) -> int:
     return max(1, math.ceil(bound))
 
 
+def minimal_feasible_deadline(num_queries: int, t_max: float,
+                              capacity: int) -> float:
+    """Paper §III-A "prolong the duration": the smallest T' at which
+    ``capacity`` cores pass the Lemma-1 admission — ``X * t_max / T' <=
+    capacity`` with ``T' >= t_max`` so a single worst-case query fits.
+    Shared by ``DeviceAllocator.readmit`` and the serving runtime's
+    admission ladder so the extension arithmetic cannot drift."""
+    if num_queries < 1:
+        raise ValueError("num_queries must be >= 1")
+    if t_max < 0:
+        raise ValueError("t_max must be >= 0")
+    if capacity < 1:
+        raise ValueError("capacity must be >= 1")
+    return max(t_max, num_queries * t_max / capacity)
+
+
 @dataclass(frozen=True)
 class BoundReport:
     """Both bounds side by side, as compared in the paper's Fig. 2."""

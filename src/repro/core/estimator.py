@@ -81,6 +81,14 @@ class RuntimeStats:
     def merged(self, other: "RuntimeStats") -> "RuntimeStats":
         return RuntimeStats(np.concatenate([self.times, other.times]))
 
+    def scaled(self, factor: float) -> "RuntimeStats":
+        """The same sample under a uniform time rescale — how the serving
+        runtime models DCAF-style degradation (a cheaper answer per query)
+        before any degraded measurement has been observed."""
+        if factor <= 0:
+            raise ValueError("factor must be > 0")
+        return RuntimeStats(self.times * factor)
+
 
 class TimeSource:
     """Strategy interface: produce per-query times for a set of query ids."""

@@ -37,25 +37,36 @@ class FailureInjector:
 class ElasticController:
     """Drives a train/serve loop through failures.
 
+    Failure signals come from BOTH sources on every tick: the injected
+    schedule (tests / chaos drills) and the live :class:`HeartbeatMonitor`
+    (a device whose heartbeats stopped is as failed as an injected one).
     on_rescale(healthy_count) is the caller's hook to rebuild mesh +
     re-place state from the last checkpoint (see launch/train.py).
     """
 
     allocator: DeviceAllocator
     injector: FailureInjector | None = None
+    heartbeat: HeartbeatMonitor | None = None
     on_rescale: Callable[[int], None] | None = None
     rescale_events: list[dict] = field(default_factory=list)
 
     def tick(self, step: int, stats: RuntimeStats | None = None,
              queries_left: int = 0, deadline_left: float = 0.0) -> bool:
-        """Process failures for this step. Returns True if a rescale
-        happened (caller must restart from checkpoint)."""
-        failed = self.injector.failures_at(step) if self.injector else []
+        """Process failures for this step — injected and heartbeat-detected.
+        Returns True if a rescale happened (caller must restart from
+        checkpoint)."""
+        failed = list(self.injector.failures_at(step)) if self.injector else []
+        silent: list[int] = []
+        if self.heartbeat is not None:
+            silent = [i for i in self.heartbeat.dead()
+                      if i not in self.allocator.failed and i not in failed]
+            failed += silent
         if not failed:
             return False
         for idx in failed:
             self.allocator.mark_failed(idx)
         event = {"step": step, "failed": list(failed),
+                 "missed_heartbeat": silent,
                  "healthy": len(self.allocator.healthy),
                  "time": time.time()}
         if stats is not None and queries_left > 0:

@@ -14,18 +14,43 @@ a node-sharded mesh of k chips (``ForaExecutor(devices=k)``).
     PYTHONPATH=src python -m repro.launch.serve --workload ppr \\
         --dataset web-stanford --queries 512 --deadline 30 --max-cores 64 \\
         [--platform tpu] [--devices 4] [--ell-layout auto] [--no-fused]
+
+``--daemon`` switches from the one-shot pipeline to the continuous serving
+runtime (DESIGN.md §10): a seeded Poisson arrival process
+(``--arrival-rate``, ``--num-jobs``) or a replayed JSON trace (``--trace``)
+of deadline-tagged jobs shares one core pool, with mid-flight replanning,
+DCAF-style degradation and §III-A deadline extension:
+
+    PYTHONPATH=src python -m repro.launch.serve --workload lm-decode \\
+        --daemon --arrival-rate 0.5 --num-jobs 16 --queries 256 --deadline 8
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+
+
+def _print_mesh_plan(cores: int, max_lanes: int) -> None:
+    """cores -> devices x lanes on the hardware actually present (the paper
+    stops at an integer; lanes time-multiplex a device when the demand
+    exceeds the chip count)."""
+    import jax
+
+    from ..core import InfeasibleDeadline, plan_core_mesh
+
+    try:
+        plan = plan_core_mesh(cores, len(jax.devices()),
+                              max_lanes_per_device=max_lanes or None)
+    except InfeasibleDeadline as e:
+        raise SystemExit(f"REJECTED at mesh mapping: {e}") from e
+    print(f"  cores->mesh        : {plan} on {jax.default_backend()}")
 
 
 def serve_ppr(args) -> None:
     import jax
 
-    from ..core import (InfeasibleDeadline, dna_real, fraction_sample_size,
-                        plan_core_mesh)
+    from ..core import InfeasibleDeadline, dna_real, fraction_sample_size
     from ..ppr import ForaExecutor, ForaParams, PprWorkload, load
     from ..ppr.datasets import TABLE1
 
@@ -46,7 +71,7 @@ def serve_ppr(args) -> None:
                             ell_layout=args.ell_layout,
                             walk_safety=args.walk_safety,
                             devices=args.devices)
-    s = fraction_sample_size(args.queries, 0.05)
+    s = fraction_sample_size(args.queries, args.sample_frac)
     # fold the mesh capacity into Alg. 2's C_max so an over-cap demand is
     # rejected by the up-front Lemma-1 admission, not after the workload ran
     max_cores = args.max_cores
@@ -65,29 +90,22 @@ def serve_ppr(args) -> None:
     print(f"  reduction          : {res.reduction_vs_lemma2_pct:.2f}%")
     print(f"  completion         : {res.completion_time:.3f}s "
           f"(accepted={res.accepted})")
-    # The paper stops at an integer; here the grant becomes a mesh shape on
-    # the hardware actually present (lanes time-multiplex a device when the
-    # demand exceeds the chip count).
-    try:
-        plan = plan_core_mesh(res.cores, len(jax.devices()),
-                              max_lanes_per_device=args.max_lanes or None)
-    except InfeasibleDeadline as e:
-        raise SystemExit(f"REJECTED at mesh mapping: {e}") from e
-    slot_note = (f"slot mesh: {args.devices}-chip shard" if args.devices > 1
-                 else "slot mesh: single chip")
-    print(f"  cores->mesh        : {plan} on "
-          f"{jax.default_backend()} ({slot_note})")
+    _print_mesh_plan(res.cores, args.max_lanes)
+    print(f"  slot mesh          : "
+          f"{f'{args.devices}-chip shard' if args.devices > 1 else 'single chip'}")
 
 
 def serve_sim(args) -> None:
     """Generic serve-step workload with modelled times (LM decode / DIN)."""
-    from ..core import InfeasibleDeadline, SimulatedTimeSource, dna_real
+    from ..core import (InfeasibleDeadline, SimulatedTimeSource, dna_real,
+                        fraction_sample_size)
 
     src = SimulatedTimeSource(mean=args.step_time, cv=args.cv, seed=args.seed)
     try:
         res = dna_real(args.queries, args.deadline, lambda ids: src.measure(ids),
                        max_cores=args.max_cores,
-                       sample_size=max(4, args.queries // 20),
+                       sample_size=max(4, fraction_sample_size(
+                           args.queries, args.sample_frac)),
                        scaling_factor=args.d)
     except InfeasibleDeadline as e:
         raise SystemExit(f"REJECTED: {e}") from e
@@ -95,6 +113,68 @@ def serve_sim(args) -> None:
     print(f"  D&A_REAL cores     : {res.cores}")
     print(f"  Lemma-2 bound cores: {res.bounds.lemma2_cores}")
     print(f"  reduction          : {res.reduction_vs_lemma2_pct:.2f}%")
+    # the grant becomes a mesh shape for the sim workloads too (was PPR-only)
+    _print_mesh_plan(res.cores, args.max_lanes)
+
+
+def serve_daemon(args) -> None:
+    """Continuous serving runtime: Poisson or trace-replayed arrivals over a
+    shared core pool with mid-flight replanning (DESIGN.md §10)."""
+    from ..serving import (CorePool, ServingConfig, ServingRuntime,
+                           SimJobExecutor)
+
+    cfg = ServingConfig(scaling_factor=args.d, sample_frac=args.sample_frac)
+    pool = CorePool.of(args.max_cores,
+                       lanes_per_device=max(1, args.max_lanes or 1))
+
+    if args.workload == "ppr":
+        import jax
+
+        from ..ppr import ForaExecutor, ForaParams, load
+
+        if args.devices > 1 and not args.fused:
+            raise SystemExit("REJECTED: --devices > 1 requires the fused "
+                             "hot path (drop --no-fused)")
+        if args.devices > len(jax.devices()):
+            raise SystemExit(f"REJECTED: --devices {args.devices} but only "
+                             f"{len(jax.devices())} jax device(s) present")
+        graph = load(args.dataset, scale=args.scale)
+
+        def factory(job_id: int, num_queries: int, seed: int):
+            from ..ppr import PprWorkload
+
+            return ForaExecutor(
+                workload=PprWorkload(graph=graph, num_queries=num_queries,
+                                     seed=seed),
+                params=ForaParams(alpha=0.2, epsilon=args.epsilon),
+                block_size=args.block_size, fused=args.fused,
+                ell_layout=args.ell_layout, walk_safety=args.walk_safety,
+                devices=args.devices)
+    else:
+        def factory(job_id: int, num_queries: int, seed: int):
+            return SimJobExecutor(mean=args.step_time, cv=args.cv, seed=seed)
+
+    rt = ServingRuntime(pool, factory, cfg)
+    if args.trace:
+        with open(args.trace) as f:
+            jobs = rt.submit_trace(json.load(f))
+        src = f"trace {args.trace} ({len(jobs)} jobs)"
+    else:
+        rt.submit_poisson(args.num_jobs, args.arrival_rate,
+                          queries=args.queries, deadline=args.deadline,
+                          seed=args.seed)
+        src = (f"poisson rate={args.arrival_rate}/s x {args.num_jobs} jobs "
+               f"(X={args.queries}, T={args.deadline}s)")
+    report = rt.run()
+    print(f"daemon workload={args.workload} {src}")
+    print(f"  pool               : {pool.total} cores "
+          f"({pool.allocator.capacity} devices x {pool.lanes_per_device} "
+          f"lanes)")
+    print(f"  {report.summary()}")
+    if report.lemma2_core_seconds:
+        saved = 100.0 * (1.0 - report.core_seconds
+                         / report.lemma2_core_seconds)
+        print(f"  core-hours saved vs static Lemma-2: {saved:.1f}%")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -132,12 +212,28 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--cv", type=float, default=0.3)
     ap.add_argument("--d", type=float, default=0.9)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sample-frac", type=float, default=0.05,
+                    help="preprocessing sample fraction (paper §IV-A uses "
+                         "5%%; was hardcoded)")
+    ap.add_argument("--daemon", action="store_true",
+                    help="continuous serving runtime (DESIGN.md §10) "
+                         "instead of the one-shot pipeline")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="daemon: Poisson arrival rate (jobs/second)")
+    ap.add_argument("--num-jobs", type=int, default=16,
+                    help="daemon: number of jobs to serve")
+    ap.add_argument("--trace", default="",
+                    help="daemon: replay a JSON trace "
+                         '[{"at":,"queries":,"deadline":}, ...] instead of '
+                         "Poisson arrivals")
     args = ap.parse_args(argv)
     if args.platform is not None:
         import jax
 
         jax.config.update("jax_platform_name", args.platform)
-    if args.workload == "ppr":
+    if args.daemon:
+        serve_daemon(args)
+    elif args.workload == "ppr":
         serve_ppr(args)
     else:
         serve_sim(args)

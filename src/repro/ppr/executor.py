@@ -26,7 +26,7 @@ from __future__ import annotations
 import math
 import time
 from collections.abc import Sequence
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import numpy as np
@@ -53,7 +53,14 @@ class PprWorkload:
                                     dtype=np.int64)
 
     def source_of(self, qid: int) -> int:
-        return int(self.sources[qid % self.num_queries])
+        """Source vertex of query ``qid``. Out-of-range ids raise — the old
+        silent ``qid % num_queries`` wraparound masked slot-plan indexing
+        bugs (a plan cell pointing past the workload produced a *valid*
+        source and a wrong answer instead of an error)."""
+        if not 0 <= qid < self.num_queries:
+            raise IndexError(
+                f"query id {qid} out of range [0, {self.num_queries})")
+        return int(self.sources[qid])
 
 
 @dataclass
@@ -143,9 +150,9 @@ class ForaExecutor:
         return min(_pow2_ceil_host(need), default_walk_budget(rp))
 
     def _probe_qids(self) -> list[int]:
-        probes = {0, 1, self.workload.num_queries // 2,
-                  self.workload.num_queries - 1}
-        return sorted(q for q in probes if q >= 0)
+        nq = self.workload.num_queries
+        probes = {0, 1, nq // 2, nq - 1}
+        return sorted(q for q in probes if 0 <= q < nq)
 
     def warmup(self) -> None:
         """Pre-compile every executable variant that measured queries can
@@ -172,12 +179,16 @@ class ForaExecutor:
                         self.workload.graph, layout=self.ell_layout)
             if self._num_walks is None:
                 self._num_walks = self._calibrate_walk_budget()
+        nq = self.workload.num_queries
         for qid in self._probe_qids():
             if self.block_size <= 1:
                 src = self._block_sources([qid])
             else:
-                src = self._block_sources(
-                    range(qid, qid + self.block_size))
+                # clamp the probe window inside the workload (source_of no
+                # longer wraps out-of-range ids)
+                size = min(self.block_size, nq)
+                start = min(qid, nq - size)
+                src = self._block_sources(range(start, start + size))
             self._run_block(src, seed=qid)
             self._warmed_sizes.add(len(src))
         self._warmed = True
@@ -190,6 +201,66 @@ class ForaExecutor:
         src = self._block_sources(range(size))
         self._run_block(src, seed=0)
         self._warmed_sizes.add(size)
+
+    def run_chunk(self, query_ids: Sequence[int], *,
+                  seed: int | None = None) -> RuntimeStats:
+        """One chunk of queries as a SINGLE batched device step — the
+        resumable unit the serving runtime feeds a slot at a time
+        (DESIGN.md §10), yielding control back to the event loop between
+        device steps.
+
+        The zero-host-sync-per-block contract survives chunking: staging the
+        chunk's sources and PRNG key is wrapped in an explicit
+        ``transfer_guard("allow")`` scope (the block's sanctioned upload), so
+        the fused call itself still runs under whatever ambient guard the
+        caller holds — pinned by a ``transfer_guard("disallow")`` test — and
+        the trailing ``block_until_ready`` is the chunk's single sync.
+        Compile spikes for unseen chunk sizes are absorbed outside the
+        measured region (``_warm_size``), like the block path.
+        """
+        ids = list(query_ids)
+        if not ids:
+            raise ValueError("empty query chunk")
+        self.warmup()
+        self._warm_size(len(ids))
+        if seed is None:
+            seed = ids[0]
+        if not self.fused:
+            src = self._block_sources(ids)
+            t0 = time.perf_counter()
+            self._run_block(src, seed=seed)
+            dt = time.perf_counter() - t0
+        else:
+            with jax.transfer_guard("allow"):
+                src = jax.device_put(
+                    np.ascontiguousarray(self._block_sources(ids),
+                                         dtype=np.int32))
+                key = jax.random.PRNGKey(seed)
+            t0 = time.perf_counter()
+            res = fora_fused(self._device_graph, src, self.params, key,
+                             num_walks=self._num_walks)
+            res.pi.block_until_ready()          # the chunk's single sync
+            dt = time.perf_counter() - t0
+        self.calls += 1
+        return RuntimeStats(np.full(len(ids), dt / len(ids)))
+
+    def degrade(self, factor: float) -> None:
+        """DCAF-style graceful degradation for the *remaining* queries: scale
+        the per-query budget down by raising epsilon (coarser FORA guarantee
+        -> higher rmax, fewer pushes and walks) and capping the calibrated
+        walk-lane budget by ``factor`` (pow2-floored so the executable stays
+        cacheable). The next call warms the degraded executable outside the
+        measured region; answers stay unbiased, only noisier."""
+        if not 0.0 < factor < 1.0:
+            raise ValueError(f"factor must be in (0,1), got {factor}")
+        self.params = replace(self.params,
+                              epsilon=self.params.epsilon / factor)
+        if self._num_walks is not None and self._num_walks > 1:
+            capped = max(1, int(self._num_walks * factor))
+            self._num_walks = 1 << (capped.bit_length() - 1)   # pow2 floor
+        # params changed -> every compiled variant is stale; re-warm lazily
+        self._warmed = False
+        self._warmed_sizes.clear()
 
     def __call__(self, query_ids: Sequence[int]) -> RuntimeStats:
         ids = list(query_ids)

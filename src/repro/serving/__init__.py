@@ -1,0 +1,20 @@
+"""Online D&A serving runtime (DESIGN.md §10).
+
+Public API:
+    CorePool                         shared devices x lanes core pool
+    Job, JobRecord, JobState         deadline-tagged requests + outcomes
+    ServingConfig, ServingReport     loop knobs / aggregate results
+    ServingRuntime                   the continuous-arrivals event loop
+    SimJobExecutor                   seeded simulated per-job executor
+    run_single_job                   one-shot path (dna_real, bit-for-bit)
+"""
+
+from .job import Job, JobRecord, JobState
+from .pool import CorePool
+from .runtime import (ServingConfig, ServingReport, ServingRuntime,
+                      SimJobExecutor, run_single_job)
+
+__all__ = [
+    "CorePool", "Job", "JobRecord", "JobState", "ServingConfig",
+    "ServingReport", "ServingRuntime", "SimJobExecutor", "run_single_job",
+]

@@ -1,0 +1,131 @@
+"""Shared core pool for the online serving runtime (DESIGN.md §10).
+
+The one-shot pipeline grants each job its own simulated core count; a
+serving runtime must instead carve concurrent jobs' grants out of ONE
+machine. ``CorePool`` is that machine: ``devices x lanes_per_device`` cores
+(the :func:`repro.core.plan_core_mesh` arithmetic), with the device side
+tracked by a :class:`repro.core.DeviceAllocator` so failures marked by the
+elastic controller shrink the pool capacity live.
+
+Grants are integer core counts keyed by job id. The pool never blocks —
+``acquire``/``grow`` return what could actually be granted and the runtime
+replans around the answer. A failure can leave the pool *overcommitted*
+(``used > total``); ``shed_plan`` names the per-job grant cuts that restore
+feasibility, largest grants first, and the runtime readmits those jobs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..core.allocator import DeviceAllocator, MeshPlan, plan_core_mesh
+
+
+@dataclass
+class CorePool:
+    """Devices x lanes of grantable cores shared by all in-flight jobs."""
+
+    allocator: DeviceAllocator
+    lanes_per_device: int = 1
+    grants: dict[int, int] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.lanes_per_device < 1:
+            raise ValueError("lanes_per_device must be >= 1")
+
+    @classmethod
+    def of(cls, num_devices: int, lanes_per_device: int = 1,
+           spares_fraction: float = 0.0) -> "CorePool":
+        return cls(DeviceAllocator(devices=list(range(num_devices)),
+                                   spares_fraction=spares_fraction),
+                   lanes_per_device=lanes_per_device)
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def total(self) -> int:
+        """Grantable cores on the current healthy device set."""
+        return self.allocator.capacity * self.lanes_per_device
+
+    @property
+    def used(self) -> int:
+        return sum(self.grants.values())
+
+    @property
+    def free(self) -> int:
+        return max(0, self.total - self.used)
+
+    @property
+    def overcommit(self) -> int:
+        """Cores granted beyond capacity (non-zero only after failures)."""
+        return max(0, self.used - self.total)
+
+    def grant_of(self, job_id: int) -> int:
+        return self.grants.get(job_id, 0)
+
+    # -- grant lifecycle ---------------------------------------------------
+    def acquire(self, job_id: int, cores: int) -> bool:
+        """All-or-nothing initial grant (Lemma-1 admission decides ``cores``;
+        a partial grant is a different plan, so the runtime asks again)."""
+        if cores < 1:
+            raise ValueError("cores must be >= 1")
+        if job_id in self.grants:
+            raise ValueError(f"job {job_id} already holds a grant")
+        if cores > self.free:
+            return False
+        self.grants[job_id] = cores
+        return True
+
+    def grow(self, job_id: int, cores: int) -> int:
+        """Best-effort grant increase; returns the cores actually added."""
+        if cores < 0:
+            raise ValueError("cores must be >= 0")
+        add = min(cores, self.free)
+        if add:
+            self.grants[job_id] = self.grants.get(job_id, 0) + add
+        return add
+
+    def shrink(self, job_id: int, cores: int) -> int:
+        """Release ``cores`` of a job's grant back to the pool (clamped so at
+        least one core remains); returns the cores actually released."""
+        held = self.grants.get(job_id, 0)
+        give = max(0, min(cores, held - 1))
+        if give:
+            self.grants[job_id] = held - give
+        return give
+
+    def release(self, job_id: int) -> int:
+        """Return a job's whole grant (completion/rejection)."""
+        return self.grants.pop(job_id, 0)
+
+    # -- failure handling --------------------------------------------------
+    def fail_device(self, device_index: int) -> None:
+        self.allocator.mark_failed(device_index)
+
+    def shed_plan(self) -> dict[int, int]:
+        """Per-job grant cuts restoring ``used <= total`` after a failure.
+
+        Cuts come off the largest grants first (they have the most slack in
+        the D&A arithmetic: halving a large k inflates ell the least), one
+        core at a time, never below one core. Returns {job_id: cores_to_cut};
+        the runtime applies each cut via :meth:`shrink` + stepper resize and
+        re-runs admission for the job.
+        """
+        over = self.overcommit
+        cuts: dict[int, int] = {}
+        if not over:
+            return cuts
+        held = dict(self.grants)
+        while over > 0:
+            victim = max(held, key=lambda j: (held[j], j), default=None)
+            if victim is None or held[victim] <= 1:
+                break                      # nothing left to cut
+            held[victim] -= 1
+            cuts[victim] = cuts.get(victim, 0) + 1
+            over -= 1
+        return cuts
+
+    # -- hardware mapping --------------------------------------------------
+    def mesh_plan(self, cores: int) -> MeshPlan:
+        """Map a grant onto the healthy device set (cores = devices x lanes)."""
+        return plan_core_mesh(cores, self.allocator.capacity,
+                              max_lanes_per_device=self.lanes_per_device)

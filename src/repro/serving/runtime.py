@@ -1,0 +1,525 @@
+"""Online D&A serving runtime (DESIGN.md §10).
+
+The paper's pipeline is one-shot: sample, grant, execute a static slot
+plan, report. This module turns it into a *continuous* runtime: a seeded
+arrival process (Poisson or a replayed trace) delivers deadline-tagged
+:class:`Job`s; each passes Lemma-1 admission against the shared
+:class:`CorePool`, receives a D&A grant, and executes its slots
+incrementally through a :class:`repro.core.slots.SlotStepper`. Between
+slots the runtime folds the completed slot's times into the job's rolling
+estimate and re-runs the Algorithm-2 arithmetic against live statistics:
+
+* **ahead**  -> shrink the grant, release cores back to the pool;
+* **behind** -> grow the grant from the pool's free cores;
+* **pool exhausted & miss predicted** -> DCAF-style graceful degradation
+  (the executor's ``degrade`` hook raises epsilon / caps the walk budget
+  for the *remaining* queries), preferring degraded answers over rejected
+  jobs; deadline extension (paper §III-A) is the last resort.
+
+Failures plug in through :class:`repro.ft.elastic.ElasticController`: a
+failure event shrinks the pool, overcommitted grants are shed largest-first
+(:meth:`CorePool.shed_plan`) and every affected job is *readmitted* over its
+remaining work (``DeviceAllocator.readmit``), extending its deadline when
+capacity no longer suffices — jobs complete late rather than being lost.
+
+Time is virtual: per-query durations come from the executor's
+:class:`RuntimeStats` (measured wall time for the real FORA engine,
+seeded draws for simulation) and drive an event heap, so the same loop
+serves a live daemon and a deterministic, replayable simulation.
+
+The one-shot path is the degenerate case — a single job, no arrivals,
+``replan=False`` reproduces ``dna_real``'s cores/completion numbers
+bit-for-bit (regression-tested), so paper-faithful results are unchanged.
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections.abc import Sequence
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+
+from ..core.bounds import (BoundReport, InfeasibleDeadline,
+                           lemma1_lower_bound, minimal_feasible_deadline,
+                           required_cores)
+from ..core.dna import _draw_sample
+from ..core.estimator import RuntimeStats, SimulatedTimeSource
+from ..core.sampling import fraction_sample_size
+from ..core.slots import SlotStepper, num_slots, queries_per_slot
+from ..ft.elastic import ElasticController, FailureInjector
+from .job import Job, JobRecord, JobState
+from .pool import CorePool
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Knobs of the serving loop (defaults mirror Algorithm 2)."""
+
+    scaling_factor: float = 0.9        # d <= 1, absorbs run-time fluctuation
+    sample_frac: float = 0.05          # preprocessing fraction (paper §IV-A)
+    sample_size: int | None = None     # fixed s overriding the fraction
+    preprocess_cores: int = 1          # c << s (Alg. 2 Line 1)
+    replan: bool = True                # re-run Alg. 2 arithmetic between slots
+    degrade: bool = True               # DCAF-style graceful degradation
+    degrade_factor: float = 0.5        # per-step time scale when degrading
+    max_degrades: int = 2              # degradation depth cap per job
+    extend: bool = True                # §III-A deadline extension fallback
+    p_f: float = 0.05                  # Lemma-2 failure prob (reporting only)
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.scaling_factor <= 1.0:
+            raise ValueError("scaling factor d must be in (0,1]")
+        if not 0.0 < self.degrade_factor < 1.0:
+            raise ValueError("degrade_factor must be in (0,1)")
+        if self.preprocess_cores < 1:
+            raise ValueError("preprocess_cores must be >= 1")
+
+
+@dataclass(frozen=True)
+class ServingReport:
+    """Aggregate outcome of a runtime drive (deterministic under a seed)."""
+
+    records: tuple[JobRecord, ...]
+    end_time: float
+
+    @property
+    def completed(self) -> int:
+        return sum(r.state == JobState.DONE.value for r in self.records)
+
+    @property
+    def rejected(self) -> int:
+        return sum(r.state == JobState.REJECTED.value for r in self.records)
+
+    @property
+    def degraded(self) -> int:
+        return sum(r.degraded for r in self.records)
+
+    @property
+    def extended(self) -> int:
+        return sum(r.extended for r in self.records)
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of ALL submitted jobs answered by their original
+        deadline (rejections and extensions that finish late count as
+        misses)."""
+        if not self.records:
+            return 1.0
+        return sum(r.hit for r in self.records) / len(self.records)
+
+    def lateness_quantile(self, q: float) -> float:
+        """Lateness quantile over COMPLETED jobs only — a rejected or
+        unfinished job has no lateness to report, and folding it in as 0.0
+        would let the best-looking entries of the distribution be the worst
+        outcomes (rejections are surfaced separately, like hit_rate)."""
+        late = [r.lateness for r in self.records
+                if r.state == JobState.DONE.value]
+        return float(np.quantile(late, q)) if late else 0.0
+
+    @property
+    def core_seconds(self) -> float:
+        return sum(r.core_seconds for r in self.records)
+
+    @property
+    def lemma2_core_seconds(self) -> float:
+        """Static per-job Lemma-2 provisioning: every job books its
+        Hoeffding core count for its whole SLA window."""
+        return sum(r.lemma2_core_seconds for r in self.records)
+
+    def summary(self) -> str:
+        n = len(self.records)
+        ratio = (self.core_seconds / self.lemma2_core_seconds
+                 if self.lemma2_core_seconds else float("nan"))
+        return (f"jobs={n} done={self.completed} rejected={self.rejected} "
+                f"hit_rate={self.hit_rate:.3f} "
+                f"lateness_p50={self.lateness_quantile(0.5):.3f}s "
+                f"p99={self.lateness_quantile(0.99):.3f}s "
+                f"degraded={self.degraded} extended={self.extended} "
+                f"core_s={self.core_seconds:.1f} "
+                f"lemma2_core_s={self.lemma2_core_seconds:.1f} "
+                f"ratio={ratio:.3f}")
+
+
+class SimJobExecutor:
+    """Seeded simulated executor with a DCAF degradation hook: ``degrade``
+    scales every subsequent per-query time (a coarser answer is a cheaper
+    answer). One instance per job -> interleaving jobs cannot perturb each
+    other's RNG streams, keeping replays deterministic."""
+
+    def __init__(self, mean: float = 0.05, cv: float = 0.3, seed: int = 0):
+        self._src = SimulatedTimeSource(mean=mean, cv=cv, seed=seed)
+        self.scale = 1.0
+
+    def __call__(self, ids: Sequence[int]) -> RuntimeStats:
+        return self._src.measure(ids).scaled(self.scale)
+
+    def degrade(self, factor: float) -> None:
+        if not 0.0 < factor < 1.0:
+            raise ValueError("factor must be in (0,1)")
+        self.scale *= factor
+
+
+# executor_factory(job_id, num_queries, seed) -> executor for that job
+ExecutorFactory = Callable[[int, int, int], Any]
+
+
+class ServingRuntime:
+    """Event-driven serving loop over a shared :class:`CorePool`."""
+
+    def __init__(self, pool: CorePool, executor_factory: ExecutorFactory,
+                 config: ServingConfig = ServingConfig(),
+                 controller: ElasticController | None = None):
+        self.pool = pool
+        self.factory = executor_factory
+        self.cfg = config
+        self.controller = controller or ElasticController(
+            allocator=pool.allocator)
+        self.clock = 0.0
+        self.jobs: list[Job] = []
+        self._heap: list[tuple[float, int, str, Any]] = []
+        self._seq = 0
+        self._grant_peak: dict[int, int] = {}
+        self._lemma2_cs: dict[int, float] = {}
+        self._waiting: list[Job] = []
+
+    # -- submission --------------------------------------------------------
+    def submit(self, num_queries: int, deadline: float, at: float = 0.0,
+               seed: int | None = None) -> Job:
+        job_id = len(self.jobs)
+        seed = job_id if seed is None else seed
+        job = Job(job_id=job_id, num_queries=num_queries, deadline=deadline,
+                  arrival=at, seed=seed,
+                  executor=self.factory(job_id, num_queries, seed))
+        self.jobs.append(job)
+        self._push(at, "arrive", job)
+        return job
+
+    def submit_poisson(self, num_jobs: int, rate: float, *,
+                       queries: int | tuple[int, int],
+                       deadline: float | tuple[float, float],
+                       seed: int = 0) -> list[Job]:
+        """Seeded Poisson arrival process: exponential gaps at ``rate``
+        jobs/second; per-job size/deadline drawn uniformly when given as
+        (lo, hi) ranges. Deterministic per seed."""
+        if num_jobs < 1 or rate <= 0:
+            raise ValueError("num_jobs >= 1 and rate > 0 required")
+        rng = np.random.default_rng(seed)
+        t = 0.0
+        out = []
+        for i in range(num_jobs):
+            t += float(rng.exponential(1.0 / rate))
+            if isinstance(queries, tuple):
+                x = int(rng.integers(queries[0], queries[1] + 1))
+            else:
+                x = queries
+            if isinstance(deadline, tuple):
+                T = float(rng.uniform(deadline[0], deadline[1]))
+            else:
+                T = deadline
+            out.append(self.submit(x, T, at=t,
+                                   seed=int(rng.integers(0, 1 << 31))))
+        return out
+
+    def submit_trace(self, trace: Sequence[dict]) -> list[Job]:
+        """Replay a recorded trace: [{"at":, "queries":, "deadline":,
+        "seed"?:}, ...]."""
+        return [self.submit(int(row["queries"]), float(row["deadline"]),
+                            at=float(row["at"]), seed=row.get("seed"))
+                for row in trace]
+
+    def inject_failures(self, schedule: dict[float, list[int]]) -> None:
+        """Schedule device failures at virtual times. Routed through the
+        ElasticController: tick ``i`` of its injector fires at the i-th
+        scheduled time, marks the devices failed (shrinking the pool) and
+        records the readmission event."""
+        times = sorted(schedule)
+        self.controller.injector = FailureInjector(
+            schedule={i: list(schedule[t]) for i, t in enumerate(times)})
+        for i, t in enumerate(times):
+            self._push(t, "fail", i)
+
+    # -- event loop --------------------------------------------------------
+    def _push(self, t: float, kind: str, payload: Any) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def run(self) -> ServingReport:
+        """Drain the event heap; returns the aggregate report."""
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self.clock = max(self.clock, t)
+            if kind == "arrive":
+                self._handle_arrival(payload, self.clock)
+            elif kind == "slot":
+                self._handle_slot(payload, t)
+            elif kind == "fail":
+                self._handle_failure(payload, self.clock)
+        records = tuple(
+            JobRecord.of(j, self._grant_peak.get(j.job_id, 0),
+                         self._lemma2_cs.get(j.job_id, 0.0))
+            for j in self.jobs)
+        return ServingReport(records=records, end_time=self.clock)
+
+    # -- arrival / admission ------------------------------------------------
+    def _pop_waiter(self, now: float) -> None:
+        """Re-enqueue ALL queued jobs (FIFO — the heap's seq tiebreaker
+        preserves order at equal times). Called whenever a job reaches a
+        terminal state: a release may free enough cores for several
+        waiters, and any waiter still not fitting simply re-queues itself
+        when its arrival event is processed. Every terminal transition must
+        chain here, or waiters behind a rejected/preprocessing-only job
+        would strand with the heap drained."""
+        waiters, self._waiting = self._waiting, []
+        for job in waiters:
+            self._push(now, "arrive", job)
+
+    def _sample_size(self, num_queries: int) -> int:
+        if self.cfg.sample_size is not None:
+            return min(self.cfg.sample_size, num_queries)
+        return fraction_sample_size(num_queries, self.cfg.sample_frac)
+
+    def _handle_arrival(self, job: Job, now: float) -> None:
+        cfg = self.cfg
+        if self.pool.free < 1:
+            if self.pool.used > 0:
+                # pool momentarily exhausted: queue behind the running jobs
+                # (a future completion re-enqueues us) instead of rejecting —
+                # the SLA clock keeps running, replan/degrade absorb the wait
+                self._waiting.append(job)
+                job.log.append(f"t={now:.3f} queued (pool exhausted)")
+                return
+            job.state = JobState.REJECTED        # pool has zero capacity
+            job.log.append(f"t={now:.3f} rejected: zero-capacity pool")
+            return
+        s = self._sample_size(job.num_queries)
+        rng = np.random.default_rng(job.seed)
+        sample_ids, rest_ids = _draw_sample(rng, job.num_queries, s)
+        stats = job.executor(sample_ids)
+        job.stats = stats
+        job.t_pre = stats.t_pre_on(cfg.preprocess_cores)
+        # preprocessing cost is real core time even though c is tiny; the
+        # slot grant acquired below is charged from NOW too — the pool
+        # reserves those cores during preprocessing (other arrivals see
+        # pool.free reduced), so not billing them would flatter the
+        # core-hours-vs-Lemma-2 headline
+        job.core_seconds += cfg.preprocess_cores * job.t_pre
+        job._accounted_to = now
+        try:
+            self._lemma2_cs[job.job_id] = (
+                BoundReport.from_stats(job.num_queries, job.deadline, stats,
+                                       cfg.p_f).lemma2_cores * job.deadline)
+        except InfeasibleDeadline:
+            # t_max > T: static Lemma-2 provisioning has no answer at all for
+            # this job (reporting only — admission handles the job itself)
+            self._lemma2_cs[job.job_id] = 0.0
+
+        if not self._admit(job, now):
+            job.state = JobState.REJECTED
+            job.log.append(f"t={now:.3f} rejected at admission")
+            self._pop_waiter(now)         # keep the waiter chain alive
+            return
+        if len(rest_ids) == 0:
+            # §III-A: s >= X, preprocessing answered everything
+            job.state = JobState.DONE
+            job.completion = now + job.t_pre
+            job.log.append(f"t={now:.3f} done in preprocessing")
+            self._pop_waiter(now + job.t_pre)
+            return
+
+        ell, k = self._initial_grant(job, now, len(rest_ids))
+        self.pool.acquire(job.job_id, k)
+        self._grant_peak[job.job_id] = k
+        job.state = JobState.RUNNING
+        job.slots_t0 = now + job.t_pre
+        # slots prefer the chunked API (one fused device step per slot,
+        # control back to the event loop in between); sampling used __call__
+        # above because admission needs per-query time resolution
+        slot_exec = getattr(job.executor, "run_chunk", job.executor)
+        job.stepper = SlotStepper.from_queries(rest_ids, ell, k, slot_exec)
+        job.log.append(f"t={now:.3f} admitted s={s} ell={ell} k={k} "
+                       f"t_pre={job.t_pre:.4f}")
+        self._step_job(job)
+
+    def _admit(self, job: Job, now: float) -> bool:
+        """Lemma-1 admission against the pool's free cores, with the
+        degrade-then-extend rescue ladder. True iff the job may run."""
+        cfg = self.cfg
+        capacity = self.pool.free
+        while True:
+            T_rel = job.abs_deadline - now
+            t_max = job.stats.t_max * job.est_scale
+            try:
+                need = required_cores(
+                    lemma1_lower_bound(job.num_queries, t_max, T_rel))
+            except ValueError:
+                need = None                       # t_max > T or T <= 0
+            if need is not None and need <= capacity and capacity >= 1:
+                return True
+            if self._try_degrade(job, now, "admission"):
+                continue
+            if cfg.extend and capacity >= 1:
+                new_T = minimal_feasible_deadline(
+                    job.num_queries, job.stats.t_max * job.est_scale,
+                    capacity)
+                job.abs_deadline = now + new_T
+                job.extended = True
+                job.log.append(f"t={now:.3f} admission extended T to "
+                               f"{new_T:.3f}s (cap {capacity})")
+                return True
+            return False
+
+    def _initial_grant(self, job: Job, now: float,
+                       remaining: int) -> tuple[int, int]:
+        """Algorithm 2 Lines 7-8 against the current pool: ell from the
+        d-scaled remaining budget, k = ceil(remaining/ell), capped at the
+        pool's free cores (re-slotting when capped)."""
+        cfg = self.cfg
+        T_rel = job.abs_deadline - now
+        t_avg = job.t_avg_estimate()
+        budget = cfg.scaling_factor * T_rel - job.t_pre
+        ell = num_slots(budget, t_avg) if budget > 0 else 0
+        if ell < 1:
+            # preprocessing ate the scaled budget — run serially and let the
+            # replan/degrade ladder recover (never reject post-admission)
+            ell = remaining
+            k = 1
+        else:
+            k = queries_per_slot(remaining, ell)
+        free = max(1, self.pool.free)
+        if k > free:
+            k = free
+            ell = max(ell, -(-remaining // k))    # re-slot to cover all work
+            predicted = now + job.t_pre + -(-remaining // k) * t_avg
+            if predicted > job.abs_deadline:
+                self._try_degrade(job, now, "pool-capped grant")
+        return ell, k
+
+    # -- slot stepping / replanning -----------------------------------------
+    def _step_job(self, job: Job) -> None:
+        """Execute the job's next slot and schedule its completion event."""
+        stats = job.stepper.step()
+        if stats is None:                          # drained between events
+            return
+        job.stats = job.stats.merged(stats)        # fold observed times
+        self._push(job.slots_t0 + job.stepper.makespan, "slot", job)
+
+    def _handle_slot(self, job: Job, t: float) -> None:
+        if job.state is not JobState.RUNNING:
+            return
+        now = t
+        grant = self.pool.grant_of(job.job_id)
+        job.account(now, grant)
+        if job.stepper.done:
+            job.state = JobState.DONE
+            job.completion = now
+            self.pool.release(job.job_id)
+            job.log.append(f"t={now:.3f} done lateness={job.lateness:.4f}")
+            self._pop_waiter(now)                 # freed cores: admit a waiter
+            return
+        if self.cfg.replan:
+            self._replan(job, now)
+        self._step_job(job)
+
+    def _replan(self, job: Job, now: float) -> None:
+        """Re-run the Alg. 2 arithmetic over the remaining work with the
+        rolling merged statistics; resize the grant through the pool."""
+        cfg = self.cfg
+        R = job.stepper.remaining
+        grant = self.pool.grant_of(job.job_id)
+        T_left = job.abs_deadline - now
+        t_avg = job.t_avg_estimate()
+        budget = cfg.scaling_factor * T_left
+        job.replans += 1
+        ell = num_slots(budget, t_avg) if budget > 0 else 0
+        k_new = queries_per_slot(R, ell) if ell >= 1 else R  # behind: want max
+        k_max = grant + self.pool.free
+        k_new = min(max(1, k_new), max(1, k_max))
+        if k_new < grant:
+            released = self.pool.shrink(job.job_id, grant - k_new)
+            if released:
+                job.stepper.resize(grant - released)
+                job.log.append(f"t={now:.3f} replan shrink {grant}->"
+                               f"{grant - released} (ahead)")
+        elif k_new > grant:
+            added = self.pool.grow(job.job_id, k_new - grant)
+            if added:
+                job.stepper.resize(grant + added)
+                job.log.append(f"t={now:.3f} replan grow {grant}->"
+                               f"{grant + added} (behind)")
+        grant = self.pool.grant_of(job.job_id)
+        self._grant_peak[job.job_id] = max(self._grant_peak[job.job_id], grant)
+        # miss predicted at the best obtainable grant?
+        predicted = now + -(-R // grant) * t_avg
+        if predicted > job.abs_deadline and self.pool.free == 0:
+            if not self._try_degrade(job, now, "miss predicted"):
+                if cfg.extend and predicted > job.abs_deadline:
+                    job.abs_deadline = predicted
+                    job.extended = True
+                    job.log.append(
+                        f"t={now:.3f} deadline extended to t={predicted:.3f}")
+
+    def _try_degrade(self, job: Job, now: float, why: str) -> bool:
+        cfg = self.cfg
+        if not cfg.degrade or job.degrade_count >= cfg.max_degrades:
+            return False
+        if hasattr(job.executor, "degrade"):
+            job.executor.degrade(cfg.degrade_factor)
+        job.est_scale *= cfg.degrade_factor
+        job.degraded = True
+        job.degrade_count += 1
+        job.log.append(f"t={now:.3f} degraded x{cfg.degrade_factor} ({why})")
+        return True
+
+    # -- failures -----------------------------------------------------------
+    def _handle_failure(self, ordinal: int, now: float) -> None:
+        """A device failure: the ElasticController marks it failed (the pool
+        reads capacity from the same allocator), overcommitted grants are
+        shed largest-first and every affected job is readmitted over its
+        remaining work — extended rather than lost."""
+        running = [j for j in self.jobs if j.state is JobState.RUNNING]
+        agg = running[0].stats if running else None
+        self.controller.tick(
+            ordinal, stats=agg,
+            queries_left=sum(j.remaining for j in running),
+            deadline_left=min((j.abs_deadline - now for j in running),
+                              default=0.0))
+        cuts = self.pool.shed_plan()
+        for job in running:
+            cut = cuts.get(job.job_id, 0)
+            if not cut:
+                continue
+            grant = self.pool.grant_of(job.job_id)
+            job.account(now, grant)
+            self.pool.shrink(job.job_id, cut)
+            job.stepper.resize(self.pool.grant_of(job.job_id))
+            adm = self.pool.allocator.readmit(
+                job.remaining, job.abs_deadline - now, job.stats,
+                cores_per_device=self.pool.lanes_per_device)
+            if not adm.feasible and adm.extended:
+                job.abs_deadline = now + adm.deadline
+                job.extended = True
+            job.log.append(f"t={now:.3f} failure shed {cut} cores "
+                           f"(readmit feasible={adm.feasible})")
+
+
+def run_single_job(num_queries: int, deadline: float,
+                   executor: Any, max_cores: int, *,
+                   sample_size: int, preprocess_cores: int = 1,
+                   scaling_factor: float = 1.0, seed: int = 0
+                   ) -> tuple[Job, ServingReport]:
+    """The one-shot batch pipeline expressed as a runtime drive: a single
+    job, no arrivals, no replanning/degradation — reproduces ``dna_real``'s
+    cores/completion numbers bit-for-bit (regression-tested)."""
+    pool = CorePool.of(max_cores)
+    cfg = ServingConfig(scaling_factor=scaling_factor,
+                        sample_size=sample_size,
+                        preprocess_cores=preprocess_cores,
+                        replan=False, degrade=False, extend=False)
+    rt = ServingRuntime(pool, lambda job_id, nq, sd: executor, cfg)
+    job = rt.submit(num_queries, deadline, at=0.0, seed=seed)
+    report = rt.run()
+    if job.state is JobState.REJECTED:
+        raise InfeasibleDeadline("admission failed: " + "; ".join(job.log))
+    return job, report

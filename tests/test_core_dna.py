@@ -134,6 +134,37 @@ def test_slot_arithmetic_matches_paper():
     assert queries_per_slot(100 - 10, 9) == 10
 
 
+def test_core_queue_contents_and_range():
+    """Explicit coverage for SlotPlan.core_queue (ISSUE-4 satellite): the
+    j-th-query-of-every-slot assignment, with out-of-range cores raising."""
+    plan = build_slot_plan(range(10), ell=4, k=3)
+    # slots: (0,1,2) (3,4,5) (6,7,8) (9,)
+    assert plan.core_queue(0) == [0, 3, 6, 9]
+    assert plan.core_queue(1) == [1, 4, 7]
+    assert plan.core_queue(2) == [2, 5, 8]
+    with pytest.raises(IndexError):
+        plan.core_queue(3)
+    with pytest.raises(IndexError):
+        plan.core_queue(-1)
+    # queues partition the plan's queries
+    union = sorted(q for j in range(plan.k) for q in plan.core_queue(j))
+    assert union == list(range(10))
+
+
+def test_slot_barrier_makespan_closed_form():
+    """slot_barrier_makespan = sum of per-slot maxima (the straggler
+    monitor's pessimistic completion), >= the no-barrier T_max."""
+    plan = build_slot_plan(range(6), ell=3, k=2)
+    times = {0: 1.0, 1: 5.0, 2: 2.0, 3: 1.0, 4: 3.0, 5: 4.0}
+    execution = execute_plan(
+        plan, lambda ids: RuntimeStats(np.array([times[q] for q in ids])))
+    # slot maxima: max(1,5)+max(2,1)+max(3,4) = 5+2+4
+    assert execution.slot_barrier_makespan == pytest.approx(11.0)
+    # per-core totals: core0 = 1+2+3, core1 = 5+1+4 -> T_max = 10
+    assert execution.t_max_core == pytest.approx(10.0)
+    assert execution.t_max_core <= execution.slot_barrier_makespan
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 1 / Algorithm 2 end-to-end (simulated executors)
 

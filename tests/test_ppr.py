@@ -156,6 +156,58 @@ def test_fora_executor_fused_smoke(graph):
     assert ex._num_walks is not None and ex._num_walks >= 1
 
 
+def test_run_chunk_single_device_step(graph):
+    """run_chunk: one chunk = one batched fused step, times shared evenly."""
+    workload = PprWorkload(graph, num_queries=10, seed=0)
+    ex = ForaExecutor(workload, ForaParams(alpha=0.2, epsilon=0.5), fused=True)
+    calls0 = ex.calls
+    stats = ex.run_chunk([0, 3, 7])
+    assert stats.n == 3
+    assert ex.calls == calls0 + 1                   # ONE device step
+    assert np.all(stats.times == stats.times[0])    # block time shared
+    assert stats.times[0] > 0
+
+
+def test_run_chunk_no_host_transfer(graph):
+    """ISSUE-4 acceptance: chunked execution preserves the fused path's
+    zero-host-sync contract — the whole run_chunk call runs under
+    jax.transfer_guard('disallow') (its input staging is an explicit
+    device_put, the readout a sync, so nothing implicit crosses the
+    boundary between device steps)."""
+    workload = PprWorkload(graph, num_queries=12, seed=0)
+    ex = ForaExecutor(workload, ForaParams(alpha=0.2, epsilon=0.5), fused=True)
+    ex.run_chunk([0, 1, 2])                         # warm size-3 executable
+    with jax.transfer_guard("disallow"):
+        stats = ex.run_chunk([4, 5, 6])
+    assert stats.n == 3 and np.isfinite(stats.times).all()
+
+
+def test_executor_degrade_caps_budget_and_raises_epsilon(graph):
+    workload = PprWorkload(graph, num_queries=8, seed=0)
+    ex = ForaExecutor(workload, ForaParams(alpha=0.2, epsilon=0.5), fused=True)
+    ex.warmup()
+    walks_before, eps_before = ex._num_walks, ex.params.epsilon
+    ex.degrade(0.5)
+    assert ex.params.epsilon == pytest.approx(eps_before / 0.5)
+    assert ex._num_walks <= max(1, walks_before // 2)
+    stats = ex.run_chunk([0, 1])                    # degraded path still runs
+    assert stats.n == 2
+
+
+def test_workload_source_of_rejects_out_of_range():
+    """Regression (ISSUE-4 satellite): source_of must raise on out-of-range
+    qids instead of silently wrapping via qid % num_queries, which masked
+    slot-plan indexing bugs."""
+    g = small_test_graph(n=50, avg_deg=4, seed=0)
+    w = PprWorkload(g, num_queries=7, seed=0)
+    assert 0 <= w.source_of(0) < g.n
+    assert 0 <= w.source_of(6) < g.n
+    with pytest.raises(IndexError):
+        w.source_of(7)
+    with pytest.raises(IndexError):
+        w.source_of(-1)
+
+
 @given(st.integers(16, 200), st.floats(2.0, 10.0), st.integers(0, 5))
 @settings(max_examples=20, deadline=None)
 def test_graph_container_invariants(n, avg_deg, seed):

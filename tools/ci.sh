@@ -27,10 +27,15 @@ REPRO_SHARDED_SUBPROCESS=skip python -m pytest -x -q
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     python -m pytest -x -q tests/test_sharded.py -k "not subprocess"
 
+# serving-runtime smoke (DESIGN.md §10): deterministic seeded replay,
+# >= 95% deadline hit-rate, core-hours strictly below static Lemma-2, and
+# the failure-injection run completing via readmission (no job loss)
+python -m benchmarks.serving_sim --check
+
 trap 'rm -f BENCH_kernels.committed.json BENCH_kernels.fresh1.json \
             BENCH_kernels.fresh2.json BENCH_kernels.merged.json' EXIT
-python -m benchmarks.run --only kernels,fora_hot --json BENCH_kernels.fresh1.json
-python -m benchmarks.run --only kernels,fora_hot --json BENCH_kernels.fresh2.json
+python -m benchmarks.run --only kernels,fora_hot,serving --json BENCH_kernels.fresh1.json
+python -m benchmarks.run --only kernels,fora_hot,serving --json BENCH_kernels.fresh2.json
 
 baseline=BENCH_kernels.json
 if git show HEAD:BENCH_kernels.json > BENCH_kernels.committed.json 2>/dev/null
