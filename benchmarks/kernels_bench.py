@@ -16,6 +16,7 @@ from repro.kernels.ell_spmv import (ell_spmm_pallas, ell_spmm_sliced_pallas,
                                     ell_spmv_pallas)
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.walk_gather import walk_endpoint_gather_pallas
 from repro.ppr.graph import Graph
 
 from .common import emit, timed
@@ -98,3 +99,17 @@ def run() -> None:
     pal = embedding_bag_pallas(table, ids, wts)
     err = float(jnp.abs(pal - refo).max())
     emit("kernels/embedding_bag", us, f"maxerr={err:.2e};V={V};B={Bb};L={L}")
+
+    # walk-endpoint gather at the index-backed fused walk shape
+    # (DESIGN.md §11): n nodes x W stored lanes, one query block of Bq rows
+    n_wi, W_wi = 4096, 256
+    endpoints = jax.random.randint(ks[0], (n_wi, W_wi), 0, n_wi)
+    budget = jax.random.randint(ks[1], (n_wi,), 0, W_wi + 1)
+    starts = jax.random.randint(ks[2], (Bq, W_wi), 0, n_wi)
+    w_lanes = jax.random.uniform(key, (Bq, W_wi))
+    refo, us = timed(lambda: np.asarray(ref.walk_endpoint_gather_ref(
+        endpoints, budget, starts, w_lanes)))
+    pal = walk_endpoint_gather_pallas(endpoints, budget, starts, w_lanes)
+    err = float(jnp.abs(pal - refo).max())
+    emit("kernels/walk_endpoint_gather", us,
+         f"maxerr={err:.2e};n={n_wi};W={W_wi};B={Bq}")

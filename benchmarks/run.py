@@ -23,7 +23,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: eq2,table1,fig2,fig3,kernels,roofline,"
-                         "fora_hot,serving")
+                         "fora_hot,serving,index")
     ap.add_argument("--full", action="store_true",
                     help="wider Fig.2 grid (slower)")
     ap.add_argument("--json", default="", metavar="OUT",
@@ -32,7 +32,8 @@ def main() -> None:
     want = set(args.only.split(",")) if args.only else None
 
     from . import (eq2_sample_size, fig2_cores, fig3_scaling, fora_hot_path,
-                   kernels_bench, roofline, serving_sim, table1_datasets)
+                   index_cache, kernels_bench, roofline, serving_sim,
+                   table1_datasets)
 
     suites = [
         ("eq2", eq2_sample_size.run, {}),
@@ -40,6 +41,7 @@ def main() -> None:
         ("kernels", kernels_bench.run, {}),
         ("fora_hot", fora_hot_path.run, {}),
         ("serving", serving_sim.run, {}),
+        ("index", index_cache.run, {}),
         ("fig2", fig2_cores.run,
          {"grid": fig2_cores.FULL_GRID if args.full else
           fig2_cores.DEFAULT_GRID}),

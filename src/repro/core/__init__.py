@@ -15,15 +15,17 @@ from .bounds import (BoundReport, InfeasibleDeadline, lemma1_lower_bound,
                      lemma2_hoeffding_bound, minimal_feasible_deadline,
                      required_cores)
 from .dna import DnaResult, dna, dna_real
-from .estimator import (MeasuredTimeSource, RooflineTerms, RooflineTimeSource,
-                        RuntimeStats, SimulatedTimeSource, TimeSource)
+from .estimator import (CacheAwareCostModel, MeasuredTimeSource,
+                        RooflineTerms, RooflineTimeSource, RuntimeStats,
+                        SimulatedTimeSource, TimeSource)
 from .sampling import (SamplePlan, Z_TABLE, cochran_sample_size,
                        fraction_sample_size, z_score)
 from .slots import (SlotExecution, SlotPlan, build_slot_plan, execute_plan,
                     num_slots, queries_per_slot)
 
 __all__ = [
-    "Admission", "BoundReport", "DeviceAllocator", "DnaResult",
+    "Admission", "BoundReport", "CacheAwareCostModel", "DeviceAllocator",
+    "DnaResult",
     "InfeasibleDeadline", "MeasuredTimeSource", "MeshPlan", "RooflineTerms",
     "RooflineTimeSource", "RuntimeStats", "SamplePlan", "SimulatedTimeSource",
     "SlotExecution", "SlotPlan", "StragglerMonitor", "TimeSource", "Z_TABLE",

@@ -90,7 +90,8 @@ class DeviceAllocator:
 
     def readmit(self, num_queries_left: int, deadline_left: float,
                 stats: RuntimeStats, *,
-                cores_per_device: int = 1) -> "Admission":
+                cores_per_device: int = 1,
+                cost_model: Any = None) -> "Admission":
         """Re-run the Lemma-1 admission over the *remaining* work after a
         failure, through the shared :func:`lemma1_lower_bound` (which also
         rejects ``t_max > T`` and non-positive deadlines — the cases a raw
@@ -102,10 +103,19 @@ class DeviceAllocator:
 
         ``cores_per_device`` converts the device-denominated capacity into
         D&A cores when each device multiplexes several query lanes (the
-        serving runtime's ``CorePool`` passes its ``lanes_per_device``)."""
+        serving runtime's ``CorePool`` passes its ``lanes_per_device``).
+
+        ``cost_model`` (a :class:`repro.core.estimator.CacheAwareCostModel`)
+        discounts the estimate for cache-aware serving (DESIGN.md §11): the
+        pending count shrinks by the learned expected-miss fraction and the
+        time statistics by the index-served walk share — both exactly 1.0
+        for a cold model, so admission without observations is unchanged."""
         if cores_per_device < 1:
             raise ValueError("cores_per_device must be >= 1")
         capacity = self.capacity * cores_per_device
+        if cost_model is not None and num_queries_left > 0:
+            num_queries_left = cost_model.discounted_queries(num_queries_left)
+            stats = cost_model.discounted_stats(stats)
         if num_queries_left <= 0:
             return Admission(feasible=True, cores=0, deadline=deadline_left,
                              extended=False)

@@ -17,6 +17,7 @@ measurement, not the TPU deployment's), time acquisition is a strategy object:
 
 from __future__ import annotations
 
+import math
 import time
 from collections.abc import Callable, Sequence
 from dataclasses import dataclass, field
@@ -148,6 +149,89 @@ class SimulatedTimeSource(TimeSource):
         mu = np.log(self.mean) - sigma2 / 2.0
         draw = self._rng.lognormal(mean=mu, sigma=np.sqrt(sigma2), size=n)
         return RuntimeStats(self.base + draw)
+
+
+@dataclass
+class CacheAwareCostModel:
+    """Expected-work discount for cache-aware D&A admission (DESIGN.md §11).
+
+    The paper's estimator prices every query as fresh work. A serving
+    system with a result cache and a walk index executes LESS than that:
+    repeated sources are answered from the cache mid-flight, and index-
+    covered walk lanes cost a gather instead of an L-step draw. This model
+    turns those two effects into multiplicative discounts the admission
+    arithmetic can consume *honestly*:
+
+    * ``work_discount`` multiplies the query count — the expected fraction
+      of still-pending queries that will MISS the cache, learned as an EWMA
+      of observed lookup outcomes (arrival-time and slot-boundary lookups
+      both feed it).
+    * ``time_discount`` multiplies the per-query time statistics — the walk
+      share of a query that the index serves for free. Callers whose
+      *measured* sample already ran through the index must leave
+      ``index_coverage`` at 0, or the speedup would be counted twice.
+
+    Safety clamp (regression-pinned): with no observations the EWMA is
+    absent and both discounts are exactly 1.0 — a cold cache degenerates to
+    today's behaviour bit-for-bit. ``max_trust`` bounds how much of either
+    estimate admission may shave even at a perfect observed hit rate, so a
+    sudden traffic shift (hit rate collapsing) degrades into the runtime's
+    replan/degrade ladder instead of into SLA misses.
+    """
+
+    decay: float = 0.7           # EWMA weight kept on the PAST estimate
+    max_trust: float = 0.9       # cap on the shaved fraction of either term
+    walk_share: float = 0.5      # fraction of a cold query's time in walks
+    index_coverage: float = 0.0  # fraction of the walk budget index-served
+    _ewma: float | None = field(default=None, init=False)
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.decay < 1.0:
+            raise ValueError("decay must be in [0,1)")
+        if not 0.0 <= self.max_trust < 1.0:
+            raise ValueError("max_trust must be in [0,1)")
+        if not 0.0 <= self.walk_share <= 1.0:
+            raise ValueError("walk_share must be in [0,1]")
+        if not 0.0 <= self.index_coverage <= 1.0:
+            raise ValueError("index_coverage must be in [0,1]")
+
+    def observe(self, hits: int, lookups: int) -> None:
+        """Fold a batch of cache-lookup outcomes into the hit-rate EWMA."""
+        if lookups < 0 or hits < 0 or hits > lookups:
+            raise ValueError("need 0 <= hits <= lookups")
+        if lookups == 0:
+            return
+        rate = hits / lookups
+        self._ewma = rate if self._ewma is None else (
+            self.decay * self._ewma + (1.0 - self.decay) * rate)
+
+    @property
+    def hit_rate(self) -> float:
+        """Learned hit-rate estimate; 0.0 until the first observation."""
+        return 0.0 if self._ewma is None else self._ewma
+
+    def work_discount(self) -> float:
+        """Multiplier on pending-query counts: expected miss fraction,
+        clamped so at least ``1 - max_trust`` of the work is always
+        provisioned for. Cold -> exactly 1.0."""
+        return 1.0 - min(self.hit_rate, self.max_trust)
+
+    def time_discount(self) -> float:
+        """Multiplier on t_avg / t_max: the walk share the index serves,
+        clamped by ``max_trust``. No index -> exactly 1.0."""
+        return 1.0 - min(self.walk_share * self.index_coverage,
+                         self.max_trust)
+
+    def discounted_queries(self, num_queries: int) -> int:
+        """Expected cache misses among ``num_queries`` pending queries."""
+        if num_queries <= 0:
+            return num_queries
+        return max(1, math.ceil(num_queries * self.work_discount()))
+
+    def discounted_stats(self, stats: RuntimeStats) -> RuntimeStats:
+        """The sample under the per-query time discount (identity cold)."""
+        d = self.time_discount()
+        return stats if d == 1.0 else stats.scaled(d)
 
 
 @dataclass(frozen=True)

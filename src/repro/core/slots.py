@@ -170,6 +170,19 @@ class WorkQueues:
         return [(j, q.popleft())
                 for j, q in enumerate(self.queues) if q]
 
+    def discard(self, drop: "set[int] | frozenset[int]") -> int:
+        """Remove pending queries in ``drop`` from every queue (the serving
+        runtime's slot-boundary cache recheck: a query another job answered
+        since admission needs no core time). Survivor order is preserved;
+        returns the number of queries removed."""
+        removed = 0
+        for j, q in enumerate(self.queues):
+            kept = [x for x in q if x not in drop]
+            removed += len(q) - len(kept)
+            if len(kept) != len(q):
+                self.queues[j] = deque(kept)
+        return removed
+
     def resize(self, width: int) -> None:
         """Re-grant to ``width`` cores. Shrinking merges the dropped (highest
         index) queues' pending work onto the survivors; growing appends empty
@@ -258,6 +271,11 @@ class SlotStepper:
         self.executed_slots.append(slot)
         self.steps += 1
         return stats
+
+    def discard(self, drop: "set[int] | frozenset[int]") -> int:
+        """Drop pending queries answered elsewhere (cache hits) between
+        slots; they never execute and never enter the timing accounts."""
+        return self.queues.discard(drop)
 
     def resize(self, k: int) -> None:
         """Re-grant to ``k`` lanes between slots. Shrinking drops the highest

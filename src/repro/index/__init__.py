@@ -1,0 +1,16 @@
+"""Walk-index & result-cache subsystem (DESIGN.md §11).
+
+Precomputation and caching for repeated-query PPR serving:
+
+    WalkIndex     per-node budgeted table of pre-drawn walk endpoints —
+                  FORA's walk phase as a device gather (FORA+-style)
+    ResultCache   (source, epsilon, graph_version)-keyed answer cache with
+                  LRU eviction, TTL and per-key hit/cost accounting —
+                  consulted BEFORE Lemma-1 admission so hits bypass the
+                  core pool entirely
+"""
+
+from .result_cache import CacheStats, ResultCache
+from .walk_index import WalkIndex
+
+__all__ = ["CacheStats", "ResultCache", "WalkIndex"]

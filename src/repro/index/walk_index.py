@@ -1,0 +1,185 @@
+"""Device-resident pre-drawn walk-endpoint index (FORA+-style, DESIGN.md §11).
+
+FORA answers every query by drawing fresh alpha-terminated walks from the
+push residual. A serving system answering millions of repeated queries pays
+that walk phase again and again; FORA+'s observation is that the walks can
+be drawn ONCE per graph and reused: a walk's endpoint is a deterministic
+function of (start node, RNG stream), so a table of pre-drawn endpoints per
+node turns the walk phase into a gather.
+
+``WalkIndex`` stores, device-resident:
+
+* ``endpoints (n, width) int32`` — entry (v, i) is the endpoint of an
+  alpha-terminated walk from v under trajectory stream ``fold_in(key, i)``
+  (:func:`repro.ppr.random_walk.lane_streams`). Because the per-lane stream
+  is independent of the start node and of how many lanes exist, the stored
+  endpoint is **bit-for-bit** the endpoint a live walker on lane i of the
+  same stream would reach from v — the exactness property the index-backed
+  fused path's property test pins (tests/test_walk_index.py).
+* ``budget (n,) int32`` — per-node valid lane count (<= width). A query
+  lane i starting at v is served from the table iff ``i < budget[v]``;
+  otherwise it falls back to a live draw on the SAME stream, so any budget
+  configuration of an unrefreshed index yields identical answers — only the
+  speedup changes. ``retire`` lowers budgets (staleness, memory pressure);
+  ``refresh`` redraws rows on a fresh stream fold — decorrelating repeated
+  queries at the cost of the bit-for-bit property for those rows (they
+  remain fair draws; the FORA estimator stays unbiased).
+
+The trade the index makes is the FORA+ one: trajectories are shared across
+queries (and across a batch's rows), so repeated queries see correlated
+walk noise until refreshed; per-query randomness lives in the residual-
+proportional START sampling, which is untouched. ``graph_version`` tags the
+structure snapshot the endpoints were walked on — an edge update bumps the
+version, and consumers (result-cache keys, executors) treat a version
+mismatch as a cold index.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, ClassVar
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ppr.random_walk import (lane_streams, walk_endpoints,
+                               walk_length_for_tail)
+
+
+@partial(jax.jit, static_argnames=("alpha", "num_steps"))
+def _build_block(edge_dst, out_offsets, out_degree, starts, key, lane_ids, *,
+                 alpha: float, num_steps: int):
+    """Endpoints (len(starts), len(lane_ids)): every start node walks every
+    lane's stream — the (rows, lanes) grid broadcast of
+    :func:`walk_endpoints`, one scan over the truncation length."""
+    us = lane_streams(key, lane_ids, num_steps)          # (steps, lanes)
+    grid = jnp.broadcast_to(starts[:, None].astype(jnp.int32),
+                            (starts.shape[0], lane_ids.shape[0]))
+    return walk_endpoints(edge_dst, out_offsets, out_degree, grid, us,
+                          alpha=alpha)
+
+
+# lanes built per jitted block: bounds the (rows, lane_block) walker state
+# and the (num_steps, lane_block) stream table during construction
+_LANE_BLOCK = 64
+
+
+@dataclass(eq=False)
+class WalkIndex:
+    """Budgeted per-node table of pre-drawn walk endpoints (device arrays)."""
+
+    n: int
+    width: int                 # stored lanes per node (the walk budget)
+    alpha: float
+    num_steps: int             # walk truncation length the endpoints used
+    key: Any                   # base trajectory key (jax PRNGKey array)
+    endpoints: Any             # (n, width) int32, device
+    budget: Any                # (n,) int32, device
+    # CSR walk arrays (edge_dst, out_offsets, out_degree) — bound at build
+    # time so refresh() can redraw rows without re-plumbing the graph
+    graph_arrays: tuple = field(repr=False, default=())
+    graph_version: int = 0
+    refreshed: int = 0         # rows redrawn off the base stream (monotone)
+    _partial: bool = field(default=False, repr=False)
+
+    builds: ClassVar[int] = 0  # construction counter (build-once contract)
+
+    @classmethod
+    def build(cls, dg: Any, *, width: int, alpha: float,
+              walk_tail: float = 1e-4, seed: int = 0, graph_version: int = 0,
+              lane_block: int = _LANE_BLOCK) -> "WalkIndex":
+        """Walk every node down every lane stream once (jitted, in lane
+        blocks). ``dg`` is a :class:`repro.ppr.graph.DeviceGraph` (or any
+        object with device-resident ``edge_dst``/``out_offsets``/
+        ``out_degree`` and ``n``); ``alpha``/``walk_tail`` must match the
+        FORA params the queries will run with —
+        :func:`repro.ppr.fora.fora_fused` validates the pairing."""
+        if width < 1:
+            raise ValueError("width must be >= 1")
+        num_steps = walk_length_for_tail(alpha, walk_tail)
+        key = jax.random.PRNGKey(seed)
+        arrays = (dg.edge_dst, dg.out_offsets, dg.out_degree)
+        starts = jnp.arange(dg.n, dtype=jnp.int32)
+        blocks = []
+        for lo in range(0, width, lane_block):
+            lane_ids = jnp.arange(lo, min(lo + lane_block, width),
+                                  dtype=jnp.int32)
+            blocks.append(_build_block(*arrays, starts, key, lane_ids,
+                                       alpha=alpha, num_steps=num_steps))
+        WalkIndex.builds += 1
+        return cls(n=dg.n, width=width, alpha=alpha, num_steps=num_steps,
+                   key=key, endpoints=jnp.concatenate(blocks, axis=1),
+                   budget=jnp.full((dg.n,), width, jnp.int32),
+                   graph_arrays=arrays, graph_version=graph_version)
+
+    # -- coverage ----------------------------------------------------------
+    @property
+    def partial(self) -> bool:
+        """True once any node's budget dropped below ``width`` — the static
+        flag that makes the fused path keep a live-draw fallback for the
+        table lanes (a full-budget index serves them scan-free)."""
+        return self._partial
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.endpoints.size * self.endpoints.dtype.itemsize
+                   + self.budget.size * self.budget.dtype.itemsize)
+
+    def coverage(self, num_walks: int) -> float:
+        """Fraction of a ``num_walks`` walk budget the index saves — the
+        per-query coverage the cache-aware cost model consumes
+        (:class:`repro.core.estimator.CacheAwareCostModel`).
+
+        A *partial* index reports 0.0: correctness-wise any budget works,
+        but the fused executable must then keep the live-walk fallback for
+        every table lane (the scan runs regardless of how many cells the
+        gather serves), so there is no time saving for admission to bank —
+        reporting the budget fraction would shave deadlines on a speedup
+        that does not exist. Refresh the retired rows to restore coverage.
+        """
+        if num_walks < 1:
+            raise ValueError("num_walks must be >= 1")
+        if self._partial:
+            return 0.0
+        return min(1.0, self.width / num_walks)
+
+    # -- maintenance -------------------------------------------------------
+    def retire(self, nodes: np.ndarray, budget: int = 0) -> None:
+        """Lower the stored budget of ``nodes`` (staleness after an edge
+        update touching them, or memory pressure): their lanes beyond
+        ``budget`` fall back to live draws on the same stream, so answers
+        are unchanged for an unrefreshed index — only the speedup shrinks."""
+        if not 0 <= budget <= self.width:
+            raise ValueError(f"budget must be in [0, {self.width}]")
+        nodes = np.asarray(nodes, dtype=np.int32)
+        if nodes.size == 0:
+            return
+        self.budget = self.budget.at[jnp.asarray(nodes)].set(budget)
+        if budget < self.width:
+            self._partial = True
+
+    def refresh(self, nodes: np.ndarray) -> None:
+        """Redraw ``nodes``' rows on a FRESH stream fold and restore their
+        full budget. Decorrelates repeated queries through those nodes (the
+        stored trajectories stop being shared with past answers); refreshed
+        rows no longer reproduce the base build stream, so the bit-for-bit
+        exactness property narrows to unrefreshed rows — statistically the
+        estimator is unchanged (any fair draw is a valid stored walk)."""
+        nodes = np.asarray(nodes, dtype=np.int32)
+        if nodes.size == 0:
+            return
+        self.refreshed += int(nodes.size)
+        fresh = jax.random.fold_in(self.key, self.refreshed)
+        starts = jnp.asarray(nodes)
+        blocks = []
+        for lo in range(0, self.width, _LANE_BLOCK):
+            lane_ids = jnp.arange(lo, min(lo + _LANE_BLOCK, self.width),
+                                  dtype=jnp.int32)
+            blocks.append(_build_block(*self.graph_arrays, starts, fresh,
+                                       lane_ids, alpha=self.alpha,
+                                       num_steps=self.num_steps))
+        self.endpoints = self.endpoints.at[starts].set(
+            jnp.concatenate(blocks, axis=1))
+        self.budget = self.budget.at[starts].set(self.width)

@@ -1,5 +1,7 @@
 """Pallas TPU kernels (interpret-validated on CPU) + jnp oracles."""
 
-from .ops import ell_spmm, ell_spmv, embedding_bag, flash_attention
+from .ops import (ell_spmm, ell_spmv, embedding_bag, flash_attention,
+                  walk_endpoint_gather)
 
-__all__ = ["ell_spmm", "ell_spmv", "embedding_bag", "flash_attention"]
+__all__ = ["ell_spmm", "ell_spmv", "embedding_bag", "flash_attention",
+           "walk_endpoint_gather"]

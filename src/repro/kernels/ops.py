@@ -13,6 +13,7 @@ from .ell_spmv import (ell_spmm_pallas, ell_spmm_sliced_pallas,
                        ell_spmv_pallas)
 from .embedding_bag import embedding_bag_pallas
 from .flash_attention import flash_attention_pallas
+from .walk_gather import walk_endpoint_gather_pallas
 
 
 def _on_tpu() -> bool:
@@ -88,6 +89,20 @@ def ell_spmm_sliced_shard(neighbors, mask, weights, row_map, x, *,
     partial = ell_spmm_sliced(neighbors, mask, weights, row_map, x,
                               threshold=threshold, force=force)
     return jax.lax.psum(partial, axis_name)
+
+
+def walk_endpoint_gather(endpoints, budget, starts, weights, *,
+                         force: str | None = None):
+    """Index-backed walk-phase aggregation (DESIGN.md §11): serve each
+    covered lane's endpoint from the pre-drawn (n, W) table and fold the
+    residual-weighted endpoint mass onto the (B, n) PPR frame — the walk
+    phase without walking. Lanes whose start node's stored ``budget`` does
+    not cover them contribute zero (the live shortfall draw owns them)."""
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if use_pallas:
+        return walk_endpoint_gather_pallas(endpoints, budget, starts,
+                                           weights, interpret=not _on_tpu())
+    return ref.walk_endpoint_gather_ref(endpoints, budget, starts, weights)
 
 
 def embedding_bag(table, ids, weights, *, force: str | None = None):

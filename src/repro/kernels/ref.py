@@ -87,6 +87,28 @@ def ell_spmm_sliced_ref(neighbors, mask, x, weights=None, threshold=None,
     return folded.T
 
 
+def walk_endpoint_gather_ref(endpoints, budget, starts, weights):
+    """Index-backed walk aggregation (DESIGN.md §11): lane i of query b reads
+    the stored endpoint ``endpoints[starts[b,i], i]`` and scatters its
+    residual weight onto that node, provided the node's stored budget covers
+    the lane:
+
+        out[b, t] = sum_i w[b,i] * [i < budget[starts[b,i]]]
+                              * [endpoints[starts[b,i], i] == t]
+
+    endpoints: (n, W) int32; budget: (n,) int32; starts: (B, L<=W) int32;
+    weights: (B, L) f32. Returns (B, n) f32.
+    """
+    n = endpoints.shape[0]
+    L = starts.shape[1]
+    lane = jnp.arange(L, dtype=jnp.int32)
+    e = endpoints[starts, lane[None, :]]            # (B, L)
+    valid = lane[None, :] < budget[starts]
+    w = weights.astype(jnp.float32) * valid
+    return jax.vmap(lambda eb, wb: jax.ops.segment_sum(
+        wb, eb, num_segments=n))(e, w)
+
+
 def embedding_bag_ref(table, ids, weights=None):
     """EmbeddingBag(sum): out[b] = sum_l w[b,l] * table[ids[b,l]].
 

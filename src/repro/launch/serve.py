@@ -70,7 +70,8 @@ def serve_ppr(args) -> None:
                             fused=args.fused,
                             ell_layout=args.ell_layout,
                             walk_safety=args.walk_safety,
-                            devices=args.devices)
+                            devices=args.devices,
+                            index_budget=args.index_budget)
     s = fraction_sample_size(args.queries, args.sample_frac)
     # fold the mesh capacity into Alg. 2's C_max so an over-cap demand is
     # rejected by the up-front Lemma-1 admission, not after the workload ran
@@ -119,13 +120,24 @@ def serve_sim(args) -> None:
 
 def serve_daemon(args) -> None:
     """Continuous serving runtime: Poisson or trace-replayed arrivals over a
-    shared core pool with mid-flight replanning (DESIGN.md §10)."""
+    shared core pool with mid-flight replanning (DESIGN.md §10), optionally
+    cache-aware (DESIGN.md §11): ``--cache-size`` attaches a ResultCache
+    consulted before admission, ``--index-budget`` pre-draws a WalkIndex per
+    PPR executor, ``--record-trace`` captures the completed jobs in the
+    format ``--trace`` replays."""
     from ..serving import (CorePool, ServingConfig, ServingRuntime,
                            SimJobExecutor)
 
-    cfg = ServingConfig(scaling_factor=args.d, sample_frac=args.sample_frac)
+    cfg = ServingConfig(scaling_factor=args.d, sample_frac=args.sample_frac,
+                        graph_version=args.graph_version)
     pool = CorePool.of(args.max_cores,
                        lanes_per_device=max(1, args.max_lanes or 1))
+    cache = None
+    if args.cache_size > 0:
+        from ..index import ResultCache
+
+        cache = ResultCache(capacity=args.cache_size,
+                            ttl=args.cache_ttl or None)
 
     if args.workload == "ppr":
         import jax
@@ -149,12 +161,12 @@ def serve_daemon(args) -> None:
                 params=ForaParams(alpha=0.2, epsilon=args.epsilon),
                 block_size=args.block_size, fused=args.fused,
                 ell_layout=args.ell_layout, walk_safety=args.walk_safety,
-                devices=args.devices)
+                devices=args.devices, index_budget=args.index_budget)
     else:
         def factory(job_id: int, num_queries: int, seed: int):
             return SimJobExecutor(mean=args.step_time, cv=args.cv, seed=seed)
 
-    rt = ServingRuntime(pool, factory, cfg)
+    rt = ServingRuntime(pool, factory, cfg, cache=cache)
     if args.trace:
         with open(args.trace) as f:
             jobs = rt.submit_trace(json.load(f))
@@ -175,6 +187,17 @@ def serve_daemon(args) -> None:
         saved = 100.0 * (1.0 - report.core_seconds
                          / report.lemma2_core_seconds)
         print(f"  core-hours saved vs static Lemma-2: {saved:.1f}%")
+    if cache is not None:
+        print(f"  cache              : {len(cache)} entries "
+              f"hit_rate={cache.hit_rate:.3f} "
+              f"saved_core_s={cache.stats.saved_cost:.1f}")
+    if args.record_trace:
+        records = rt.trace_records()
+        with open(args.record_trace, "w") as f:
+            json.dump(records, f, indent=2)
+            f.write("\n")
+        print(f"  trace              : {len(records)} completed jobs -> "
+              f"{args.record_trace}")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -226,6 +249,23 @@ def main(argv: list[str] | None = None) -> None:
                     help="daemon: replay a JSON trace "
                          '[{"at":,"queries":,"deadline":}, ...] instead of '
                          "Poisson arrivals")
+    ap.add_argument("--record-trace", default="", metavar="PATH",
+                    help="daemon: write completed-job arrival/deadline/"
+                         "source records to PATH in the format --trace "
+                         "consumes (capture -> replay -> identical "
+                         "admission decisions)")
+    ap.add_argument("--index-budget", type=int, default=0,
+                    help="pre-drawn walk-endpoint lanes per node (FORA+ "
+                         "walk index, DESIGN.md §11); 0 = off")
+    ap.add_argument("--cache-size", type=int, default=0,
+                    help="daemon: result-cache capacity in entries "
+                         "(consulted before admission; 0 = off)")
+    ap.add_argument("--cache-ttl", type=float, default=0.0,
+                    help="daemon: result-cache TTL in virtual seconds "
+                         "(0 = no expiry)")
+    ap.add_argument("--graph-version", type=int, default=0,
+                    help="structure snapshot tag for cache keys — bump on "
+                         "graph updates to cold-start the cache")
     args = ap.parse_args(argv)
     if args.platform is not None:
         import jax

@@ -77,6 +77,11 @@ class ForaExecutor:
     walk_safety: float = 1.0       # calibration headroom on the probe r_sum
     ell_layout: str = "auto"       # auto|dense|sliced push table (DESIGN §8)
     devices: int = 1               # >1: a slot is a mesh of k chips (DESIGN §9)
+    index_budget: int = 0          # >0: pre-draw a WalkIndex of this many
+    #                                lanes per node and serve covered walk
+    #                                lanes from it (DESIGN.md §11)
+    index_seed: int = 0
+    walk_index: "object | None" = field(default=None, init=False, repr=False)
     _warmed: bool = field(default=False, init=False)
     calls: int = field(default=0, init=False)
     _device_graph: "DeviceGraph | ShardedDeviceGraph | None" = field(
@@ -91,6 +96,12 @@ class ForaExecutor:
             raise ValueError("devices>1 (node-sharded slots) requires the "
                              "fused hot path; the legacy fora() path is "
                              "single-device only")
+        if self.index_budget < 0:
+            raise ValueError("index_budget must be >= 0")
+        if self.index_budget and (not self.fused or self.devices > 1):
+            raise ValueError("index_budget requires the fused hot path on a "
+                             "single-device slot (the sharded residency "
+                             "draws walk lanes per shard)")
 
     # -- helpers ---------------------------------------------------------------
     def _block_sources(self, qids: Sequence[int]) -> np.ndarray:
@@ -112,7 +123,8 @@ class ForaExecutor:
         key = jax.random.PRNGKey(seed)
         if self.fused:
             res = fora_fused(self._device_graph, sources, self.params, key,
-                             num_walks=self._num_walks)
+                             num_walks=self._num_walks,
+                             index=self.walk_index)
             res.pi.block_until_ready()    # the block's single host sync
         else:
             res = fora(self.workload.graph, sources, self.params, key)
@@ -179,6 +191,16 @@ class ForaExecutor:
                         self.workload.graph, layout=self.ell_layout)
             if self._num_walks is None:
                 self._num_walks = self._calibrate_walk_budget()
+            if self.index_budget and self.walk_index is None:
+                # pre-draw the walk endpoints once per workload (FORA+,
+                # DESIGN.md §11) — build cost is warmup, never measured time
+                from ..index import WalkIndex
+
+                rp = self.params.resolve(self.workload.graph)
+                self.walk_index = WalkIndex.build(
+                    self._device_graph, width=self.index_budget,
+                    alpha=rp.alpha, walk_tail=rp.walk_tail,
+                    seed=self.index_seed)
         nq = self.workload.num_queries
         for qid in self._probe_qids():
             if self.block_size <= 1:
@@ -238,7 +260,8 @@ class ForaExecutor:
                 key = jax.random.PRNGKey(seed)
             t0 = time.perf_counter()
             res = fora_fused(self._device_graph, src, self.params, key,
-                             num_walks=self._num_walks)
+                             num_walks=self._num_walks,
+                             index=self.walk_index)
             res.pi.block_until_ready()          # the chunk's single sync
             dt = time.perf_counter() - t0
         self.calls += 1
@@ -259,8 +282,19 @@ class ForaExecutor:
             capped = max(1, int(self._num_walks * factor))
             self._num_walks = 1 << (capped.bit_length() - 1)   # pow2 floor
         # params changed -> every compiled variant is stale; re-warm lazily
+        # (the walk index survives: its endpoints depend only on alpha and
+        # the truncation length, neither of which degrade touches)
         self._warmed = False
         self._warmed_sizes.clear()
+
+    @property
+    def index_coverage(self) -> float:
+        """Fraction of the calibrated walk budget the attached walk index
+        serves (0.0 without an index / before warmup) — the per-query index
+        coverage the cache-aware cost model consumes (DESIGN.md §11)."""
+        if self.walk_index is None or self._num_walks is None:
+            return 0.0
+        return self.walk_index.coverage(self._num_walks)
 
     def __call__(self, query_ids: Sequence[int]) -> RuntimeStats:
         ids = list(query_ids)

@@ -26,10 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops
 from .forward_push import forward_push, forward_push_np
 from .graph import DeviceGraph, Graph, ShardedDeviceGraph
-from .random_walk import (_BULK_RNG_ELEMS, residual_walks,
-                          residual_walks_batched, walk_length_for_tail)
+from .random_walk import (_BULK_RNG_ELEMS, lane_streams, residual_walks,
+                          residual_walks_batched, sample_walk_starts,
+                          walk_endpoints, walk_length_for_tail)
 
 
 @dataclass(frozen=True)
@@ -132,11 +134,13 @@ def default_walk_budget(rp: ResolvedFora) -> int:
 
 
 def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
-                     out_offsets, out_degree, sources, key, *, alpha: float,
-                     rmax: float, omega: float, n: int, num_walks: int,
-                     num_steps: int, max_push_iters: int,
+                     out_offsets, out_degree, sources, key,
+                     idx_endpoints=None, idx_budget=None, idx_key=None, *,
+                     alpha: float, rmax: float, omega: float, n: int,
+                     num_walks: int, num_steps: int, max_push_iters: int,
                      force: str | None = None,
-                     shard_axis: str | None = None, num_shards: int = 1):
+                     shard_axis: str | None = None, num_shards: int = 1,
+                     index_lanes: int = 0, index_partial: bool = False):
     """The whole FORA query block as ONE executable: seed construction,
     frontier push (pull-form ELL SpMM, dense or sliced view), pow2
     walk-budget quantisation and the residual walks all stay on device.
@@ -148,6 +152,16 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
     split into ``num_walks / num_shards`` lanes per shard (global lane ids —
     the union of the shards' RNG streams is the single-device stream);
     endpoint masses are psum-combined, so every returned array is replicated.
+
+    With ``index_lanes > 0`` (a :class:`repro.index.WalkIndex` attached,
+    DESIGN.md §11) the walk phase's first ``index_lanes`` lanes are served
+    from the pre-drawn endpoint table (``idx_endpoints``/``idx_budget``, via
+    :func:`repro.kernels.ops.walk_endpoint_gather`) instead of being stepped
+    live; shortfall lanes — and, when ``index_partial``, table lanes whose
+    start node's budget does not cover them — fall back to live draws on the
+    index's per-lane trajectory streams (``idx_key``). Start sampling is the
+    same inverse-CDF draw from the query key as the live path, so per-query
+    randomness is untouched and the zero-host-sync contract is preserved.
     """
     B = sources.shape[0]
     seeds = jnp.zeros((B, n), jnp.float32).at[
@@ -167,7 +181,36 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
     # bulk-RNG decision must count the vmapped batch: the (L, W) draw
     # batches to (B, L, W) under vmap
     bulk = B * num_steps * num_walks <= _BULK_RNG_ELEMS
-    if shard_axis is None:
+    if index_lanes > 0:
+        # walk-index mode: starts sampled exactly as the live path samples
+        # them (same key split, same op order), endpoints for the covered
+        # lanes gathered from the pre-drawn table, shortfall walked live on
+        # the index's per-lane streams
+        starts = jax.vmap(lambda r, k: sample_walk_starts(
+            r, k, num_walks=num_walks, n=n)[0])(push.r, keys)
+        act = jnp.clip(w_eff, 1, num_walks).astype(push.r.dtype)
+        lane = jnp.arange(num_walks, dtype=jnp.int32)
+        w_all = jnp.where(lane[None, :] < act[:, None],
+                          (r_sum / act)[:, None], 0.0).astype(push.r.dtype)
+        endpoint = ops.walk_endpoint_gather(
+            idx_endpoints, idx_budget, starts[:, :index_lanes],
+            w_all[:, :index_lanes], force=force)
+        live_lo = 0 if index_partial else index_lanes
+        if live_lo < num_walks:
+            live_lanes = jnp.arange(live_lo, num_walks, dtype=jnp.int32)
+            us = lane_streams(idx_key, live_lanes, num_steps)
+            e_live = walk_endpoints(edge_dst, out_offsets, out_degree,
+                                    starts[:, live_lo:], us, alpha=alpha)
+            w_live = w_all[:, live_lo:]
+            if index_partial:
+                # table-covered head cells already contributed above
+                covered = (lane[None, :index_lanes]
+                           < idx_budget[starts[:, :index_lanes]])
+                w_live = w_live.at[:, :index_lanes].set(
+                    jnp.where(covered, 0.0, w_live[:, :index_lanes]))
+            endpoint = endpoint + jax.vmap(lambda e, ww: jax.ops.segment_sum(
+                ww, e, num_segments=n))(e_live, w_live)
+    elif shard_axis is None:
         endpoint = jax.vmap(lambda r, k, a: residual_walks(
             edge_dst, out_offsets, out_degree, r, k, alpha=alpha, n=n,
             num_walks=num_walks, num_steps=num_steps, active_walks=a,
@@ -185,7 +228,8 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
 
 
 _FUSED_STATICS = ("alpha", "rmax", "omega", "n", "num_walks", "num_steps",
-                  "max_push_iters", "force", "shard_axis", "num_shards")
+                  "max_push_iters", "force", "shard_axis", "num_shards",
+                  "index_lanes", "index_partial")
 _fora_fused = jax.jit(_fora_fused_impl, static_argnames=_FUSED_STATICS)
 # On TPU the (B,) sources buffer is donated (it aliases the int32
 # walks_effective output). On CPU donation is a measured ~1.7 ms/call
@@ -266,7 +310,8 @@ def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
                params: ForaParams = ForaParams(),
                key: jax.Array | None = None, *,
                num_walks: int | None = None,
-               force: str | None = None) -> FusedForaResult:
+               force: str | None = None,
+               index: "object | None" = None) -> FusedForaResult:
     """Zero-host-sync FORA on a :class:`DeviceGraph` (or, node-sharded
     across a device mesh, a :class:`ShardedDeviceGraph` — DESIGN.md §9).
 
@@ -276,6 +321,14 @@ def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
     static walk lane count (e.g. a workload-calibrated budget from
     :class:`repro.ppr.executor.ForaExecutor`); by default it covers the
     worst case r_sum = 1 so the estimator never under-samples.
+
+    ``index`` attaches a :class:`repro.index.WalkIndex` (DESIGN.md §11):
+    walk lanes the stored budget covers are served from the pre-drawn
+    endpoint table (a gather instead of an L-step scan), shortfall lanes
+    are drawn live on the index's trajectory streams. The index must have
+    been built at this call's alpha/walk-tail (validated here) and is
+    single-device only — the sharded residency replicates its own walk
+    arrays and rejects an index.
     """
     rp = params.resolve(dg)
     if key is None:
@@ -283,10 +336,25 @@ def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
     if num_walks is None:
         num_walks = default_walk_budget(rp)
     if isinstance(dg, ShardedDeviceGraph):
+        if index is not None:
+            raise ValueError("walk index is single-device only; the sharded "
+                             "residency draws its walk lanes per shard")
         return _fora_fused_sharded(dg, sources, rp, key,
                                    num_walks=num_walks, force=force)
     num_walks = _pow2_ceil_host(num_walks)
     steps = walk_length_for_tail(rp.alpha, rp.walk_tail)
+    index_lanes, index_partial = 0, False
+    idx_e = idx_b = idx_k = None
+    if index is not None:
+        if index.n != dg.n:
+            raise ValueError(f"index built for n={index.n}, graph has {dg.n}")
+        if abs(index.alpha - rp.alpha) > 1e-12 or index.num_steps != steps:
+            raise ValueError(
+                f"index walked alpha={index.alpha}/L={index.num_steps}, "
+                f"query needs alpha={rp.alpha}/L={steps} — rebuild the index")
+        index_lanes = min(index.width, num_walks)
+        index_partial = bool(index.partial)
+        idx_e, idx_b, idx_k = index.endpoints, index.budget, index.key
     if jax.default_backend() == "tpu":
         # copy before donating: the int32/reshape conversions are no-ops for
         # an already-1D-int32 input, and donating the caller's own buffer
@@ -299,9 +367,10 @@ def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
     pi, r_sum, iters, w_eff = fused_fn(
         dg.in_neighbors, dg.in_mask, dg.in_weights, dg.in_row_map,
         dg.edge_dst, dg.out_offsets, dg.out_degree, sources, key,
+        idx_e, idx_b, idx_k,
         alpha=rp.alpha, rmax=rp.rmax, omega=rp.omega, n=dg.n,
         num_walks=num_walks, num_steps=steps, max_push_iters=10_000,
-        force=force)
+        force=force, index_lanes=index_lanes, index_partial=index_partial)
     return FusedForaResult(pi=pi, residual_mass=r_sum, push_iters=iters,
                            walks_effective=w_eff, walks_budget=num_walks)
 

@@ -55,6 +55,76 @@ class WalkResult(NamedTuple):
 _BULK_RNG_ELEMS = 1 << 25
 
 
+def _stop_bound(alpha: float) -> jax.Array:
+    """Bernoulli(alpha) stop threshold on the shared int32 draw."""
+    return jnp.floor(alpha * (1 << 30)).astype(jnp.int32)
+
+
+def _advance(edge_dst, out_offsets, deg, stop_bound, pos, alive, u_step):
+    """One lockstep walk transition — THE transition function, shared by
+    the live walkers below, the :class:`repro.index.WalkIndex` builder and
+    the index-backed fused path, so a stored endpoint is bit-for-bit the
+    endpoint a live walker on the same RNG stream would reach. ``pos`` may
+    be any shape ``u_step`` broadcasts against ((W,), (B, W), (n, W))."""
+    stop = u_step < stop_bound
+    nxt = edge_dst[out_offsets[pos] + (u_step % deg[pos])]
+    new_alive = jnp.logical_and(alive, jnp.logical_not(stop))
+    return jnp.where(new_alive, nxt, pos), new_alive
+
+
+def lane_streams(trajectory_key: jax.Array, lane_ids: jax.Array,
+                 num_steps: int) -> jax.Array:
+    """Per-lane trajectory RNG: lane i's step draws come from
+    ``fold_in(trajectory_key, i)``, so ANY subset of lanes can be drawn
+    consistently regardless of how many lanes a caller materialises — the
+    property that lets a precomputed walk index and a live shortfall draw
+    share one stream (DESIGN.md §11). Returns (num_steps, len(lane_ids))."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(trajectory_key, i))(lane_ids)
+    us = jax.vmap(lambda k: jax.random.randint(k, (num_steps,), 0, 1 << 30))(
+        keys)
+    return us.T
+
+
+def walk_endpoints(edge_dst: jax.Array, out_offsets: jax.Array,
+                   out_degree: jax.Array, starts: jax.Array,
+                   us: jax.Array, *, alpha: float) -> jax.Array:
+    """Endpoints of alpha-terminated walks under explicit step draws.
+
+    ``starts``: (..., L) start nodes; ``us``: (num_steps, L) int32 draws
+    (typically :func:`lane_streams`), broadcast over any leading axes of
+    ``starts`` — a (B, L) batch shares the per-lane streams (the FORA+
+    trade: trajectories are reused across queries, starts stay per-query),
+    and the (n, L) all-nodes grid is how the walk index is built.
+    """
+    deg = jnp.maximum(out_degree, 1).astype(jnp.int32)
+    bound = _stop_bound(alpha)
+    extra = starts.ndim - 1
+
+    def step(carry, u_step):
+        u = u_step.reshape((1,) * extra + u_step.shape)
+        return _advance(edge_dst, out_offsets, deg, bound, *carry, u), None
+
+    init = (starts, jnp.ones(starts.shape, bool))
+    (endpos, _), _ = jax.lax.scan(step, init, us)
+    return endpos
+
+
+def sample_walk_starts(residual: jax.Array, key: jax.Array, *,
+                       num_walks: int, n: int
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Inverse-CDF start sampling proportional to one row's residual — the
+    exact draw :func:`residual_walks` performs internally (same key split,
+    same op order), factored out so the index-backed fused path samples
+    starts bit-identically to the live path. Returns (starts (num_walks,),
+    r_sum ())."""
+    r_sum = residual.sum()
+    csum = jnp.cumsum(residual)
+    k_start, _ = jax.random.split(key)
+    u = jax.random.uniform(k_start, (num_walks,)) * r_sum
+    starts = jnp.searchsorted(csum, u, side="left").astype(jnp.int32)
+    return jnp.clip(starts, 0, n - 1), r_sum
+
+
 @partial(jax.jit, static_argnames=("n", "num_walks", "num_steps", "bulk_rng",
                                    "lanes"))
 def residual_walks(edge_dst: jax.Array, out_offsets: jax.Array,
@@ -93,24 +163,23 @@ def residual_walks(edge_dst: jax.Array, out_offsets: jax.Array,
     lands on the same walkers. Callers psum the per-shard endpoint masses.
     """
     lanes_local = num_walks if lanes is None else lanes
-    r_sum = residual.sum()
-    csum = jnp.cumsum(residual)
-    k_start, k_walk = jax.random.split(key)
-    # inverse-CDF start sampling proportional to residual
-    u = jax.random.uniform(k_start, (num_walks,)) * r_sum
+    # inverse-CDF start sampling proportional to residual — the shared draw
+    # (the index-backed fused path calls the same helper, so its starts are
+    # bit-identical to this live path's); searchsorted is elementwise, so
+    # the sharded lane slice commutes with it
+    starts, r_sum = sample_walk_starts(residual, key,
+                                       num_walks=num_walks, n=n)
+    _, k_walk = jax.random.split(key)
     if lanes is not None:
-        u = jax.lax.dynamic_slice_in_dim(u, lane_offset, lanes_local)
-    starts = jnp.searchsorted(csum, u, side="left").astype(jnp.int32)
-    starts = jnp.clip(starts, 0, n - 1)
+        starts = jax.lax.dynamic_slice_in_dim(starts, lane_offset,
+                                              lanes_local)
 
     deg = jnp.maximum(out_degree, 1).astype(jnp.int32)
-    stop_bound = jnp.floor(alpha * (1 << 30)).astype(jnp.int32)
+    stop_bound = _stop_bound(alpha)
 
     def advance(pos, alive, u_step):
-        stop = u_step < stop_bound
-        nxt = edge_dst[out_offsets[pos] + (u_step % deg[pos])]
-        new_alive = jnp.logical_and(alive, jnp.logical_not(stop))
-        return jnp.where(new_alive, nxt, pos), new_alive
+        return _advance(edge_dst, out_offsets, deg, stop_bound,
+                        pos, alive, u_step)
 
     init = (starts, jnp.ones(lanes_local, bool))
     if bulk_rng is None:

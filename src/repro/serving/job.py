@@ -41,6 +41,9 @@ class Job:
     arrival: float                   # absolute virtual arrival time
     executor: JobExecutor
     seed: int = 0                    # drives the job's own sample draw
+    sources: tuple[int, ...] | None = None   # explicit per-query sources
+    #                                  (trace replays / cache keying; PPR
+    #                                  jobs derive them from the workload)
 
     # -- runtime state (owned by ServingRuntime) ---------------------------
     state: JobState = JobState.PENDING
@@ -56,6 +59,10 @@ class Job:
     extended: bool = False
     replans: int = 0
     core_seconds: float = 0.0
+    cache_hits: int = 0                    # queries answered at arrival
+    late_hits: int = 0                     # pending queries answered mid-job
+    effective_queries: int = 0             # misses admission actually sized
+    mesh: Any = None                       # MeshPlan of the current grant
     _accounted_to: float = 0.0             # core-seconds integration cursor
     log: list[str] = field(default_factory=list)
 
@@ -64,7 +71,14 @@ class Job:
             raise ValueError("num_queries must be >= 1")
         if self.deadline <= 0:
             raise ValueError("deadline must be > 0")
+        if self.sources is not None:
+            self.sources = tuple(int(s) for s in self.sources)
+            if len(self.sources) != self.num_queries:
+                raise ValueError(
+                    f"{len(self.sources)} sources for {self.num_queries} "
+                    "queries")
         self.abs_deadline = self.arrival + self.deadline
+        self.effective_queries = self.num_queries
 
     # -- accounting --------------------------------------------------------
     def account(self, now: float, grant: int) -> None:
@@ -117,6 +131,10 @@ class JobRecord:
     degraded: bool
     extended: bool
     replans: int
+    cache_hits: int = 0              # arrival-time cache answers
+    late_hits: int = 0               # slot-boundary cache answers
+    mesh_devices: int = 0            # devices x lanes the final grant mapped to
+    mesh_lanes: int = 0
 
     @property
     def hit(self) -> bool:
@@ -132,4 +150,7 @@ class JobRecord:
                          core_seconds=job.core_seconds,
                          lemma2_core_seconds=lemma2_core_seconds,
                          degraded=job.degraded, extended=job.extended,
-                         replans=job.replans)
+                         replans=job.replans, cache_hits=job.cache_hits,
+                         late_hits=job.late_hits,
+                         mesh_devices=getattr(job.mesh, "devices", 0),
+                         mesh_lanes=getattr(job.mesh, "lanes", 0))

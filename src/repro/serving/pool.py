@@ -23,11 +23,21 @@ from ..core.allocator import DeviceAllocator, MeshPlan, plan_core_mesh
 
 @dataclass
 class CorePool:
-    """Devices x lanes of grantable cores shared by all in-flight jobs."""
+    """Devices x lanes of grantable cores shared by all in-flight jobs.
+
+    Besides slot ``grants``, the pool carries short-lived *reservations* —
+    the ``c`` preprocessing cores a job occupies while its sample runs
+    (ROADMAP follow-up: those cores used to be assumed free). Reservations
+    reduce ``free`` like grants do but live outside the shed arithmetic:
+    they span one preprocessing window and are released by the runtime's
+    ``pre_release`` event, so a failure mid-window at worst overcommits by
+    ``c`` for that window.
+    """
 
     allocator: DeviceAllocator
     lanes_per_device: int = 1
     grants: dict[int, int] = field(default_factory=dict)
+    reservations: dict[int, int] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.lanes_per_device < 1:
@@ -51,8 +61,13 @@ class CorePool:
         return sum(self.grants.values())
 
     @property
+    def reserved(self) -> int:
+        """Cores held by preprocessing reservations (transient)."""
+        return sum(self.reservations.values())
+
+    @property
     def free(self) -> int:
-        return max(0, self.total - self.used)
+        return max(0, self.total - self.used - self.reserved)
 
     @property
     def overcommit(self) -> int:
@@ -61,6 +76,28 @@ class CorePool:
 
     def grant_of(self, job_id: int) -> int:
         return self.grants.get(job_id, 0)
+
+    def reserved_of(self, job_id: int) -> int:
+        return self.reservations.get(job_id, 0)
+
+    # -- preprocessing reservations ----------------------------------------
+    def reserve(self, job_id: int, cores: int) -> bool:
+        """Hold ``cores`` for a job's preprocessing window (Alg. 2 Line 1's
+        ``c`` cores, billed against the pool instead of assumed free).
+        All-or-nothing like :meth:`acquire`; released via :meth:`unreserve`
+        when the slot phase starts (or the job terminates)."""
+        if cores < 1:
+            raise ValueError("cores must be >= 1")
+        if job_id in self.reservations:
+            raise ValueError(f"job {job_id} already holds a reservation")
+        if cores > self.free:
+            return False
+        self.reservations[job_id] = cores
+        return True
+
+    def unreserve(self, job_id: int) -> int:
+        """Return a job's preprocessing reservation to the pool."""
+        return self.reservations.pop(job_id, 0)
 
     # -- grant lifecycle ---------------------------------------------------
     def acquire(self, job_id: int, cores: int) -> bool:

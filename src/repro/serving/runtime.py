@@ -45,10 +45,12 @@ from ..core.bounds import (BoundReport, InfeasibleDeadline,
                            lemma1_lower_bound, minimal_feasible_deadline,
                            required_cores)
 from ..core.dna import _draw_sample
-from ..core.estimator import RuntimeStats, SimulatedTimeSource
+from ..core.estimator import (CacheAwareCostModel, RuntimeStats,
+                              SimulatedTimeSource)
 from ..core.sampling import fraction_sample_size
 from ..core.slots import SlotStepper, num_slots, queries_per_slot
 from ..ft.elastic import ElasticController, FailureInjector
+from ..index import ResultCache
 from .job import Job, JobRecord, JobState
 from .pool import CorePool
 
@@ -67,6 +69,15 @@ class ServingConfig:
     max_degrades: int = 2              # degradation depth cap per job
     extend: bool = True                # §III-A deadline extension fallback
     p_f: float = 0.05                  # Lemma-2 failure prob (reporting only)
+    graph_version: int = 0             # structure snapshot for cache keys —
+    #                                    bumping it cold-starts the cache
+    #                                    (DESIGN.md §11 staleness rule)
+    cache_recheck: bool = True         # re-probe pending queries at slot
+    #                                    boundaries (late hits shed work)
+    index_coverage: float = 0.0        # operator-declared walk-index share
+    #                                    for MODELLED admission times; leave 0
+    #                                    when the measured sample already ran
+    #                                    index-backed (no double counting)
 
     def __post_init__(self) -> None:
         if not 0.0 < self.scaling_factor <= 1.0:
@@ -119,6 +130,11 @@ class ServingReport:
         return float(np.quantile(late, q)) if late else 0.0
 
     @property
+    def cache_hits(self) -> int:
+        """Queries answered from the result cache (arrival + late hits)."""
+        return sum(r.cache_hits + r.late_hits for r in self.records)
+
+    @property
     def core_seconds(self) -> float:
         return sum(r.core_seconds for r in self.records)
 
@@ -132,6 +148,7 @@ class ServingReport:
         n = len(self.records)
         ratio = (self.core_seconds / self.lemma2_core_seconds
                  if self.lemma2_core_seconds else float("nan"))
+        cache = (f" cache_hits={self.cache_hits}" if self.cache_hits else "")
         return (f"jobs={n} done={self.completed} rejected={self.rejected} "
                 f"hit_rate={self.hit_rate:.3f} "
                 f"lateness_p50={self.lateness_quantile(0.5):.3f}s "
@@ -139,7 +156,7 @@ class ServingReport:
                 f"degraded={self.degraded} extended={self.extended} "
                 f"core_s={self.core_seconds:.1f} "
                 f"lemma2_core_s={self.lemma2_core_seconds:.1f} "
-                f"ratio={ratio:.3f}")
+                f"ratio={ratio:.3f}" + cache)
 
 
 class SimJobExecutor:
@@ -166,16 +183,35 @@ ExecutorFactory = Callable[[int, int, int], Any]
 
 
 class ServingRuntime:
-    """Event-driven serving loop over a shared :class:`CorePool`."""
+    """Event-driven serving loop over a shared :class:`CorePool`.
+
+    ``cache`` attaches a :class:`repro.index.ResultCache` (DESIGN.md §11):
+    arrivals are probed BEFORE Lemma-1 admission — known answers bypass the
+    pool entirely (a fully-cached job completes even against an exhausted
+    pool), misses proceed through sampling/admission sized on the remaining
+    work. Completed slots insert their queries; at every slot boundary the
+    still-pending queries are re-probed so answers produced by concurrent
+    jobs shed work mid-flight (late hits -> replan releases cores).
+    ``cost_model`` (default: a fresh cold :class:`CacheAwareCostModel`)
+    learns the observed hit rate and discounts the admission arithmetic —
+    cold it is exactly neutral, so a runtime without a cache (or with an
+    empty one and no repeats) reproduces the PR-4 decisions bit-for-bit
+    (regression-pinned).
+    """
 
     def __init__(self, pool: CorePool, executor_factory: ExecutorFactory,
                  config: ServingConfig = ServingConfig(),
-                 controller: ElasticController | None = None):
+                 controller: ElasticController | None = None,
+                 cache: ResultCache | None = None,
+                 cost_model: CacheAwareCostModel | None = None):
         self.pool = pool
         self.factory = executor_factory
         self.cfg = config
         self.controller = controller or ElasticController(
             allocator=pool.allocator)
+        self.cache = cache
+        self.model = cost_model or CacheAwareCostModel(
+            index_coverage=config.index_coverage)
         self.clock = 0.0
         self.jobs: list[Job] = []
         self._heap: list[tuple[float, int, str, Any]] = []
@@ -186,11 +222,13 @@ class ServingRuntime:
 
     # -- submission --------------------------------------------------------
     def submit(self, num_queries: int, deadline: float, at: float = 0.0,
-               seed: int | None = None) -> Job:
+               seed: int | None = None,
+               sources: Sequence[int] | None = None) -> Job:
         job_id = len(self.jobs)
         seed = job_id if seed is None else seed
         job = Job(job_id=job_id, num_queries=num_queries, deadline=deadline,
                   arrival=at, seed=seed,
+                  sources=None if sources is None else tuple(sources),
                   executor=self.factory(job_id, num_queries, seed))
         self.jobs.append(job)
         self._push(at, "arrive", job)
@@ -224,10 +262,28 @@ class ServingRuntime:
 
     def submit_trace(self, trace: Sequence[dict]) -> list[Job]:
         """Replay a recorded trace: [{"at":, "queries":, "deadline":,
-        "seed"?:}, ...]."""
+        "seed"?:, "sources"?:}, ...] — the format :meth:`trace_records`
+        captures, so a recorded serve replays through the same admission
+        decisions."""
         return [self.submit(int(row["queries"]), float(row["deadline"]),
-                            at=float(row["at"]), seed=row.get("seed"))
+                            at=float(row["at"]), seed=row.get("seed"),
+                            sources=row.get("sources"))
                 for row in trace]
+
+    def trace_records(self, *, completed_only: bool = True) -> list[dict]:
+        """Completed-job arrival/deadline/source records in the exact shape
+        :meth:`submit_trace` consumes (ROADMAP follow-up: replay traces
+        captured from real serve logs). Call after :meth:`run`."""
+        jobs = [j for j in self.jobs
+                if j.state is JobState.DONE or not completed_only]
+        rows: list[dict] = []
+        for j in sorted(jobs, key=lambda j: (j.arrival, j.job_id)):
+            row = {"at": j.arrival, "queries": j.num_queries,
+                   "deadline": j.deadline, "seed": j.seed}
+            if j.sources is not None:
+                row["sources"] = list(j.sources)
+            rows.append(row)
+        return rows
 
     def inject_failures(self, schedule: dict[float, list[int]]) -> None:
         """Schedule device failures at virtual times. Routed through the
@@ -254,6 +310,18 @@ class ServingRuntime:
                 self._handle_arrival(payload, self.clock)
             elif kind == "slot":
                 self._handle_slot(payload, t)
+            elif kind == "pre_release":
+                # a preprocessing reservation ends (Alg. 2's c cores return
+                # to the pool); a waiter may now fit
+                if self.pool.unreserve(payload.job_id):
+                    self._pop_waiter(self.clock)
+            elif kind == "publish":
+                # preprocessing-sample answers become visible only once the
+                # sample has actually finished computing (t_pre elapsed) —
+                # publishing at arrival-handling time would let concurrent
+                # jobs hit answers that do not exist yet in virtual time
+                job, qids, stats = payload
+                self._record_answers(job, qids, stats, self.clock)
             elif kind == "fail":
                 self._handle_failure(payload, self.clock)
         records = tuple(
@@ -280,10 +348,85 @@ class ServingRuntime:
             return min(self.cfg.sample_size, num_queries)
         return fraction_sample_size(num_queries, self.cfg.sample_frac)
 
+    # -- cache plumbing (DESIGN.md §11) -------------------------------------
+    def _cache_key(self, job: Job, qid: int):
+        """(source, epsilon, graph_version) for one of a job's queries, or
+        None when the job has no source notion (uncacheable). Sources come
+        from the job's explicit trace row when present, else from the
+        executor's workload; epsilon from the executor's FORA params (a
+        degraded executor caches under its raised epsilon — a full-accuracy
+        request never silently receives a coarser answer)."""
+        if job.sources is not None:
+            src = job.sources[qid]
+        else:
+            workload = getattr(job.executor, "workload", None)
+            if workload is None or not hasattr(workload, "source_of"):
+                return None
+            src = int(workload.source_of(qid))
+        eps = getattr(getattr(job.executor, "params", None), "epsilon", None)
+        return ResultCache.make_key(src, eps, self.cfg.graph_version)
+
+    def _cache_probe(self, job: Job, now: float, *,
+                     count: bool) -> tuple[list[int], list[int]]:
+        """Partition the job's queries into (hits, misses). ``count=False``
+        peeks (no hit accounting) — used for the pre-gate full-hit check so
+        a job that later queues does not inflate the per-key accounting."""
+        hits: list[int] = []
+        misses: list[int] = []
+        for qid in range(job.num_queries):
+            key = self._cache_key(job, qid)
+            entry = None
+            if key is not None:
+                entry = (self.cache.get(key, now=now) if count
+                         else self.cache.peek(key, now=now))
+            (hits if entry is not None else misses).append(qid)
+        return hits, misses
+
+    @property
+    def _cache_on(self) -> bool:
+        return self.cache is not None and self.cache.capacity > 0
+
+    def _reshape(self, job: Job, now: float) -> None:
+        """Route the job's current grant through ``CorePool.mesh_plan`` so
+        a grant arrives (and re-arrives after every grow/shrink) as a
+        devices x lanes mesh shape, not a bare integer (ROADMAP PR-4
+        follow-up). Executors exposing ``on_mesh`` are notified."""
+        grant = self.pool.grant_of(job.job_id)
+        if grant < 1:
+            return
+        try:
+            plan = self.pool.mesh_plan(grant)
+        except InfeasibleDeadline:
+            return      # transiently overcommitted mid-failure; shed first
+        if job.mesh is None or (plan.devices, plan.lanes) != (
+                job.mesh.devices, job.mesh.lanes):
+            job.mesh = plan
+            job.log.append(f"t={now:.3f} mesh {plan.devices}x{plan.lanes} "
+                           f"(grant {grant})")
+            if hasattr(job.executor, "on_mesh"):
+                job.executor.on_mesh(plan)
+
     def _handle_arrival(self, job: Job, now: float) -> None:
         cfg = self.cfg
-        if self.pool.free < 1:
-            if self.pool.used > 0:
+        if self._cache_on:
+            # consulted BEFORE admission: known answers never touch the
+            # Lemma-1 arithmetic or the pool — a fully-cached job completes
+            # even against an exhausted pool
+            _, misses = self._cache_probe(job, now, count=False)
+            if not misses:
+                hits, _ = self._cache_probe(job, now, count=True)
+                self.model.observe(len(hits), job.num_queries)
+                job.cache_hits = len(hits)
+                job.effective_queries = 0
+                job.state = JobState.DONE
+                job.completion = now
+                job.log.append(f"t={now:.3f} answered from cache "
+                               f"({len(hits)} hits, zero cores)")
+                self._pop_waiter(now)
+                return
+        c = cfg.preprocess_cores
+        if self.pool.free < c:
+            if self.pool.used > 0 or self.pool.reserved > 0:
                 # pool momentarily exhausted: queue behind the running jobs
                 # (a future completion re-enqueues us) instead of rejecting —
                 # the SLA clock keeps running, replan/degrade absorb the wait
@@ -293,18 +436,28 @@ class ServingRuntime:
             job.state = JobState.REJECTED        # pool has zero capacity
             job.log.append(f"t={now:.3f} rejected: zero-capacity pool")
             return
-        s = self._sample_size(job.num_queries)
+        misses = list(range(job.num_queries))
+        if self._cache_on:
+            hits, misses = self._cache_probe(job, now, count=True)
+            self.model.observe(len(hits), job.num_queries)
+            job.cache_hits = len(hits)
+            if hits:
+                job.log.append(f"t={now:.3f} {len(hits)} of "
+                               f"{job.num_queries} queries cached")
+        job.effective_queries = len(misses)
+        s = self._sample_size(len(misses))
         rng = np.random.default_rng(job.seed)
-        sample_ids, rest_ids = _draw_sample(rng, job.num_queries, s)
+        sample_idx, rest_idx = _draw_sample(rng, len(misses), s)
+        sample_ids = [misses[i] for i in sample_idx]
+        rest_ids = [misses[i] for i in rest_idx]
         stats = job.executor(sample_ids)
         job.stats = stats
-        job.t_pre = stats.t_pre_on(cfg.preprocess_cores)
+        job.t_pre = stats.t_pre_on(c)
         # preprocessing cost is real core time even though c is tiny; the
-        # slot grant acquired below is charged from NOW too — the pool
-        # reserves those cores during preprocessing (other arrivals see
-        # pool.free reduced), so not billing them would flatter the
-        # core-hours-vs-Lemma-2 headline
-        job.core_seconds += cfg.preprocess_cores * job.t_pre
+        # c cores are additionally RESERVED in the pool over the preprocess
+        # window below (ROADMAP follow-up — they used to be assumed free),
+        # and the slot grant acquired below is charged from NOW too
+        job.core_seconds += c * job.t_pre
         job._accounted_to = now
         try:
             self._lemma2_cs[job.job_id] = (
@@ -318,6 +471,7 @@ class ServingRuntime:
         if not self._admit(job, now):
             job.state = JobState.REJECTED
             job.log.append(f"t={now:.3f} rejected at admission")
+            self._reserve_pre(job, now, c)       # the sample still ran
             self._pop_waiter(now)         # keep the waiter chain alive
             return
         if len(rest_ids) == 0:
@@ -325,6 +479,10 @@ class ServingRuntime:
             job.state = JobState.DONE
             job.completion = now + job.t_pre
             job.log.append(f"t={now:.3f} done in preprocessing")
+            if self._cache_on:
+                self._push(now + job.t_pre, "publish",
+                           (job, sample_ids, stats))
+            self._reserve_pre(job, now, c)
             self._pop_waiter(now + job.t_pre)
             return
 
@@ -333,6 +491,9 @@ class ServingRuntime:
         self._grant_peak[job.job_id] = k
         job.state = JobState.RUNNING
         job.slots_t0 = now + job.t_pre
+        # Alg. 2's c preprocessing cores occupy the pool until slots start;
+        # the k-grant (held from now, reserve-ahead) subsumes c of them
+        self._reserve_pre(job, now, max(0, c - k))
         # slots prefer the chunked API (one fused device step per slot,
         # control back to the event loop in between); sampling used __call__
         # above because admission needs per-query time resolution
@@ -340,19 +501,50 @@ class ServingRuntime:
         job.stepper = SlotStepper.from_queries(rest_ids, ell, k, slot_exec)
         job.log.append(f"t={now:.3f} admitted s={s} ell={ell} k={k} "
                        f"t_pre={job.t_pre:.4f}")
+        self._reshape(job, now)
+        if self._cache_on:
+            self._push(job.slots_t0, "publish", (job, sample_ids, stats))
         self._step_job(job)
+
+    def _reserve_pre(self, job: Job, now: float, cores: int) -> None:
+        """Bill ``cores`` preprocessing cores against the pool over
+        [now, now + t_pre) — released by the ``pre_release`` event."""
+        if cores > 0 and job.t_pre > 0 and self.pool.reserve(job.job_id,
+                                                             cores):
+            self._push(now + job.t_pre, "pre_release", job)
+
+    def _record_answers(self, job: Job, qids: Sequence[int],
+                        stats: RuntimeStats, now: float) -> None:
+        """Insert answered queries into the result cache with their measured
+        per-query cost (per-key accounting feeds the saved-core-seconds
+        report and the cost model's hit-rate signal)."""
+        if not self._cache_on:
+            return
+        for qid, t in zip(qids, np.asarray(stats.times)):
+            key = self._cache_key(job, qid)
+            if key is not None:
+                self.cache.put(key, cost=float(t), now=now)
 
     def _admit(self, job: Job, now: float) -> bool:
         """Lemma-1 admission against the pool's free cores, with the
-        degrade-then-extend rescue ladder. True iff the job may run."""
+        degrade-then-extend rescue ladder. True iff the job may run.
+
+        The estimate is the cache-aware discounted one (DESIGN.md §11):
+        arrival-time hits were already removed from ``effective_queries``;
+        the cost model further shaves the learned expected-miss fraction
+        (future slot-boundary hits) off the count and the index-served walk
+        share off t_max. A cold model leaves both multipliers at exactly
+        1.0, reproducing the PR-4 arithmetic bit-for-bit."""
         cfg = self.cfg
         capacity = self.pool.free
+        x_eff = self.model.discounted_queries(job.effective_queries)
+        t_disc = self.model.time_discount()
         while True:
             T_rel = job.abs_deadline - now
-            t_max = job.stats.t_max * job.est_scale
+            t_max = job.stats.t_max * job.est_scale * t_disc
             try:
                 need = required_cores(
-                    lemma1_lower_bound(job.num_queries, t_max, T_rel))
+                    lemma1_lower_bound(x_eff, t_max, T_rel))
             except ValueError:
                 need = None                       # t_max > T or T <= 0
             if need is not None and need <= capacity and capacity >= 1:
@@ -361,7 +553,7 @@ class ServingRuntime:
                 continue
             if cfg.extend and capacity >= 1:
                 new_T = minimal_feasible_deadline(
-                    job.num_queries, job.stats.t_max * job.est_scale,
+                    x_eff, job.stats.t_max * job.est_scale * t_disc,
                     capacity)
                 job.abs_deadline = now + new_T
                 job.extended = True
@@ -374,10 +566,15 @@ class ServingRuntime:
                        remaining: int) -> tuple[int, int]:
         """Algorithm 2 Lines 7-8 against the current pool: ell from the
         d-scaled remaining budget, k = ceil(remaining/ell), capped at the
-        pool's free cores (re-slotting when capped)."""
+        pool's free cores (re-slotting when capped). ``k`` is sized from
+        the cost model's expected-miss count (cold: = remaining), while the
+        slot plan always covers ALL remaining work — if the predicted hits
+        never materialise, the work still has cells and replanning grows
+        the grant instead of queries being dropped."""
         cfg = self.cfg
         T_rel = job.abs_deadline - now
-        t_avg = job.t_avg_estimate()
+        t_avg = job.t_avg_estimate() * self.model.time_discount()
+        r_eff = self.model.discounted_queries(remaining)
         budget = cfg.scaling_factor * T_rel - job.t_pre
         ell = num_slots(budget, t_avg) if budget > 0 else 0
         if ell < 1:
@@ -386,7 +583,8 @@ class ServingRuntime:
             ell = remaining
             k = 1
         else:
-            k = queries_per_slot(remaining, ell)
+            k = queries_per_slot(r_eff, ell)
+            ell = max(ell, -(-remaining // k))    # plan must hold ALL work
         free = max(1, self.pool.free)
         if k > free:
             k = free
@@ -411,6 +609,16 @@ class ServingRuntime:
         now = t
         grant = self.pool.grant_of(job.job_id)
         job.account(now, grant)
+        if self._cache_on and job.stepper.executed_slots:
+            # the slot that just completed publishes its answers
+            slot = job.stepper.executed_slots[-1]
+            times = job.stepper.per_query_times
+            for qid in slot:
+                key = self._cache_key(job, qid)
+                if key is not None:
+                    self.cache.put(key, cost=times[qid], now=now)
+        if not job.stepper.done and self._cache_on and self.cfg.cache_recheck:
+            self._recheck_pending(job, now)
         if job.stepper.done:
             job.state = JobState.DONE
             job.completion = now
@@ -422,6 +630,30 @@ class ServingRuntime:
             self._replan(job, now)
         self._step_job(job)
 
+    def _recheck_pending(self, job: Job, now: float) -> None:
+        """Slot-boundary cache recheck (DESIGN.md §11): queries another job
+        answered since admission are dropped from the work queues — they
+        cost zero further core time, and the following replan releases the
+        cores they would have used. The observed late-hit rate feeds the
+        cost model's expected-work discount."""
+        pending = job.stepper.queues.pending()
+        drop = set()
+        lookups = 0
+        for qid in pending:
+            key = self._cache_key(job, qid)
+            if key is None:
+                continue
+            lookups += 1
+            if self.cache.get(key, now=now) is not None:
+                drop.add(qid)
+        if lookups:
+            self.model.observe(len(drop), lookups)
+        if drop:
+            removed = job.stepper.discard(drop)
+            job.late_hits += removed
+            job.log.append(f"t={now:.3f} {removed} pending answered from "
+                           "cache (late hits)")
+
     def _replan(self, job: Job, now: float) -> None:
         """Re-run the Alg. 2 arithmetic over the remaining work with the
         rolling merged statistics; resize the grant through the pool."""
@@ -429,11 +661,12 @@ class ServingRuntime:
         R = job.stepper.remaining
         grant = self.pool.grant_of(job.job_id)
         T_left = job.abs_deadline - now
-        t_avg = job.t_avg_estimate()
+        t_avg = job.t_avg_estimate() * self.model.time_discount()
+        r_eff = self.model.discounted_queries(R)
         budget = cfg.scaling_factor * T_left
         job.replans += 1
         ell = num_slots(budget, t_avg) if budget > 0 else 0
-        k_new = queries_per_slot(R, ell) if ell >= 1 else R  # behind: want max
+        k_new = queries_per_slot(r_eff, ell) if ell >= 1 else r_eff
         k_max = grant + self.pool.free
         k_new = min(max(1, k_new), max(1, k_max))
         if k_new < grant:
@@ -442,12 +675,14 @@ class ServingRuntime:
                 job.stepper.resize(grant - released)
                 job.log.append(f"t={now:.3f} replan shrink {grant}->"
                                f"{grant - released} (ahead)")
+                self._reshape(job, now)
         elif k_new > grant:
             added = self.pool.grow(job.job_id, k_new - grant)
             if added:
                 job.stepper.resize(grant + added)
                 job.log.append(f"t={now:.3f} replan grow {grant}->"
                                f"{grant + added} (behind)")
+                self._reshape(job, now)
         grant = self.pool.grant_of(job.job_id)
         self._grant_peak[job.job_id] = max(self._grant_peak[job.job_id], grant)
         # miss predicted at the best obtainable grant?
@@ -496,12 +731,14 @@ class ServingRuntime:
             job.stepper.resize(self.pool.grant_of(job.job_id))
             adm = self.pool.allocator.readmit(
                 job.remaining, job.abs_deadline - now, job.stats,
-                cores_per_device=self.pool.lanes_per_device)
+                cores_per_device=self.pool.lanes_per_device,
+                cost_model=self.model)
             if not adm.feasible and adm.extended:
                 job.abs_deadline = now + adm.deadline
                 job.extended = True
             job.log.append(f"t={now:.3f} failure shed {cut} cores "
                            f"(readmit feasible={adm.feasible})")
+            self._reshape(job, now)
 
 
 def run_single_job(num_queries: int, deadline: float,

@@ -1,0 +1,324 @@
+"""Result cache + cache-aware admission (DESIGN.md §11) and the ISSUE-5
+satellites: mesh-shaped grants, preprocessing-core reservation, and trace
+capture/replay."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import CacheAwareCostModel, DeviceAllocator, RuntimeStats
+from repro.index import ResultCache
+from repro.serving import (CorePool, JobState, ServingConfig, ServingRuntime,
+                           SimJobExecutor)
+
+
+def _factory(mean=0.05, cv=0.3):
+    return lambda job_id, nq, sd: SimJobExecutor(mean=mean, cv=cv, seed=sd)
+
+
+# ---------------------------------------------------------------------------
+# ResultCache unit behaviour
+
+
+def test_cache_lru_eviction_order():
+    cache = ResultCache(capacity=2)
+    cache.put(("a",), cost=1.0)
+    cache.put(("b",), cost=2.0)
+    assert cache.get(("a",)) is not None          # touch a -> b is LRU
+    cache.put(("c",), cost=3.0)
+    assert ("b",) not in cache and ("a",) in cache and ("c",) in cache
+    assert cache.stats.evictions == 1
+
+
+def test_cache_ttl_expiry_virtual_time():
+    cache = ResultCache(capacity=8, ttl=5.0)
+    cache.put(("k",), cost=1.0, now=0.0)
+    assert cache.get(("k",), now=4.9) is not None
+    assert cache.peek(("k",), now=10.1) is None   # peek honours TTL...
+    assert ("k",) in cache                        # ...without deleting
+    assert cache.get(("k",), now=10.1) is None    # get expires it
+    assert ("k",) not in cache
+    assert cache.stats.expirations == 1
+
+
+def test_cache_per_key_hit_cost_accounting():
+    cache = ResultCache(capacity=8)
+    cache.put(("hot",), cost=0.25)
+    cache.put(("cold",), cost=1.0)
+    for _ in range(3):
+        assert cache.get(("hot",)) is not None
+    assert cache.peek(("hot",)).hits == 3
+    assert cache.peek(("hot",)).saved == pytest.approx(0.75)
+    assert cache.stats.saved_cost == pytest.approx(0.75)
+    assert cache.hit_rate == pytest.approx(3 / 3)
+    assert cache.top_keys(1)[0][0] == ("hot",)
+
+
+def test_cache_republish_carries_hit_accounting():
+    """Completed slots re-put hot keys constantly; the per-key hit count
+    (the operator's 'what is the cache earning' signal) must survive."""
+    cache = ResultCache(capacity=8)
+    cache.put(("hot",), cost=0.5, now=0.0)
+    cache.get(("hot",))
+    cache.get(("hot",))
+    cache.put(("hot",), cost=0.3, now=1.0)        # republished by a new slot
+    assert cache.peek(("hot",)).hits == 2
+    assert cache.peek(("hot",)).created == 1.0    # TTL from the fresh answer
+
+
+def test_cache_capacity_zero_disabled():
+    cache = ResultCache(capacity=0)
+    cache.put(("k",), cost=1.0)
+    assert len(cache) == 0
+    assert cache.get(("k",)) is None
+
+
+# ---------------------------------------------------------------------------
+# cost model: cold neutrality (the regression-pinned safety clamp)
+
+
+def test_cost_model_cold_is_exactly_neutral():
+    model = CacheAwareCostModel()
+    assert model.work_discount() == 1.0
+    assert model.time_discount() == 1.0
+    assert model.discounted_queries(400) == 400
+    stats = RuntimeStats(np.array([1.0, 2.0]))
+    assert model.discounted_stats(stats) is stats       # identity, not copy
+
+
+def test_cost_model_learns_and_clamps():
+    model = CacheAwareCostModel(decay=0.5, max_trust=0.8)
+    model.observe(100, 100)                       # perfect hit rate observed
+    assert model.hit_rate == 1.0
+    assert model.work_discount() == pytest.approx(0.2)  # clamped at max_trust
+    model.observe(0, 100)
+    assert model.hit_rate == pytest.approx(0.5)   # EWMA folded the miss batch
+    model.index_coverage = 1.0
+    model.walk_share = 0.6
+    assert model.time_discount() == pytest.approx(0.4)
+    with pytest.raises(ValueError):
+        model.observe(5, 4)
+
+
+def test_readmit_uses_discounted_estimate():
+    alloc = DeviceAllocator(devices=list(range(2)), spares_fraction=0.0)
+    stats = RuntimeStats(np.full(4, 1.0))
+    # 8 queries, T=2, t_max=1 -> need 4 > 2 devices: infeasible cold
+    assert not alloc.readmit(8, 2.0, stats).feasible
+    model = CacheAwareCostModel(max_trust=0.9)
+    model.observe(9, 10)                          # 90% observed hit rate
+    adm = alloc.readmit(8, 2.0, stats, cost_model=model)
+    assert adm.feasible and adm.cores == 1        # ceil(8*0.1)=1 miss expected
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+
+
+def _distinct_sources(num_jobs, x):
+    return [list(range(i * 10 * x, i * 10 * x + x)) for i in range(num_jobs)]
+
+
+def test_cold_cache_run_matches_uncached_bit_for_bit():
+    """ISSUE-5 acceptance: with no repeats to hit, an attached cache must
+    not perturb a single admission decision — the full reports are equal."""
+    def drive(cache):
+        rt = ServingRuntime(CorePool.of(24), _factory(),
+                            ServingConfig(scaling_factor=0.9), cache=cache)
+        for i, s in enumerate(_distinct_sources(3, 60)):
+            rt.submit(60, 8.0, at=i * 0.5, seed=i, sources=s)
+        return rt.run()
+
+    assert drive(None) == drive(ResultCache(capacity=4096))
+    assert drive(None) == drive(ResultCache(capacity=0))
+
+
+def test_fully_cached_job_bypasses_pool():
+    """A job whose every query is cached completes at arrival with zero
+    core-seconds — even against a pool another job has exhausted."""
+    cache = ResultCache(capacity=64)
+    rt = ServingRuntime(CorePool.of(1), _factory(mean=0.05),
+                        ServingConfig(scaling_factor=0.9), cache=cache)
+    hog = rt.submit(40, 30.0, at=0.0, seed=0, sources=list(range(100, 140)))
+    for src in range(20):
+        cache.put(ResultCache.make_key(src, None, 0), cost=0.05, now=0.0)
+    cached = rt.submit(20, 1.0, at=0.1, seed=1, sources=list(range(20)))
+    report = rt.run()
+    rec = report.records[cached.job_id]
+    assert cached.state is JobState.DONE
+    assert cached.completion == 0.1               # answered at arrival
+    assert rec.cache_hits == 20 and rec.core_seconds == 0.0
+    assert rec.grant_peak == 0                    # the pool never saw it
+    assert rec.hit
+    assert hog.state is JobState.DONE
+
+
+def test_late_hits_shed_pending_work():
+    """Two overlapping jobs over the same sources: the trailing job's
+    pending queries are answered by the leader's completed slots and
+    dropped at slot boundaries (late hits -> fewer core-seconds)."""
+    shared = list(range(300))
+
+    def drive(cache):
+        rt = ServingRuntime(CorePool.of(16), _factory(mean=0.05),
+                            ServingConfig(scaling_factor=0.9), cache=cache)
+        rt.submit(300, 20.0, at=0.0, seed=0, sources=shared)
+        rt.submit(300, 20.0, at=0.5, seed=1, sources=shared)
+        return rt, rt.run()
+
+    _, uncached = drive(None)
+    rt, cached = drive(ResultCache(capacity=4096))
+    trailing = cached.records[1]
+    assert trailing.cache_hits + trailing.late_hits > 0
+    assert trailing.late_hits > 0 or trailing.cache_hits == 300
+    assert cached.core_seconds < uncached.core_seconds
+    assert cached.completed == 2
+    assert rt.model.hit_rate > 0.0                # the model saw the hits
+
+
+def test_warm_model_admits_otherwise_rejected_job():
+    """Admission sizes grants from the discounted estimate: a pool that
+    rejects the job cold admits it once the model has learned a high hit
+    rate (clamped, so >= 10% of the work is still provisioned for)."""
+    cfg = ServingConfig(scaling_factor=0.9, degrade=False, extend=False,
+                        sample_size=4)
+
+    def drive(model):
+        rt = ServingRuntime(CorePool.of(4), _factory(mean=0.1, cv=0.0),
+                            cfg, cost_model=model)
+        job = rt.submit(100, 1.2, at=0.0, seed=0)
+        rt.run()
+        return job
+
+    assert drive(None).state is JobState.REJECTED   # need ~9 cores, have 4
+    warm = CacheAwareCostModel()
+    warm.observe(9, 10)                             # learned 90% hit rate
+    job = drive(warm)
+    assert job.state is not JobState.REJECTED
+    assert any("admitted" in line for line in job.log)
+
+
+# ---------------------------------------------------------------------------
+# satellite: admission-time mesh shaping
+
+
+def test_grant_arrives_and_reshapes_as_mesh():
+    """Every accepted grant is routed through CorePool.mesh_plan; a
+    grown/shrunk grant reshapes its devices x lanes mesh."""
+    rt = ServingRuntime(CorePool.of(8, lanes_per_device=8), _factory(),
+                        ServingConfig(scaling_factor=0.7))
+    job = rt.submit(500, 12.0, at=0.0, seed=3)
+    report = rt.run()
+    rec = report.records[0]
+    assert rec.state == "done"
+    mesh_lines = [line for line in job.log if "mesh" in line]
+    assert len(mesh_lines) >= 2, "resized grant never reshaped its mesh"
+    shapes = {line.split("mesh ")[1].split(" ")[0] for line in mesh_lines}
+    assert len(shapes) >= 2, f"mesh shape never changed: {shapes}"
+    assert job.mesh is not None
+    assert rec.mesh_devices == job.mesh.devices
+    assert rec.mesh_lanes == job.mesh.lanes
+    assert job.mesh.cores_granted >= 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: preprocessing-stage core reservation
+
+
+def test_pool_reserve_unreserve_arithmetic():
+    pool = CorePool.of(4)
+    assert pool.reserve(0, 3)
+    assert pool.free == 1 and pool.reserved == 3
+    assert not pool.reserve(1, 2)                 # only 1 free
+    with pytest.raises(ValueError):
+        pool.reserve(0, 1)                        # duplicate holder
+    assert pool.acquire(1, 1)
+    assert pool.free == 0
+    assert pool.unreserve(0) == 3
+    assert pool.free == 3
+    assert pool.unreserve(0) == 0                 # idempotent
+
+
+def test_preprocess_cores_occupy_pool():
+    """Alg. 2's c sampling cores are billed against the pool during the
+    preprocess window (ROADMAP follow-up): a concurrent arrival that would
+    have fit an idle pool queues behind the reservation."""
+    cfg = ServingConfig(scaling_factor=0.9, preprocess_cores=3,
+                        sample_size=6)
+    rt = ServingRuntime(CorePool.of(4), _factory(mean=0.1, cv=0.0), cfg)
+    a = rt.submit(40, 30.0, at=0.0, seed=0)
+    b = rt.submit(40, 30.0, at=0.05, seed=1)      # inside a's t_pre window
+    report = rt.run()
+    assert report.completed == 2
+    assert any("queued" in line for line in b.log), \
+        "reserved preprocessing cores were invisible to the second arrival"
+    assert b.completion > a.arrival
+    assert rt.pool.reserved == 0                  # everything released
+    # and the c-core preprocess time is billed in core-seconds
+    assert a.core_seconds >= 3 * a.t_pre
+
+
+def test_preprocess_reservation_released_on_rejection():
+    """A job rejected at admission still held (and then releases) its
+    preprocessing cores — waiters behind it make progress."""
+    cfg = ServingConfig(scaling_factor=0.9, degrade=False, extend=False)
+    rt = ServingRuntime(CorePool.of(1), _factory(mean=0.01, cv=0.1), cfg)
+    a = rt.submit(40, 30.0, at=0.0, seed=0)
+    b = rt.submit(200, 1e-4, at=0.0, seed=1)      # hopeless deadline
+    c = rt.submit(40, 30.0, at=0.0, seed=2)
+    report = rt.run()
+    assert a.state is JobState.DONE
+    assert b.state is JobState.REJECTED
+    assert c.state is JobState.DONE
+    assert rt.pool.reserved == 0
+    assert report.completed == 2
+
+
+# ---------------------------------------------------------------------------
+# satellite: trace capture -> replay round trip
+
+
+def test_trace_roundtrip_identical_admission_decisions():
+    rt1 = ServingRuntime(CorePool.of(32), _factory(),
+                         ServingConfig(scaling_factor=0.9))
+    rt1.submit_poisson(8, rate=0.7, queries=(100, 250), deadline=(5.0, 9.0),
+                       seed=11)
+    rep1 = rt1.run()
+    assert rep1.completed == len(rep1.records)    # all complete -> recordable
+    records = rt1.trace_records()
+    rt2 = ServingRuntime(CorePool.of(32), _factory(),
+                         ServingConfig(scaling_factor=0.9))
+    rt2.submit_trace(records)
+    rep2 = rt2.run()
+    assert rep1 == rep2                           # identical decisions
+    for j1, j2 in zip(rt1.jobs, rt2.jobs):
+        assert j1.log == j2.log                   # ...line for line
+
+
+def test_trace_records_preserve_sources_and_skip_unfinished():
+    rt = ServingRuntime(CorePool.of(8), _factory(),
+                        ServingConfig(scaling_factor=0.9, degrade=False,
+                                      extend=False))
+    rt.submit(20, 10.0, at=0.0, seed=0, sources=list(range(20)))
+    rt.submit(500, 1e-4, at=0.1, seed=1)          # rejected -> not recorded
+    rt.run()
+    records = rt.trace_records()
+    assert len(records) == 1
+    assert records[0]["sources"] == list(range(20))
+    assert json.loads(json.dumps(records)) == records   # JSON-serialisable
+
+
+def test_serve_cli_record_and_replay(tmp_path):
+    from repro.launch import serve
+
+    path = tmp_path / "trace.json"
+    serve.main(["--workload", "lm-decode", "--daemon", "--num-jobs", "4",
+                "--arrival-rate", "0.8", "--queries", "60", "--deadline",
+                "8", "--max-cores", "16", "--record-trace", str(path)])
+    rows = json.loads(path.read_text())
+    assert len(rows) == 4 and all("at" in r and "deadline" in r for r in rows)
+    serve.main(["--workload", "lm-decode", "--daemon", "--trace", str(path),
+                "--max-cores", "16"])

@@ -32,10 +32,14 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 # the failure-injection run completing via readmission (no job loss)
 python -m benchmarks.serving_sim --check
 
+# warm-cache smoke (DESIGN.md §11): cold leg bit-for-bit equal to the
+# uncached serving path, warm leg >= 30% core-hours reduction at 100% SLA
+python -m benchmarks.index_cache --check
+
 trap 'rm -f BENCH_kernels.committed.json BENCH_kernels.fresh1.json \
             BENCH_kernels.fresh2.json BENCH_kernels.merged.json' EXIT
-python -m benchmarks.run --only kernels,fora_hot,serving --json BENCH_kernels.fresh1.json
-python -m benchmarks.run --only kernels,fora_hot,serving --json BENCH_kernels.fresh2.json
+python -m benchmarks.run --only kernels,fora_hot,serving,index --json BENCH_kernels.fresh1.json
+python -m benchmarks.run --only kernels,fora_hot,serving,index --json BENCH_kernels.fresh2.json
 
 baseline=BENCH_kernels.json
 if git show HEAD:BENCH_kernels.json > BENCH_kernels.committed.json 2>/dev/null
