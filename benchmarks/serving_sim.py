@@ -12,22 +12,33 @@ stays gateable (tools/bench_compare.py skips rows with baseline <= 0):
 * ``serving/core_hours_vs_lemma2_pct`` — 100 * runtime/static core-seconds
 * ``serving/failure_unfinished_p1`` — unfinished jobs in the failure run + 1
 * ``serving/sim_wall_us``           — wall time of one simulation drive
+* ``serving/chaos_miss_rate_pct_p1``   — miss rate under the chaos leg + 1
+* ``serving/chaos_core_hours_vs_clean_pct`` — chaos core-s / failure-free
+  anchor core-s (same workload, no faults) x 100 — what the faults cost
+* ``serving/chaos_unfinished_p1``   — unfinished jobs under chaos + 1
 
 ``--check`` mode (the CI smoke leg) re-runs the same seeded scenario twice
 and asserts: deterministic replay, >= 95% deadline hit-rate, total
 core-hours strictly below static per-job Lemma-2 provisioning, and the
 failure-injection run completing every job via readmission (no job loss).
+``--chaos`` mode (DESIGN.md §12) drives the WAL-attached chaos scenario —
+device failure + lane slowdowns + process crashes with recovery — and
+asserts: deterministic replay, crash-transparency (records bit-identical
+to the same chaos scenario run without crashes), every job completed,
+at least one recovery and at least one straggler re-issue.
 
-    PYTHONPATH=src python -m benchmarks.serving_sim [--check]
+    PYTHONPATH=src python -m benchmarks.serving_sim [--check] [--chaos]
 """
 
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
+from repro.ft.chaos import ChaosSchedule, ChaosSpec, drive_with_crashes
 from repro.serving import (CorePool, ServingConfig, ServingReport,
-                           ServingRuntime, SimJobExecutor)
+                           ServingRuntime, SimJobExecutor, WriteAheadLog)
 
 from .common import emit
 
@@ -45,6 +56,18 @@ FAIL_RATE = 0.8
 FAIL_QUERIES = (250, 500)
 FAIL_DEADLINE = (5.0, 8.0)
 FAILURES = {4.0: [0, 1, 2, 3, 4, 5, 6, 7], 9.0: [8]}
+# chaos scenario (DESIGN.md §12): one device failure + two lane slowdowns
+# + two process crashes, with spares so straggler re-issue can fire
+CHAOS_SEED = 7
+CHAOS_POOL = 32
+CHAOS_JOBS = 12
+CHAOS_RATE = 0.7
+CHAOS_QUERIES = (120, 300)
+CHAOS_DEADLINE = (6.0, 10.0)
+CHAOS_SNAPSHOT_EVERY = 16
+CHAOS_SPARES = 0.1
+CHAOS_SPEC = "seed=7,failures=1,slowdowns=2,horizon=18,slow_factor=2.5"
+CHAOS_CRASH_AT = (25, 60)
 
 
 def _drive(pool_cores: int, *, failures: dict | None = None,
@@ -68,6 +91,56 @@ def _drive_failure_run() -> ServingReport:
                   deadline=FAIL_DEADLINE)
 
 
+def _chaos_factory(job_id: int, nq: int, sd: int) -> SimJobExecutor:
+    return SimJobExecutor(mean=0.05, cv=0.3, seed=sd)
+
+
+def _chaos_runtime(wal_dir: str | None) -> ServingRuntime:
+    """The chaos workload: spares so straggler re-issue can fire, WAL
+    attached when a directory is given (crash legs need one; the clean
+    anchor passes None)."""
+    rt = ServingRuntime(
+        CorePool.of(CHAOS_POOL, spares_fraction=CHAOS_SPARES),
+        _chaos_factory,
+        ServingConfig(scaling_factor=0.9, sample_frac=0.05,
+                      stragglers=True))
+    if wal_dir is not None:
+        rt.attach_wal(WriteAheadLog(wal_dir, fsync=False),
+                      snapshot_every=CHAOS_SNAPSHOT_EVERY)
+    rt.submit_poisson(CHAOS_JOBS, CHAOS_RATE, queries=CHAOS_QUERIES,
+                      deadline=CHAOS_DEADLINE, seed=CHAOS_SEED)
+    sched = ChaosSchedule.from_spec(ChaosSpec.parse(CHAOS_SPEC), CHAOS_POOL)
+    sched.apply(rt)
+    return rt
+
+
+def _drive_chaos() -> tuple[ServingReport, list, ServingRuntime]:
+    """Faults + crashes + recovery; fsync off — the benchmark measures the
+    scheduler, not the disk."""
+    with tempfile.TemporaryDirectory() as wal_dir:
+        rt = _chaos_runtime(wal_dir)
+        return drive_with_crashes(rt, wal_dir, _chaos_factory,
+                                  CHAOS_CRASH_AT, fsync=False)
+
+
+def _drive_chaos_uncrashed() -> ServingReport:
+    """Same workload and fault schedule, no process crashes — the report
+    the crashed-and-recovered run must reproduce bit-for-bit."""
+    return _chaos_runtime(None).run()
+
+
+def _drive_chaos_anchor() -> ServingReport:
+    """Same workload, NO faults at all — the core-hours denominator."""
+    rt = ServingRuntime(
+        CorePool.of(CHAOS_POOL, spares_fraction=CHAOS_SPARES),
+        _chaos_factory,
+        ServingConfig(scaling_factor=0.9, sample_frac=0.05,
+                      stragglers=True))
+    rt.submit_poisson(CHAOS_JOBS, CHAOS_RATE, queries=CHAOS_QUERIES,
+                      deadline=CHAOS_DEADLINE, seed=CHAOS_SEED)
+    return rt.run()
+
+
 def run() -> None:
     t0 = time.perf_counter()
     rep = _drive(POOL_CORES)
@@ -89,6 +162,20 @@ def run() -> None:
     emit("serving/failure_unfinished_p1", unfinished + 1.0,
          f"done={frep.completed};extended={frep.extended};"
          f"degraded={frep.degraded}")
+
+    crep, infos, _ = _drive_chaos()
+    anchor = _drive_chaos_anchor()
+    chaos_miss = 100.0 * (1.0 - crep.hit_rate)
+    chaos_unfinished = len(crep.records) - crep.completed
+    emit("serving/chaos_miss_rate_pct_p1", chaos_miss + 1.0,
+         f"hit_rate={crep.hit_rate:.3f};recoveries={len(infos)}")
+    emit("serving/chaos_core_hours_vs_clean_pct",
+         100.0 * crep.core_seconds / anchor.core_seconds,
+         f"chaos_core_s={crep.core_seconds:.1f};"
+         f"clean_core_s={anchor.core_seconds:.1f}")
+    emit("serving/chaos_unfinished_p1", chaos_unfinished + 1.0,
+         f"done={crep.completed};extended={crep.extended};"
+         f"degraded={crep.degraded}")
 
 
 def check() -> None:
@@ -114,12 +201,44 @@ def check() -> None:
           f"(extended={frep.extended}, degraded={frep.degraded})")
 
 
+def check_chaos() -> None:
+    """CI chaos smoke (ISSUE 6): crash-transparency + no job loss."""
+    crep, infos, rt = _drive_chaos()
+    crep2, infos2, _ = _drive_chaos()
+    assert crep == crep2 and len(infos) == len(infos2), \
+        "chaos scenario is not replay-deterministic"
+    assert len(infos) >= 1, (
+        f"crash points {CHAOS_CRASH_AT} never fired — trace drained "
+        f"before event {min(CHAOS_CRASH_AT)}; retune the scenario")
+    uncrashed = _drive_chaos_uncrashed()
+    assert crep.records == uncrashed.records, (
+        "crashed-and-recovered chaos run diverged from the same scenario "
+        "without crashes — recovery is not transparent")
+    assert crep.completed == len(crep.records), (
+        f"chaos run lost {len(crep.records) - crep.completed} accepted "
+        "job(s) — the durability contract is broken")
+    n_straggler = len(rt.controller.straggler_events)
+    assert n_straggler >= 1, (
+        "chaos slowdowns never triggered a straggler re-issue — "
+        "mitigation is not wired")
+    print(f"serving_sim --chaos OK: done={crep.completed}/"
+          f"{len(crep.records)} recoveries={len(infos)} "
+          f"straggler_reissues={n_straggler} "
+          f"hit_rate={crep.hit_rate:.3f}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
                     help="assert the CI smoke criteria instead of emitting "
                          "benchmark rows")
-    if ap.parse_args().check:
+    ap.add_argument("--chaos", action="store_true",
+                    help="assert the chaos-harness smoke criteria "
+                         "(crash-transparency, no job loss)")
+    args = ap.parse_args()
+    if args.check:
         check()
+    elif args.chaos:
+        check_chaos()
     else:
         run()

@@ -33,13 +33,25 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
+def _clean_stale_tmp(root: Path) -> int:
+    """Remove leftover ``.tmp_step_*`` dirs from killed writers. A tmp dir
+    only exists while a save is in flight; any found at the start of a
+    save/restore belongs to a writer that died mid-write and would otherwise
+    poison the directory forever (the atomic rename never happened)."""
+    removed = 0
+    if root.exists():
+        for stale in root.glob(".tmp_step_*"):
+            shutil.rmtree(stale, ignore_errors=True)
+            removed += 1
+    return removed
+
+
 def save(path: str | Path, step: int, tree: Any, *, keep: int = 3) -> Path:
     """Blocking save. Returns the final checkpoint dir."""
     root = Path(path)
     final = root / f"step_{step:08d}"
     tmp = root / f".tmp_step_{step:08d}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
+    _clean_stale_tmp(root)
     tmp.mkdir(parents=True)
 
     leaves, treedef = _flatten(tree)
@@ -75,6 +87,7 @@ def restore(path: str | Path, step: int | None, like: Any,
     """Load a checkpoint into the structure of ``like`` (validating shapes),
     placing leaves under ``shardings`` when given (elastic re-placement)."""
     root = Path(path)
+    _clean_stale_tmp(root)
     if step is None:
         step = latest_step(root)
         if step is None:
@@ -99,6 +112,36 @@ def restore(path: str | Path, step: int | None, like: Any,
             placed = placed.astype(ref.dtype)
         out.append(placed)
     return step, jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_list(path: str | Path, step: int | None = None
+                 ) -> tuple[int, list[np.ndarray]]:
+    """Load a checkpoint's leaves as a flat host-array list, structure-free.
+
+    Unlike :func:`restore` this needs no ``like`` tree — the manifest alone
+    drives the load (shape check + ml_dtypes cast-back per logical dtype).
+    The serving WAL snapshots use it: their leaf count varies with the live
+    job set, so no static template exists at recovery time.
+    """
+    root = Path(path)
+    _clean_stale_tmp(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = root / f"step_{step:08d}"
+    meta = json.loads((d / MANIFEST).read_text())
+    out: list[np.ndarray] = []
+    for i, leaf_meta in enumerate(meta["leaves"]):
+        arr = np.load(d / f"leaf_{i:05d}.npy")
+        if tuple(arr.shape) != tuple(leaf_meta["shape"]):
+            raise ValueError(f"leaf {i}: checkpoint shape {arr.shape} != "
+                             f"manifest shape {tuple(leaf_meta['shape'])}")
+        logical = leaf_meta["dtype"]
+        if logical in _NUMPY_SAFE and str(arr.dtype) != logical:
+            arr = arr.astype(logical)
+        out.append(arr)
+    return step, out
 
 
 def _gc(root: Path, keep: int) -> None:

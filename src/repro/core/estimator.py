@@ -150,6 +150,15 @@ class SimulatedTimeSource(TimeSource):
         draw = self._rng.lognormal(mean=mu, sigma=np.sqrt(sigma2), size=n)
         return RuntimeStats(self.base + draw)
 
+    def state_dict(self) -> dict:
+        """Exact generator position (bit_generator state is a JSON-able dict
+        of arbitrary-precision ints) — the WAL snapshot path needs the next
+        draw after a restore to equal the next draw of the uncrashed run."""
+        return {"rng": self._rng.bit_generator.state}
+
+    def load_state(self, state: dict) -> None:
+        self._rng.bit_generator.state = state["rng"]
+
 
 @dataclass
 class CacheAwareCostModel:

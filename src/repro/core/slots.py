@@ -225,6 +225,13 @@ class SlotStepper:
         self.executed_slots: list[tuple[int, ...]] = []
         self._makespan = 0.0
         self.steps = 0
+        # optional slot-boundary mitigation hook: times -> effective times.
+        # Speculative re-issue of straggling lanes on pool spares replaces a
+        # lane's time with min(original, re-issue) — first-result-wins, and
+        # answers are invariant because a re-issued chunk re-runs under the
+        # same query-derived seed. None (or an unchanged return) leaves the
+        # step bit-identical to the unhooked path.
+        self.straggler: Callable[[np.ndarray], np.ndarray] | None = None
 
     @classmethod
     def from_queries(cls, query_ids: Sequence[int], ell: int, k: int,
@@ -262,6 +269,13 @@ class SlotStepper:
         if stats.n != len(slot):
             raise ValueError(
                 f"executor returned {stats.n} times for {len(slot)} queries")
+        if self.straggler is not None:
+            eff = np.asarray(self.straggler(stats.times.copy()),
+                             dtype=np.float64)
+            if eff.shape != stats.times.shape:
+                raise ValueError("straggler hook must preserve lane count")
+            if not np.array_equal(eff, stats.times):
+                stats = RuntimeStats(times=eff)
         for (lane, qid), t in zip(cells, stats.times):
             self._busy[lane] += t
             self._finish[lane] += t
@@ -292,6 +306,46 @@ class SlotStepper:
                 self._finish = np.concatenate([self._finish, np.zeros(pad)])
             # lanes entering service (fresh or re-granted) start at "now"
             self._finish[old:k] = self._makespan
+
+    # -- durability ----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Everything but the executor and the straggler hook (both are
+        runtime wiring the recovery path re-attaches)."""
+        return {
+            "plan": {"slots": [list(s) for s in self.plan.slots],
+                     "k": self.plan.k, "ell": self.plan.ell},
+            "queues": [list(q) for q in self.queues.queues],
+            "busy": self._busy,
+            "finish": self._finish,
+            "per_query_times": [[qid, t]
+                                for qid, t in self.per_query_times.items()],
+            "executed_slots": [list(s) for s in self.executed_slots],
+            "makespan": self._makespan,
+            "steps": self.steps,
+        }
+
+    @classmethod
+    def from_state(cls, state: dict, executor: Executor) -> "SlotStepper":
+        plan = SlotPlan(slots=tuple(tuple(int(q) for q in s)
+                                    for s in state["plan"]["slots"]),
+                        k=int(state["plan"]["k"]),
+                        ell=int(state["plan"]["ell"]))
+        self = cls.__new__(cls)
+        self.plan = plan
+        self.executor = executor
+        self.queues = WorkQueues.__new__(WorkQueues)
+        self.queues.queues = [deque(int(q) for q in qs)
+                              for qs in state["queues"]]
+        self._busy = np.asarray(state["busy"], dtype=np.float64).copy()
+        self._finish = np.asarray(state["finish"], dtype=np.float64).copy()
+        self.per_query_times = {int(qid): float(t)
+                                for qid, t in state["per_query_times"]}
+        self.executed_slots = [tuple(int(q) for q in s)
+                               for s in state["executed_slots"]]
+        self._makespan = float(state["makespan"])
+        self.steps = int(state["steps"])
+        self.straggler = None
+        return self
 
     def result(self) -> SlotExecution:
         """The realized execution. For an un-resized static drive this is

@@ -49,6 +49,7 @@ class ElasticController:
     heartbeat: HeartbeatMonitor | None = None
     on_rescale: Callable[[int], None] | None = None
     rescale_events: list[dict] = field(default_factory=list)
+    straggler_events: list[dict] = field(default_factory=list)
 
     def tick(self, step: int, stats: RuntimeStats | None = None,
              queries_left: int = 0, deadline_left: float = 0.0) -> bool:
@@ -79,6 +80,39 @@ class ElasticController:
         if self.on_rescale is not None:
             self.on_rescale(len(self.allocator.healthy))
         return True
+
+    def poll_heartbeat(self) -> list[int]:
+        """Heartbeat-only sweep — the serving loop's per-event liveness
+        check. Unlike :meth:`tick` this never consults the injected
+        schedule (its keys are scheduler ordinals, not serving events), so
+        a runtime polling every event cannot double-fire injections.
+        Returns the devices newly declared dead."""
+        if self.heartbeat is None:
+            return []
+        silent = [i for i in self.heartbeat.dead()
+                  if i not in self.allocator.failed]
+        if not silent:
+            return []
+        for idx in silent:
+            self.allocator.mark_failed(idx)
+        self.rescale_events.append(
+            {"step": None, "failed": list(silent),
+             "missed_heartbeat": list(silent),
+             "healthy": len(self.allocator.healthy),
+             "time": time.time()})
+        if self.on_rescale is not None:
+            self.on_rescale(len(self.allocator.healthy))
+        return silent
+
+    def note_stragglers(self, step: int, job_id: int, lanes: list[int],
+                        makespan_before: float,
+                        makespan_after: float) -> None:
+        """Record one slot-boundary speculative re-issue (observability —
+        the chaos bench asserts these fire under injected slowdowns)."""
+        self.straggler_events.append(
+            {"step": step, "job": job_id, "lanes": list(lanes),
+             "makespan_before": float(makespan_before),
+             "makespan_after": float(makespan_after)})
 
 
 def run_with_straggler_mitigation(

@@ -118,26 +118,9 @@ def serve_sim(args) -> None:
     _print_mesh_plan(res.cores, args.max_lanes)
 
 
-def serve_daemon(args) -> None:
-    """Continuous serving runtime: Poisson or trace-replayed arrivals over a
-    shared core pool with mid-flight replanning (DESIGN.md §10), optionally
-    cache-aware (DESIGN.md §11): ``--cache-size`` attaches a ResultCache
-    consulted before admission, ``--index-budget`` pre-draws a WalkIndex per
-    PPR executor, ``--record-trace`` captures the completed jobs in the
-    format ``--trace`` replays."""
-    from ..serving import (CorePool, ServingConfig, ServingRuntime,
-                           SimJobExecutor)
-
-    cfg = ServingConfig(scaling_factor=args.d, sample_frac=args.sample_frac,
-                        graph_version=args.graph_version)
-    pool = CorePool.of(args.max_cores,
-                       lanes_per_device=max(1, args.max_lanes or 1))
-    cache = None
-    if args.cache_size > 0:
-        from ..index import ResultCache
-
-        cache = ResultCache(capacity=args.cache_size,
-                            ttl=args.cache_ttl or None)
+def _daemon_factory(args):
+    """Per-job executor factory for the daemon (PPR or simulated)."""
+    from ..serving import SimJobExecutor
 
     if args.workload == "ppr":
         import jax
@@ -165,20 +148,116 @@ def serve_daemon(args) -> None:
     else:
         def factory(job_id: int, num_queries: int, seed: int):
             return SimJobExecutor(mean=args.step_time, cv=args.cv, seed=seed)
+    return factory
 
-    rt = ServingRuntime(pool, factory, cfg, cache=cache)
-    if args.trace:
-        with open(args.trace) as f:
-            jobs = rt.submit_trace(json.load(f))
-        src = f"trace {args.trace} ({len(jobs)} jobs)"
+
+def _daemon_heartbeat(args, num_devices: int):
+    """A WALL-clock HeartbeatMonitor when --heartbeat-timeout > 0 (the
+    daemon's liveness path; the virtual-time simulation never needs one —
+    tests inject their own clock)."""
+    if args.heartbeat_timeout <= 0:
+        return None
+    import time
+
+    from ..ft.elastic import HeartbeatMonitor
+    return HeartbeatMonitor(num_devices, args.heartbeat_timeout,
+                            clock=time.monotonic)
+
+
+def _build_daemon_runtime(args):
+    """Assemble pool/config/cache/controller (+ optional WAL) into a
+    ServingRuntime; returns (runtime, factory, heartbeat)."""
+    from ..ft.elastic import ElasticController
+    from ..serving import (CorePool, ServingConfig, ServingRuntime,
+                           WriteAheadLog)
+
+    cfg = ServingConfig(scaling_factor=args.d, sample_frac=args.sample_frac,
+                        graph_version=args.graph_version,
+                        stragglers=args.stragglers)
+    pool = CorePool.of(args.max_cores,
+                       lanes_per_device=max(1, args.max_lanes or 1),
+                       spares_fraction=args.spares_fraction)
+    cache = None
+    if args.cache_size > 0:
+        from ..index import ResultCache
+
+        cache = ResultCache(capacity=args.cache_size,
+                            ttl=args.cache_ttl or None)
+    factory = _daemon_factory(args)
+    heartbeat = _daemon_heartbeat(args, args.max_cores)
+    controller = ElasticController(allocator=pool.allocator,
+                                   heartbeat=heartbeat)
+    rt = ServingRuntime(pool, factory, cfg, controller=controller,
+                        cache=cache)
+    if args.wal_dir:
+        rt.attach_wal(WriteAheadLog(args.wal_dir),
+                      snapshot_every=args.snapshot_every)
+    return rt, factory, heartbeat
+
+
+def serve_daemon(args) -> None:
+    """Continuous serving runtime: Poisson or trace-replayed arrivals over a
+    shared core pool with mid-flight replanning (DESIGN.md §10), optionally
+    cache-aware (DESIGN.md §11): ``--cache-size`` attaches a ResultCache
+    consulted before admission, ``--index-budget`` pre-draws a WalkIndex per
+    PPR executor, ``--record-trace`` captures the completed jobs in the
+    format ``--trace`` replays. Durability (DESIGN.md §12): ``--wal-dir``
+    logs every input and event (``--snapshot-every`` full-state
+    checkpoints), ``--recover`` resumes a crashed daemon from that log, and
+    ``--chaos SPEC`` torments the run with seeded failures/slowdowns/
+    crashes."""
+    from ..serving import ServingRuntime
+
+    if args.recover:
+        if not args.wal_dir:
+            raise SystemExit("--recover requires --wal-dir")
+        factory = _daemon_factory(args)
+        heartbeat = _daemon_heartbeat(args, args.max_cores)
+        rt, info = ServingRuntime.recover(args.wal_dir, factory,
+                                          heartbeat=heartbeat)
+        src = (f"recovered from {args.wal_dir} (snapshot step "
+               f"{info.snapshot_step}, {info.replayed_events} of "
+               f"{info.logged_events} logged events to replay)")
+        report = rt.run()
+        print(f"daemon workload={args.workload} {src}")
+        print(f"  replayed events    : {info.replayed_events}")
+        print(f"  re-billed preprocess core-seconds: "
+              f"{rt.replay_pre_core_s:.3f}")
     else:
-        rt.submit_poisson(args.num_jobs, args.arrival_rate,
-                          queries=args.queries, deadline=args.deadline,
-                          seed=args.seed)
-        src = (f"poisson rate={args.arrival_rate}/s x {args.num_jobs} jobs "
-               f"(X={args.queries}, T={args.deadline}s)")
-    report = rt.run()
-    print(f"daemon workload={args.workload} {src}")
+        rt, factory, heartbeat = _build_daemon_runtime(args)
+        if args.trace:
+            with open(args.trace) as f:
+                jobs = rt.submit_trace(json.load(f))
+            src = f"trace {args.trace} ({len(jobs)} jobs)"
+        else:
+            rt.submit_poisson(args.num_jobs, args.arrival_rate,
+                              queries=args.queries, deadline=args.deadline,
+                              seed=args.seed)
+            src = (f"poisson rate={args.arrival_rate}/s x {args.num_jobs} "
+                   f"jobs (X={args.queries}, T={args.deadline}s)")
+        if args.chaos:
+            from ..ft.chaos import ChaosSchedule, ChaosSpec, drive_with_crashes
+
+            spec = ChaosSpec.parse(args.chaos)
+            schedule = ChaosSchedule.from_spec(spec, args.max_cores)
+            schedule.apply(rt)
+            src += (f" chaos[{args.chaos}]")
+            if schedule.crashes:
+                if not args.wal_dir:
+                    raise SystemExit("--chaos with crashes requires "
+                                     "--wal-dir")
+                report, infos, rt = drive_with_crashes(
+                    rt, args.wal_dir, factory, schedule.crashes,
+                    heartbeat=heartbeat)
+                src += f" ({len(infos)} recoveries)"
+            else:
+                report = rt.run()
+        else:
+            report = rt.run()
+        print(f"daemon workload={args.workload} {src}")
+    # re-read off the (possibly recovered) runtime — a chaos crash swaps
+    # the runtime object, pool and cache included
+    pool, cache = rt.pool, rt.cache
     print(f"  pool               : {pool.total} cores "
           f"({pool.allocator.capacity} devices x {pool.lanes_per_device} "
           f"lanes)")
@@ -200,7 +279,7 @@ def serve_daemon(args) -> None:
               f"{args.record_trace}")
 
 
-def main(argv: list[str] | None = None) -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=["ppr", "lm-decode", "din-serve"],
                     default="ppr")
@@ -266,7 +345,41 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--graph-version", type=int, default=0,
                     help="structure snapshot tag for cache keys — bump on "
                          "graph updates to cold-start the cache")
-    args = ap.parse_args(argv)
+    ap.add_argument("--wal-dir", default="",
+                    help="daemon: write-ahead log directory (DESIGN.md "
+                         "§12) — every input and event is logged so a "
+                         "crashed daemon recovers without losing an "
+                         "accepted job")
+    ap.add_argument("--snapshot-every", type=int, default=50,
+                    help="daemon: full-state snapshot cadence in processed "
+                         "events (0 = log-only; recovery then replays from "
+                         "event zero)")
+    ap.add_argument("--recover", action="store_true",
+                    help="daemon: resume from --wal-dir instead of "
+                         "submitting new work; prints the replayed-event "
+                         "count and the re-billed preprocess core-seconds")
+    ap.add_argument("--chaos", default="", metavar="SPEC",
+                    help="daemon: seeded chaos schedule, e.g. "
+                         "'seed=7,failures=1,slowdowns=2,crashes=2,"
+                         "horizon=18' — device failures, lane slowdowns "
+                         "and process crashes (crashes need --wal-dir)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=0.0,
+                    help="daemon: declare a device failed after this many "
+                         "WALL-clock seconds without a heartbeat (0 = no "
+                         "heartbeat monitor)")
+    ap.add_argument("--stragglers", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="daemon: speculative re-issue of straggling lanes "
+                         "on pool spares at slot boundaries (needs "
+                         "--spares-fraction > 0 to ever fire)")
+    ap.add_argument("--spares-fraction", type=float, default=0.0,
+                    help="daemon: fraction of healthy devices held back "
+                         "as re-issue spares (paper's fluctuation margin)")
+    return ap
+
+
+def main(argv: list[str] | None = None) -> None:
+    args = build_parser().parse_args(argv)
     if args.platform is not None:
         import jax
 

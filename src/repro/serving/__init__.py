@@ -7,14 +7,17 @@ Public API:
     ServingRuntime                   the continuous-arrivals event loop
     SimJobExecutor                   seeded simulated per-job executor
     run_single_job                   one-shot path (dna_real, bit-for-bit)
+    WriteAheadLog, RecoveryInfo      durable serving state (DESIGN.md §12)
 """
 
 from .job import Job, JobRecord, JobState
 from .pool import CorePool
 from .runtime import (ServingConfig, ServingReport, ServingRuntime,
                       SimJobExecutor, run_single_job)
+from .wal import RecoveryInfo, WriteAheadLog
 
 __all__ = [
-    "CorePool", "Job", "JobRecord", "JobState", "ServingConfig",
-    "ServingReport", "ServingRuntime", "SimJobExecutor", "run_single_job",
+    "CorePool", "Job", "JobRecord", "JobState", "RecoveryInfo",
+    "ServingConfig", "ServingReport", "ServingRuntime", "SimJobExecutor",
+    "WriteAheadLog", "run_single_job",
 ]

@@ -63,6 +63,9 @@ class Job:
     late_hits: int = 0                     # pending queries answered mid-job
     effective_queries: int = 0             # misses admission actually sized
     mesh: Any = None                       # MeshPlan of the current grant
+    reissue_rng: Any = None                # per-job straggler re-issue stream
+    #                                        (seeded off job.seed; snapshotted
+    #                                        so recovery replays identically)
     _accounted_to: float = 0.0             # core-seconds integration cursor
     log: list[str] = field(default_factory=list)
 

@@ -35,12 +35,15 @@ bit-for-bit (regression-tested), so paper-faithful results are unchanged.
 from __future__ import annotations
 
 import heapq
+from collections import deque
 from collections.abc import Sequence
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
+from pathlib import Path
 from typing import Any, Callable
 
 import numpy as np
 
+from ..core.allocator import MeshPlan, StragglerMonitor
 from ..core.bounds import (BoundReport, InfeasibleDeadline,
                            lemma1_lower_bound, minimal_feasible_deadline,
                            required_cores)
@@ -49,10 +52,12 @@ from ..core.estimator import (CacheAwareCostModel, RuntimeStats,
                               SimulatedTimeSource)
 from ..core.sampling import fraction_sample_size
 from ..core.slots import SlotStepper, num_slots, queries_per_slot
-from ..ft.elastic import ElasticController, FailureInjector
+from ..ft.elastic import ElasticController, FailureInjector, HeartbeatMonitor
 from ..index import ResultCache
+from ..index.result_cache import CacheEntry, CacheStats
 from .job import Job, JobRecord, JobState
 from .pool import CorePool
+from .wal import RecoveryInfo, WriteAheadLog, pack_state, unpack_state
 
 
 @dataclass(frozen=True)
@@ -78,6 +83,10 @@ class ServingConfig:
     #                                    for MODELLED admission times; leave 0
     #                                    when the measured sample already ran
     #                                    index-backed (no double counting)
+    stragglers: bool = False           # slot-boundary speculative re-issue of
+    #                                    straggling lanes on pool spares
+    #                                    (DESIGN.md §12; needs spares_fraction
+    #                                    > 0 on the pool to ever fire)
 
     def __post_init__(self) -> None:
         if not 0.0 < self.scaling_factor <= 1.0:
@@ -177,6 +186,16 @@ class SimJobExecutor:
             raise ValueError("factor must be in (0,1)")
         self.scale *= factor
 
+    def state_dict(self) -> dict:
+        """Exact mid-job position (RNG + degradation scale) for WAL
+        snapshots — the next simulated draw after a restore must equal the
+        uncrashed run's next draw."""
+        return {"src": self._src.state_dict(), "scale": self.scale}
+
+    def load_state(self, state: dict) -> None:
+        self._src.load_state(state["src"])
+        self.scale = float(state["scale"])
+
 
 # executor_factory(job_id, num_queries, seed) -> executor for that job
 ExecutorFactory = Callable[[int, int, int], Any]
@@ -219,6 +238,55 @@ class ServingRuntime:
         self._grant_peak: dict[int, int] = {}
         self._lemma2_cs: dict[int, float] = {}
         self._waiting: list[Job] = []
+        # -- durability (DESIGN.md §12) --
+        self.wal: WriteAheadLog | None = None
+        self._snapshot_every = 0
+        self.events_processed = 0          # total heap events handled
+        self._replay_expect: deque[dict] = deque()   # logged events to verify
+        self._in_replay = False            # current event is a replayed one
+        self._mute_wal = False             # recovery rebuild: don't re-log
+        self.replay_pre_core_s = 0.0       # preprocess core-s re-billed by
+        #                                    the last recovery's replay
+
+    # -- durability (DESIGN.md §12) ----------------------------------------
+    def attach_wal(self, wal: WriteAheadLog, snapshot_every: int = 0,
+                   _log_init: bool = True) -> None:
+        """Start logging this runtime's inputs and events to ``wal``;
+        snapshot full state every ``snapshot_every`` processed events
+        (0 = never — recovery then replays from event 0). Must be attached
+        before any submission so the init record captures a clean slate."""
+        if _log_init and (self.jobs or self._heap):
+            raise ValueError("attach_wal before submitting work — the WAL "
+                             "must capture the runtime's inputs from zero")
+        self.wal = wal
+        self._snapshot_every = snapshot_every
+        if _log_init:
+            alloc = self.pool.allocator
+            cache = None
+            if self.cache is not None:
+                cache = {"capacity": self.cache.capacity,
+                         "ttl": self.cache.ttl}
+            wal.append({
+                "type": "init",
+                "config": asdict(self.cfg),
+                "pool": {"num_devices": len(alloc.devices),
+                         "lanes_per_device": self.pool.lanes_per_device,
+                         "spares_fraction": alloc.spares_fraction},
+                "cache": cache,
+                "model": {"decay": self.model.decay,
+                          "max_trust": self.model.max_trust,
+                          "walk_share": self.model.walk_share,
+                          "index_coverage": self.model.index_coverage},
+                "snapshot_every": snapshot_every,
+            })
+
+    def _wal_note(self, what: str, **fields: Any) -> None:
+        """Informational record (admission outcome, grant change, shed...).
+        Suppressed during replay — the original run already logged it."""
+        if self.wal is None or self._in_replay or self._mute_wal:
+            return
+        self.wal.append({"type": "note", "t": self.clock, "what": what,
+                         **fields})
 
     # -- submission --------------------------------------------------------
     def submit(self, num_queries: int, deadline: float, at: float = 0.0,
@@ -230,6 +298,12 @@ class ServingRuntime:
                   arrival=at, seed=seed,
                   sources=None if sources is None else tuple(sources),
                   executor=self.factory(job_id, num_queries, seed))
+        if self.wal is not None and not self._mute_wal:
+            rec = {"type": "submit", "queries": num_queries,
+                   "deadline": deadline, "at": at, "seed": seed}
+            if sources is not None:
+                rec["sources"] = [int(s) for s in sources]
+            self.wal.append(rec)
         self.jobs.append(job)
         self._push(at, "arrive", job)
         return job
@@ -291,21 +365,51 @@ class ServingRuntime:
         scheduled time, marks the devices failed (shrinking the pool) and
         records the readmission event."""
         times = sorted(schedule)
+        if self.wal is not None and not self._mute_wal:
+            self.wal.append({"type": "inject",
+                             "schedule": [[t, [int(d) for d in schedule[t]]]
+                                          for t in times]})
         self.controller.injector = FailureInjector(
             schedule={i: list(schedule[t]) for i, t in enumerate(times)})
         for i, t in enumerate(times):
             self._push(t, "fail", i)
+
+    def schedule_slowdowns(self, schedule: dict[float, float]) -> None:
+        """Schedule multiplicative executor slowdowns at virtual times
+        (chaos harness: a degraded NIC / thermal-throttled device inflates
+        every subsequent per-query time). A fired event slows all jobs
+        RUNNING at that instant; the straggler hook then sees their lanes
+        cross the re-issue threshold."""
+        for t, f in schedule.items():
+            if f <= 0:
+                raise ValueError(f"slowdown factor must be > 0 (got {f})")
+        times = sorted(schedule)
+        if self.wal is not None and not self._mute_wal:
+            self.wal.append({"type": "slowdown",
+                             "schedule": [[t, float(schedule[t])]
+                                          for t in times]})
+        for t in times:
+            self._push(t, "slow", float(schedule[t]))
 
     # -- event loop --------------------------------------------------------
     def _push(self, t: float, kind: str, payload: Any) -> None:
         heapq.heappush(self._heap, (t, self._seq, kind, payload))
         self._seq += 1
 
-    def run(self) -> ServingReport:
-        """Drain the event heap; returns the aggregate report."""
+    def run(self, max_events: int | None = None) -> ServingReport | None:
+        """Drain the event heap; returns the aggregate report. With
+        ``max_events`` set, stop (returning None) after that many events —
+        the chaos harness's crash point: the process "dies" there and a
+        recovery must carry on from the WAL."""
+        processed = 0
         while self._heap:
+            if max_events is not None and processed >= max_events:
+                return None
             t, _, kind, payload = heapq.heappop(self._heap)
             self.clock = max(self.clock, t)
+            self.events_processed += 1
+            processed += 1
+            self._wal_event(t, kind, payload)
             if kind == "arrive":
                 self._handle_arrival(payload, self.clock)
             elif kind == "slot":
@@ -324,11 +428,347 @@ class ServingRuntime:
                 self._record_answers(job, qids, stats, self.clock)
             elif kind == "fail":
                 self._handle_failure(payload, self.clock)
+            elif kind == "slow":
+                self._handle_slowdown(payload, self.clock)
+            if self.controller.heartbeat is not None:
+                self._poll_heartbeat(self.clock)
+            self._maybe_snapshot()
         records = tuple(
             JobRecord.of(j, self._grant_peak.get(j.job_id, 0),
                          self._lemma2_cs.get(j.job_id, 0.0))
             for j in self.jobs)
         return ServingReport(records=records, end_time=self.clock)
+
+    # -- WAL event stream ---------------------------------------------------
+    @staticmethod
+    def _event_tag(kind: str, payload: Any) -> Any:
+        """Identity of an event independent of object graph (job ids,
+        failure ordinals, slowdown factors) — what replay verification
+        compares against the log."""
+        if kind in ("arrive", "slot", "pre_release"):
+            return payload.job_id
+        if kind == "publish":
+            return payload[0].job_id
+        if kind == "fail":
+            return int(payload)
+        if kind == "slow":
+            return float(payload)
+        return None
+
+    def _wal_event(self, t: float, kind: str, payload: Any) -> None:
+        """Write-ahead (or, during recovery, verify) one heap event. Replay
+        is re-execution: every replayed event must match the logged one
+        exactly, or the rebuilt runtime is NOT the run that crashed."""
+        if self.wal is None:
+            return
+        tag = self._event_tag(kind, payload)
+        if self._replay_expect:
+            exp = self._replay_expect.popleft()
+            if (exp["kind"], exp["tag"], exp["t"]) != (kind, tag, t):
+                raise RuntimeError(
+                    f"WAL replay diverged at event {self.events_processed}: "
+                    f"logged ({exp['kind']!r}, {exp['tag']!r}, {exp['t']!r})"
+                    f" but replayed ({kind!r}, {tag!r}, {t!r})")
+            self._in_replay = True
+        else:
+            self._in_replay = False
+            self.wal.append({"type": "event", "n": self.events_processed,
+                             "t": t, "kind": kind, "tag": tag})
+
+    def _maybe_snapshot(self) -> None:
+        if (self.wal is None or self._snapshot_every <= 0 or self._in_replay
+                or self.events_processed % self._snapshot_every != 0):
+            return
+        self.snapshot()
+
+    def snapshot(self) -> None:
+        """Write a full-state checkpoint (atomic tmp-rename through
+        ``checkpoint.store``) and log it as the new compaction point."""
+        if self.wal is None:
+            raise ValueError("no WAL attached")
+        from ..checkpoint import store as ckpt_store
+        leaves = pack_state(self._state_dict())
+        ckpt_store.save(self.wal.snapshot_dir, self.events_processed, leaves)
+        self.wal.append({"type": "snapshot", "step": self.events_processed})
+
+    # -- state packing ------------------------------------------------------
+    def _pack_payload(self, kind: str, payload: Any) -> Any:
+        if kind in ("arrive", "slot", "pre_release"):
+            return {"job": payload.job_id}
+        if kind == "publish":
+            job, qids, stats = payload
+            return {"job": job.job_id, "qids": [int(q) for q in qids],
+                    "times": np.asarray(stats.times)}
+        return payload                       # fail ordinal / slow factor
+
+    def _unpack_payload(self, kind: str, packed: Any) -> Any:
+        if kind in ("arrive", "slot", "pre_release"):
+            return self.jobs[int(packed["job"])]
+        if kind == "publish":
+            return (self.jobs[int(packed["job"])],
+                    [int(q) for q in packed["qids"]],
+                    RuntimeStats(np.asarray(packed["times"])))
+        return packed
+
+    def _pack_job(self, job: Job) -> dict:
+        d: dict[str, Any] = {
+            "job_id": job.job_id, "state": job.state.value,
+            "t_pre": job.t_pre, "slots_t0": job.slots_t0,
+            "abs_deadline": job.abs_deadline, "completion": job.completion,
+            "est_scale": job.est_scale, "degraded": job.degraded,
+            "degrade_count": job.degrade_count, "extended": job.extended,
+            "replans": job.replans, "core_seconds": job.core_seconds,
+            "cache_hits": job.cache_hits, "late_hits": job.late_hits,
+            "effective_queries": job.effective_queries,
+            "accounted_to": job._accounted_to, "log": list(job.log),
+            "mesh": (None if job.mesh is None else
+                     [job.mesh.cores, job.mesh.devices, job.mesh.lanes]),
+            "stats": None if job.stats is None else np.asarray(job.stats.times),
+            "stepper": (None if job.stepper is None
+                        else job.stepper.state_dict()),
+            "executor": (job.executor.state_dict()
+                         if hasattr(job.executor, "state_dict") else None),
+            "reissue_rng": (None if job.reissue_rng is None
+                            else job.reissue_rng.bit_generator.state),
+        }
+        wi = getattr(job.executor, "walk_index", None)
+        if wi is not None:
+            d["walk_index"] = {"endpoints": np.asarray(wi.endpoints),
+                               "budget": np.asarray(wi.budget),
+                               "refreshed": int(wi.refreshed)}
+        return d
+
+    def _load_job(self, d: dict) -> None:
+        job = self.jobs[int(d["job_id"])]
+        job.state = JobState(d["state"])
+        job.t_pre = float(d["t_pre"])
+        job.slots_t0 = float(d["slots_t0"])
+        job.abs_deadline = float(d["abs_deadline"])
+        job.completion = (None if d["completion"] is None
+                          else float(d["completion"]))
+        job.est_scale = float(d["est_scale"])
+        job.degraded = bool(d["degraded"])
+        job.degrade_count = int(d["degrade_count"])
+        job.extended = bool(d["extended"])
+        job.replans = int(d["replans"])
+        job.core_seconds = float(d["core_seconds"])
+        job.cache_hits = int(d["cache_hits"])
+        job.late_hits = int(d["late_hits"])
+        job.effective_queries = int(d["effective_queries"])
+        job._accounted_to = float(d["accounted_to"])
+        job.log = [str(line) for line in d["log"]]
+        job.mesh = (None if d["mesh"] is None else
+                    MeshPlan(cores=int(d["mesh"][0]),
+                             devices=int(d["mesh"][1]),
+                             lanes=int(d["mesh"][2])))
+        job.stats = (None if d["stats"] is None
+                     else RuntimeStats(np.asarray(d["stats"])))
+        if d["executor"] is not None and hasattr(job.executor, "load_state"):
+            job.executor.load_state(d["executor"])
+        if d["stepper"] is not None:
+            slot_exec = getattr(job.executor, "run_chunk", job.executor)
+            job.stepper = SlotStepper.from_state(d["stepper"], slot_exec)
+        if d["reissue_rng"] is not None:
+            job.reissue_rng = np.random.default_rng()
+            job.reissue_rng.bit_generator.state = d["reissue_rng"]
+        if self.cfg.stragglers and job.stepper is not None:
+            job.stepper.straggler = (
+                lambda times, j=job: self._mitigate(j, times))
+        wi = getattr(job.executor, "walk_index", None)
+        if wi is not None and "walk_index" in d:
+            import jax.numpy as jnp
+            wi.endpoints = jnp.asarray(d["walk_index"]["endpoints"])
+            wi.budget = jnp.asarray(d["walk_index"]["budget"])
+            wi.refreshed = int(d["walk_index"]["refreshed"])
+
+    def _state_dict(self) -> dict:
+        state: dict[str, Any] = {
+            "clock": self.clock,
+            "seq": self._seq,
+            "events": self.events_processed,
+            "heap": [[t, seq, kind, self._pack_payload(kind, payload)]
+                     for (t, seq, kind, payload) in self._heap],
+            "jobs": [self._pack_job(j) for j in self.jobs],
+            "pool": {"grants": [[j, g] for j, g
+                                in sorted(self.pool.grants.items())],
+                     "reservations": [[j, r] for j, r
+                                      in sorted(self.pool.reservations.items())],
+                     "failed": sorted(self.pool.allocator.failed)},
+            "grant_peak": [[j, g] for j, g
+                           in sorted(self._grant_peak.items())],
+            "lemma2": [[j, v] for j, v in sorted(self._lemma2_cs.items())],
+            "waiting": [j.job_id for j in self._waiting],
+            "model": {"ewma": self.model._ewma},
+            "controller": {
+                "rescale_events": list(self.controller.rescale_events),
+                "straggler_events": list(self.controller.straggler_events)},
+        }
+        if self.cache is not None:
+            state["cache"] = {
+                "entries": [[list(k), e.cost, e.created, e.hits]
+                            for k, e in self.cache._entries.items()],
+                "stats": asdict(self.cache.stats)}
+        return state
+
+    def _load_state(self, state: dict) -> None:
+        """Overlay a snapshot onto a freshly rebuilt runtime (inputs already
+        re-submitted with the WAL muted). Replaces the heap wholesale —
+        the rebuild's arrival/fail pushes are the event-0 view; the
+        snapshot's heap is the as-of-crash view with matching ``seq``."""
+        self.clock = float(state["clock"])
+        self._seq = int(state["seq"])
+        self.events_processed = int(state["events"])
+        for d in state["jobs"]:
+            self._load_job(d)
+        self._heap = [(float(t), int(seq), str(kind),
+                       self._unpack_payload(str(kind), packed))
+                      for t, seq, kind, packed in state["heap"]]
+        # heapify may lay the array out differently than the crashed
+        # process's heap, but pop order depends only on the (t, seq) keys
+        # and seq is unique — replay order is identical either way
+        heapq.heapify(self._heap)
+        self.pool.grants = {int(j): int(g)
+                            for j, g in state["pool"]["grants"]}
+        self.pool.reservations = {int(j): int(r)
+                                  for j, r in state["pool"]["reservations"]}
+        for idx in state["pool"]["failed"]:
+            self.pool.allocator.mark_failed(int(idx))
+        self._grant_peak = {int(j): int(g) for j, g in state["grant_peak"]}
+        self._lemma2_cs = {int(j): float(v) for j, v in state["lemma2"]}
+        self._waiting = [self.jobs[int(i)] for i in state["waiting"]]
+        self.model._ewma = state["model"]["ewma"]
+        self.controller.rescale_events[:] = state["controller"][
+            "rescale_events"]
+        self.controller.straggler_events[:] = state["controller"][
+            "straggler_events"]
+        if self.cache is not None and "cache" in state:
+            self.cache._entries.clear()
+            for key, cost, created, hits in state["cache"]["entries"]:
+                self.cache._entries[tuple(key)] = CacheEntry(
+                    value=None, cost=float(cost), created=float(created),
+                    hits=int(hits))
+            self.cache.stats = CacheStats(**state["cache"]["stats"])
+
+    # -- recovery -----------------------------------------------------------
+    @classmethod
+    def recover(cls, wal_dir: str | Path,
+                executor_factory: ExecutorFactory, *,
+                heartbeat: HeartbeatMonitor | None = None,
+                fsync: bool = True
+                ) -> tuple["ServingRuntime", RecoveryInfo]:
+        """Reconstruct a crashed runtime from its WAL directory.
+
+        Three phases: (1) rebuild the runtime from the logged inputs
+        (init/submit/inject/slowdown records, WAL muted so nothing is
+        double-logged); (2) overlay the newest restorable snapshot — an
+        unrestorable one (GC'd, or a killed writer's leftovers) falls back
+        to the next older, ultimately to replay-from-zero; (3) queue the
+        logged event suffix for verified replay. The caller then just calls
+        :meth:`run` — replayed events re-execute deterministically (virtual
+        clock, seeds and admission decisions are functions of the logged
+        inputs), and execution continues live past the crash point. An
+        accepted job is never lost: its submit record is in the log, so it
+        completes, degrades, or extends via §III-A — never drops."""
+        from ..checkpoint import store as ckpt_store
+        records = WriteAheadLog.read(wal_dir)
+        init = next((r for r in records if r["type"] == "init"), None)
+        if init is None:
+            raise ValueError(f"no init record in WAL at {wal_dir}")
+        cfg = ServingConfig(**init["config"])
+        p = init["pool"]
+        pool = CorePool.of(int(p["num_devices"]),
+                           int(p["lanes_per_device"]),
+                           float(p["spares_fraction"]))
+        cache = None
+        if init.get("cache") is not None:
+            cache = ResultCache(int(init["cache"]["capacity"]),
+                                init["cache"]["ttl"])
+        m = init["model"]
+        model = CacheAwareCostModel(decay=m["decay"],
+                                    max_trust=m["max_trust"],
+                                    walk_share=m["walk_share"],
+                                    index_coverage=m["index_coverage"])
+        controller = ElasticController(allocator=pool.allocator,
+                                       heartbeat=heartbeat)
+        rt = cls(pool, executor_factory, cfg, controller=controller,
+                 cache=cache, cost_model=model)
+        wal = WriteAheadLog(wal_dir, fsync=fsync)
+        rt.attach_wal(wal, snapshot_every=int(init.get("snapshot_every", 0)),
+                      _log_init=False)
+        rt._mute_wal = True
+        try:
+            # inputs re-dispatch in FILE order — interleaved submit/inject/
+            # slowdown calls reproduce the exact heap seq numbering
+            for rec in records:
+                if rec["type"] == "submit":
+                    rt.submit(int(rec["queries"]), float(rec["deadline"]),
+                              at=float(rec["at"]), seed=int(rec["seed"]),
+                              sources=rec.get("sources"))
+                elif rec["type"] == "inject":
+                    rt.inject_failures(
+                        {float(t): [int(d) for d in devs]
+                         for t, devs in rec["schedule"]})
+                elif rec["type"] == "slowdown":
+                    rt.schedule_slowdowns(
+                        {float(t): float(f) for t, f in rec["schedule"]})
+        finally:
+            rt._mute_wal = False
+        events = [r for r in records if r["type"] == "event"]
+        snap_step = None
+        for step in sorted((r["step"] for r in records
+                            if r["type"] == "snapshot"), reverse=True):
+            try:
+                _, leaves = ckpt_store.restore_list(wal.snapshot_dir,
+                                                    int(step))
+            except (FileNotFoundError, OSError, ValueError):
+                continue
+            rt._load_state(unpack_state(leaves))
+            snap_step = int(step)
+            break
+        replay = deque(r for r in events
+                       if int(r["n"]) > (snap_step or 0))
+        rt._replay_expect = replay
+        info = RecoveryInfo(snapshot_step=snap_step,
+                            replayed_events=len(replay),
+                            logged_events=len(events))
+        wal.append({"type": "recover", "from_step": snap_step,
+                    "replayed": len(replay), "logged_events": len(events)})
+        return rt, info
+
+    # -- straggler mitigation (DESIGN.md §12) -------------------------------
+    def _mitigate(self, job: Job, times: np.ndarray) -> np.ndarray:
+        """Slot-boundary speculative re-issue: lanes whose slot time crossed
+        the paper's fluctuation threshold ``t_hat * (2 - d)`` are re-run on
+        pool spares, first result wins. Answers are invariant — a re-issued
+        chunk re-executes under the same query-derived seed (ForaExecutor
+        seeds PRNGKey(ids[0]), independent of call history) — so only the
+        completion TIME changes: min(original, threshold + re-issue draw).
+        Re-issue draws come from the job's own snapshotted RNG stream, so
+        recovery replays the same mitigation decisions bit-for-bit."""
+        if job.stats is None or job.reissue_rng is None:
+            return times
+        t_hat = job.stats.t_max * job.est_scale
+        if t_hat <= 0:
+            return times
+        monitor = StragglerMonitor(t_hat=t_hat,
+                                   scaling_factor=self.cfg.scaling_factor)
+        spares = self.pool.allocator.spares
+        lanes = monitor.decide(times, [False] * int(times.size), spares)
+        if not lanes:
+            return times
+        draws = job.reissue_rng.permutation(times)
+        sel = np.asarray(lanes)
+        eff = times.copy()
+        eff[sel] = monitor.simulate_reissue(times[sel], draws[sel])
+        before, after = float(times.max()), float(eff.max())
+        self.controller.note_stragglers(
+            job.stepper.steps if job.stepper is not None else 0,
+            job.job_id, lanes, before, after)
+        job.log.append(f"t={self.clock:.3f} straggler re-issue "
+                       f"lanes={lanes} makespan {before:.4f}->{after:.4f}")
+        self._wal_note("straggler", job=job.job_id, lanes=list(lanes),
+                       makespan_before=before, makespan_after=after)
+        return eff
 
     # -- arrival / admission ------------------------------------------------
     def _pop_waiter(self, now: float) -> None:
@@ -422,6 +862,7 @@ class ServingRuntime:
                 job.completion = now
                 job.log.append(f"t={now:.3f} answered from cache "
                                f"({len(hits)} hits, zero cores)")
+                self._wal_note("cache_done", job=job.job_id, hits=len(hits))
                 self._pop_waiter(now)
                 return
         c = cfg.preprocess_cores
@@ -432,6 +873,7 @@ class ServingRuntime:
                 # the SLA clock keeps running, replan/degrade absorb the wait
                 self._waiting.append(job)
                 job.log.append(f"t={now:.3f} queued (pool exhausted)")
+                self._wal_note("queued", job=job.job_id)
                 return
             job.state = JobState.REJECTED        # pool has zero capacity
             job.log.append(f"t={now:.3f} rejected: zero-capacity pool")
@@ -458,6 +900,11 @@ class ServingRuntime:
         # window below (ROADMAP follow-up — they used to be assumed free),
         # and the slot grant acquired below is charged from NOW too
         job.core_seconds += c * job.t_pre
+        if self._in_replay:
+            # recovery re-executes this preprocessing — real cores burned
+            # twice for the same sample, surfaced by the daemon's recovery
+            # report (the Alg.-2 c-core cost a crash re-bills)
+            self.replay_pre_core_s += c * job.t_pre
         job._accounted_to = now
         try:
             self._lemma2_cs[job.job_id] = (
@@ -471,6 +918,7 @@ class ServingRuntime:
         if not self._admit(job, now):
             job.state = JobState.REJECTED
             job.log.append(f"t={now:.3f} rejected at admission")
+            self._wal_note("rejected", job=job.job_id)
             self._reserve_pre(job, now, c)       # the sample still ran
             self._pop_waiter(now)         # keep the waiter chain alive
             return
@@ -479,6 +927,7 @@ class ServingRuntime:
             job.state = JobState.DONE
             job.completion = now + job.t_pre
             job.log.append(f"t={now:.3f} done in preprocessing")
+            self._wal_note("preprocessed", job=job.job_id)
             if self._cache_on:
                 self._push(now + job.t_pre, "publish",
                            (job, sample_ids, stats))
@@ -499,8 +948,17 @@ class ServingRuntime:
         # above because admission needs per-query time resolution
         slot_exec = getattr(job.executor, "run_chunk", job.executor)
         job.stepper = SlotStepper.from_queries(rest_ids, ell, k, slot_exec)
+        if cfg.stragglers:
+            # per-job re-issue RNG stream, derived from the job's own seed
+            # (not the shared numpy state) and snapshotted with the job —
+            # recovery replays identical mitigation draws
+            job.reissue_rng = np.random.default_rng(
+                np.random.SeedSequence([job.seed, 0x57A6]))
+            job.stepper.straggler = (
+                lambda times, j=job: self._mitigate(j, times))
         job.log.append(f"t={now:.3f} admitted s={s} ell={ell} k={k} "
                        f"t_pre={job.t_pre:.4f}")
+        self._wal_note("admitted", job=job.job_id, s=s, ell=ell, k=k)
         self._reshape(job, now)
         if self._cache_on:
             self._push(job.slots_t0, "publish", (job, sample_ids, stats))
@@ -624,6 +1082,8 @@ class ServingRuntime:
             job.completion = now
             self.pool.release(job.job_id)
             job.log.append(f"t={now:.3f} done lateness={job.lateness:.4f}")
+            self._wal_note("completed", job=job.job_id,
+                           lateness=job.lateness)
             self._pop_waiter(now)                 # freed cores: admit a waiter
             return
         if self.cfg.replan:
@@ -675,6 +1135,8 @@ class ServingRuntime:
                 job.stepper.resize(grant - released)
                 job.log.append(f"t={now:.3f} replan shrink {grant}->"
                                f"{grant - released} (ahead)")
+                self._wal_note("grant", job=job.job_id,
+                               cores=grant - released)
                 self._reshape(job, now)
         elif k_new > grant:
             added = self.pool.grow(job.job_id, k_new - grant)
@@ -682,6 +1144,7 @@ class ServingRuntime:
                 job.stepper.resize(grant + added)
                 job.log.append(f"t={now:.3f} replan grow {grant}->"
                                f"{grant + added} (behind)")
+                self._wal_note("grant", job=job.job_id, cores=grant + added)
                 self._reshape(job, now)
         grant = self.pool.grant_of(job.job_id)
         self._grant_peak[job.job_id] = max(self._grant_peak[job.job_id], grant)
@@ -707,7 +1170,7 @@ class ServingRuntime:
         job.log.append(f"t={now:.3f} degraded x{cfg.degrade_factor} ({why})")
         return True
 
-    # -- failures -----------------------------------------------------------
+    # -- failures / chaos ---------------------------------------------------
     def _handle_failure(self, ordinal: int, now: float) -> None:
         """A device failure: the ElasticController marks it failed (the pool
         reads capacity from the same allocator), overcommitted grants are
@@ -720,6 +1183,13 @@ class ServingRuntime:
             queries_left=sum(j.remaining for j in running),
             deadline_left=min((j.abs_deadline - now for j in running),
                               default=0.0))
+        self._shed_and_readmit(now)
+
+    def _shed_and_readmit(self, now: float) -> None:
+        """Shed overcommitted grants largest-first and readmit every cut
+        job over its remaining work (§III-A extension rather than loss).
+        Shared by injected failures and heartbeat-detected ones."""
+        running = [j for j in self.jobs if j.state is JobState.RUNNING]
         cuts = self.pool.shed_plan()
         for job in running:
             cut = cuts.get(job.job_id, 0)
@@ -739,6 +1209,38 @@ class ServingRuntime:
             job.log.append(f"t={now:.3f} failure shed {cut} cores "
                            f"(readmit feasible={adm.feasible})")
             self._reshape(job, now)
+        if cuts:
+            self._wal_note("shed",
+                           cuts=[[j, c] for j, c in sorted(cuts.items())])
+
+    def _handle_slowdown(self, factor: float, now: float) -> None:
+        """A scheduled lane slowdown fires: every RUNNING job's executor is
+        scaled by ``factor`` (> 1 slows), so subsequent slots run long and
+        the straggler hook sees lanes crossing the re-issue threshold."""
+        slowed = 0
+        for job in self.jobs:
+            if job.state is not JobState.RUNNING:
+                continue
+            ex = job.executor
+            if hasattr(ex, "slow"):
+                ex.slow(factor)
+            elif hasattr(ex, "scale"):
+                ex.scale *= factor
+            else:
+                continue
+            slowed += 1
+            job.log.append(f"t={now:.3f} lanes slowed x{factor}")
+        self._wal_note("slowdown_fired", factor=factor, jobs=slowed)
+
+    def _poll_heartbeat(self, now: float) -> None:
+        """Per-event liveness sweep when a HeartbeatMonitor is attached
+        (serve.py --daemon wires it to the wall clock): silent devices are
+        marked failed and the same shed/readmit path as injected failures
+        runs — a daemon losing a device mid-flight degrades, never hangs."""
+        silent = self.controller.poll_heartbeat()
+        if silent:
+            self._wal_note("heartbeat_failure", failed=list(silent))
+            self._shed_and_readmit(now)
 
 
 def run_single_job(num_queries: int, deadline: float,

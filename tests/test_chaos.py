@@ -1,0 +1,202 @@
+"""Chaos harness + straggler mitigation (DESIGN.md §12): seeded fault
+schedules, slot-boundary speculative re-issue (answer-invariant, no-op
+without spares), executor slowdown events, and real-wall-clock heartbeat
+liveness through the serving loop and the serve.py daemon wiring."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.ft.chaos import ChaosSchedule, ChaosSpec, drive_with_crashes
+from repro.ft.elastic import ElasticController, HeartbeatMonitor
+from repro.serving import (CorePool, JobState, ServingConfig, ServingRuntime,
+                           SimJobExecutor, WriteAheadLog)
+
+
+def _factory(mean=0.05, cv=0.3):
+    return lambda job_id, nq, sd: SimJobExecutor(mean=mean, cv=cv, seed=sd)
+
+
+def _runtime(*, pool_cores=16, spares=0.0, stragglers=False,
+             heartbeat=None):
+    pool = CorePool.of(pool_cores, spares_fraction=spares)
+    controller = ElasticController(allocator=pool.allocator,
+                                   heartbeat=heartbeat)
+    return ServingRuntime(
+        pool, _factory(),
+        ServingConfig(scaling_factor=0.9, sample_frac=0.05,
+                      stragglers=stragglers),
+        controller=controller)
+
+
+# ---------------------------------------------------------------------------
+# ChaosSpec / ChaosSchedule
+
+
+def test_chaos_spec_parse():
+    spec = ChaosSpec.parse("seed=7,failures=1,slowdowns=2,horizon=18,"
+                           "slow_factor=2.5")
+    assert spec == ChaosSpec(seed=7, failures=1, slowdowns=2,
+                             horizon=18.0, slow_factor=2.5)
+    assert ChaosSpec.parse("") == ChaosSpec()
+    with pytest.raises(ValueError, match="unknown chaos spec key"):
+        ChaosSpec.parse("seed=1,bogus=3")
+    with pytest.raises(ValueError, match="not k=v"):
+        ChaosSpec.parse("seed")
+    with pytest.raises(ValueError, match="horizon"):
+        ChaosSpec.parse("horizon=0")
+    with pytest.raises(ValueError, match="crash_span"):
+        ChaosSpec(crash_span=1)
+
+
+def test_chaos_schedule_seeded_and_bounded():
+    spec = ChaosSpec(seed=42, failures=3, slowdowns=2, crashes=4,
+                     horizon=10.0, crash_span=50)
+    a = ChaosSchedule.from_spec(spec, num_devices=8)
+    b = ChaosSchedule.from_spec(spec, num_devices=8)
+    assert a == b                                  # pure function of seed
+    assert a != ChaosSchedule.from_spec(
+        ChaosSpec(seed=43, failures=3, slowdowns=2, crashes=4,
+                  horizon=10.0, crash_span=50), 8)
+    for t, devs in a.failures:
+        assert 0.0 <= t <= 10.0 and all(0 <= d < 8 for d in devs)
+    for t, f in a.slowdowns:
+        assert 0.0 <= t <= 10.0 and f == spec.slow_factor
+    assert all(1 <= p < 50 for p in a.crashes)
+    assert list(a.crashes) == sorted(set(a.crashes))
+    with pytest.raises(ValueError):
+        ChaosSchedule.from_spec(spec, num_devices=0)
+
+
+def test_drive_with_crashes_requires_wal(tmp_path):
+    rt = _runtime()
+    rt.submit(20, 5.0)
+    with pytest.raises(ValueError, match="no WAL"):
+        drive_with_crashes(rt, tmp_path, _factory(), [5])
+
+
+def test_drive_with_crashes_skips_passed_points(tmp_path):
+    """Crash points the trace never reaches are skipped; the drive still
+    finishes and returns the report."""
+    rt = _runtime()
+    rt.attach_wal(WriteAheadLog(tmp_path, fsync=False), snapshot_every=0)
+    rt.submit(15, 5.0, seed=1)
+    report, infos, final = drive_with_crashes(
+        rt, tmp_path, _factory(), [100_000], fsync=False)
+    assert report is not None and infos == []
+    assert final.jobs[0].state is JobState.DONE
+
+
+# ---------------------------------------------------------------------------
+# straggler mitigation
+
+
+def _slowdown_drive(*, stragglers, spares):
+    rt = _runtime(pool_cores=16, spares=spares, stragglers=stragglers)
+    rt.submit_poisson(6, 1.0, queries=(60, 120), deadline=(4.0, 7.0),
+                      seed=5)
+    rt.schedule_slowdowns({2.5: 3.0})            # lands mid-flight
+    return rt, rt.run()
+
+
+def test_straggler_reissue_fires_and_shrinks_makespan():
+    """A mid-flight 3x slowdown pushes lanes over the t_hat*(2-d)
+    threshold; with spares available the re-issue fires, every logged
+    event records a non-increasing makespan, and no job is lost."""
+    rt, rep = _slowdown_drive(stragglers=True, spares=0.15)
+    events = rt.controller.straggler_events
+    assert len(events) >= 1
+    for ev in events:
+        assert ev["makespan_after"] <= ev["makespan_before"]
+        assert ev["lanes"]
+    assert rep.completed == len(rep.records)
+    # determinism: the mitigation decisions replay bit-for-bit
+    rt2, rep2 = _slowdown_drive(stragglers=True, spares=0.15)
+    assert rep == rep2
+    assert rt.controller.straggler_events == rt2.controller.straggler_events
+
+
+def test_stragglers_without_spares_is_bit_identical_noop():
+    """ISSUE requirement: mitigation enabled with zero spares must not
+    perturb a single decision — the full reports are equal."""
+    _, with_flag = _slowdown_drive(stragglers=True, spares=0.0)
+    _, without = _slowdown_drive(stragglers=False, spares=0.0)
+    assert with_flag == without
+
+
+def test_slowdown_event_slows_running_jobs():
+    """The chaos 'slow' event visibly costs time versus the same seeded
+    scenario without it (and is itself deterministic)."""
+    def drive(slow):
+        rt = _runtime(pool_cores=16)
+        rt.submit_poisson(5, 1.0, queries=(60, 120), deadline=(4.0, 7.0),
+                          seed=5)
+        if slow:
+            rt.schedule_slowdowns({2.5: 4.0})
+        return rt.run()
+
+    clean, slowed = drive(False), drive(True)
+    assert slowed.core_seconds > clean.core_seconds
+    assert drive(True) == slowed
+    with pytest.raises(ValueError, match="factor"):
+        _runtime().schedule_slowdowns({1.0: 0.0})
+
+
+def test_reissued_chunk_answers_are_invariant():
+    """First-result-wins is safe because answers are a function of the
+    query ids alone: ForaExecutor seeds from the chunk's ids, so a
+    re-issued chunk reproduces the original pi bit-for-bit."""
+    jax = pytest.importorskip("jax")
+    from repro.ppr import ForaParams, fora_fused, small_test_graph
+
+    g = small_test_graph(n=120, avg_deg=6, seed=0)
+    srcs = np.array([3, 9, 41])
+    params = ForaParams(alpha=0.2, epsilon=0.5)
+    a = fora_fused(g.device(), srcs, params, jax.random.PRNGKey(3),
+                   num_walks=2048)
+    b = fora_fused(g.device(), srcs, params, jax.random.PRNGKey(3),
+                   num_walks=2048)
+    np.testing.assert_array_equal(np.asarray(a.pi), np.asarray(b.pi))
+
+
+# ---------------------------------------------------------------------------
+# heartbeat liveness (satellite b)
+
+
+def test_heartbeat_silence_sheds_device_during_run():
+    """A device that stops beating is declared failed by the per-event
+    poll; its work is shed and readmitted (§III-A), and the run completes
+    every job on the surviving devices."""
+    clk = [0.0]
+    hb = HeartbeatMonitor(8, timeout=1.0, clock=lambda: clk[0])
+    rt = _runtime(pool_cores=8, heartbeat=hb)
+    rt.submit_poisson(4, 1.0, queries=(40, 80), deadline=(4.0, 7.0), seed=2)
+    clk[0] = 5.0                                  # everyone looks stale...
+    for i in range(1, 8):
+        hb.beat(i)                                # ...except device 0
+    rep = rt.run()
+    assert rt.pool.allocator.failed == {0}
+    ev = [e for e in rt.controller.rescale_events
+          if e.get("missed_heartbeat")]
+    assert ev and ev[0]["missed_heartbeat"] == [0]
+    assert rep.completed == len(rep.records)
+    assert all(j.state is JobState.DONE for j in rt.jobs)
+
+
+def test_daemon_heartbeat_uses_wall_clock():
+    """Satellite b: serve.py --daemon wires the HeartbeatMonitor to the
+    REAL wall clock (time.monotonic), and --heartbeat-timeout <= 0 keeps
+    the liveness path off entirely."""
+    from repro.launch.serve import _daemon_heartbeat, build_parser
+
+    args = build_parser().parse_args(
+        ["--daemon", "--workload", "lm-decode", "--heartbeat-timeout", "5"])
+    hb = _daemon_heartbeat(args, num_devices=4)
+    assert isinstance(hb, HeartbeatMonitor)
+    assert hb.clock is time.monotonic
+    assert hb.timeout == 5.0 and len(hb.last_seen) == 4
+    off = build_parser().parse_args(["--daemon", "--workload", "lm-decode"])
+    assert _daemon_heartbeat(off, num_devices=4) is None

@@ -1,0 +1,256 @@
+"""Durable serving state (DESIGN.md §12): WAL roundtrip and torn-tail
+hygiene, snapshot pack/unpack, checkpoint stale-tmp cleanup, and the
+recovery contract — a crashed-then-recovered serving trace reproduces the
+uncrashed run bit-for-bit and never loses an accepted job."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.index import ResultCache
+from repro.serving import (CorePool, JobState, RecoveryInfo, ServingConfig,
+                           ServingRuntime, SimJobExecutor, WriteAheadLog)
+from repro.serving.wal import WAL_FILE, pack_state, unpack_state
+
+
+def _factory(mean=0.05, cv=0.3):
+    return lambda job_id, nq, sd: SimJobExecutor(mean=mean, cv=cv, seed=sd)
+
+
+def _runtime(wal_dir=None, *, pool_cores=8, snapshot_every=5, cache=None,
+             stragglers=False, spares=0.0):
+    rt = ServingRuntime(
+        CorePool.of(pool_cores, spares_fraction=spares), _factory(),
+        ServingConfig(scaling_factor=0.9, sample_frac=0.05,
+                      stragglers=stragglers),
+        cache=cache)
+    if wal_dir is not None:
+        rt.attach_wal(WriteAheadLog(wal_dir, fsync=False),
+                      snapshot_every=snapshot_every)
+    return rt
+
+
+def _submit_small(rt, num_jobs=4):
+    rt.submit_poisson(num_jobs, 1.2, queries=(10, 25), deadline=(2.0, 4.0),
+                      seed=3)
+
+
+# ---------------------------------------------------------------------------
+# WAL file format
+
+
+def test_wal_roundtrip_and_torn_tail(tmp_path):
+    wal = WriteAheadLog(tmp_path)
+    recs = [{"type": "note", "i": i, "x": [1.5, None, "s"]} for i in range(4)]
+    for r in recs:
+        wal.append(r)
+    wal.close()
+    back = WriteAheadLog.read(tmp_path)
+    assert [{k: v for k, v in r.items() if k != "v"} for r in back] == recs
+    assert all(r["v"] == 1 for r in back)
+    # a killed writer leaves a torn final line — tolerated, prefix survives
+    with open(tmp_path / WAL_FILE, "a") as fh:
+        fh.write('{"type": "note", "i": 4')       # no close brace, no \n
+    assert len(WriteAheadLog.read(tmp_path)) == 4
+
+
+def test_wal_mid_file_corruption_raises(tmp_path):
+    wal = WriteAheadLog(tmp_path)
+    for i in range(3):
+        wal.append({"type": "note", "i": i})
+    wal.close()
+    lines = (tmp_path / WAL_FILE).read_text().splitlines()
+    lines[1] = lines[1][:5] + "garbage"
+    (tmp_path / WAL_FILE).write_text("\n".join(lines) + "\n")
+    with pytest.raises(ValueError, match="corrupt"):
+        WriteAheadLog.read(tmp_path)
+
+
+def test_wal_version_mismatch_raises(tmp_path):
+    with open(tmp_path / WAL_FILE, "w") as fh:
+        fh.write(json.dumps({"v": 99, "type": "init"}) + "\n")
+    with pytest.raises(ValueError, match="version"):
+        WriteAheadLog.read(tmp_path)
+
+
+def test_pack_unpack_state_roundtrip():
+    state = {
+        "clock": 3.25, "seq": 17, "big": 2**80,
+        "heap": [[0.5, 1, "arrive", 0], [1.5, 2, "slot", 3]],
+        "rng": {"state": {"state": 2**127 + 5, "inc": 11}},
+        "times": np.linspace(0.0, 1.0, 7),
+        "jobs": [{"mesh": np.arange(6).reshape(2, 3),
+                  "none": None, "flag": True}],
+    }
+    out = unpack_state(pack_state(state))
+    assert out["clock"] == state["clock"] and out["big"] == state["big"]
+    assert out["rng"] == state["rng"]
+    np.testing.assert_array_equal(out["times"], state["times"])
+    np.testing.assert_array_equal(out["jobs"][0]["mesh"],
+                                  state["jobs"][0]["mesh"])
+    assert out["jobs"][0]["none"] is None and out["jobs"][0]["flag"] is True
+    with pytest.raises(TypeError):
+        pack_state({1: "non-string keys cannot survive JSON"})
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store hygiene (satellite c)
+
+
+def test_save_cleans_stale_tmp_from_killed_writer(tmp_path):
+    root = tmp_path / "ck"
+    store.save(root, 1, [np.arange(4)])
+    # simulate a writer killed mid-save: orphaned tmp dir with partial data
+    stale = root / ".tmp_step_00000007"
+    stale.mkdir()
+    (stale / "leaf_00000.npy").write_bytes(b"partial")
+    store.save(root, 2, [np.arange(5)])
+    assert not any(p.name.startswith(".tmp_step_")
+                   for p in root.iterdir())
+    step, leaves = store.restore_list(root)
+    assert step == 2
+    np.testing.assert_array_equal(leaves[0], np.arange(5))
+
+
+def test_restore_cleans_stale_tmp(tmp_path):
+    root = tmp_path / "ck"
+    store.save(root, 3, [np.arange(3, dtype=np.float32)])
+    (root / ".tmp_step_00000009").mkdir()
+    step, leaves = store.restore_list(root)
+    assert step == 3 and leaves[0].dtype == np.float32
+    assert not (root / ".tmp_step_00000009").exists()
+
+
+# ---------------------------------------------------------------------------
+# recovery: bit-for-bit crash transparency
+
+
+def test_recover_from_snapshot_matches_uncrashed(tmp_path):
+    ref_rt = _runtime()
+    _submit_small(ref_rt)
+    ref = ref_rt.run()
+
+    rt = _runtime(tmp_path)
+    _submit_small(rt)
+    assert rt.run(max_events=12) is None          # "kill -9" at event 12
+    rt2, info = ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+    assert isinstance(info, RecoveryInfo)
+    assert info.snapshot_step == 10               # snapshot_every=5
+    assert info.logged_events == 12
+    assert info.replayed_events == 2              # events 11..12
+    rep = rt2.run()
+    assert rep.records == ref.records
+    assert rep.end_time == ref.end_time
+
+
+def test_crash_anywhere_never_loses_a_job(tmp_path):
+    """The ISSUE acceptance property: crash after EVERY event prefix,
+    recover, finish — final JobRecords bit-identical to the uncrashed run,
+    every accepted job completed (never dropped)."""
+    ref_rt = _runtime()
+    _submit_small(ref_rt)
+    ref = ref_rt.run()
+    total = ref_rt.events_processed
+    assert total > 10
+
+    for point in range(1, total):
+        wal_dir = tmp_path / f"crash_{point:03d}"
+        rt = _runtime(wal_dir)
+        _submit_small(rt)
+        assert rt.run(max_events=point) is None
+        rt2, info = ServingRuntime.recover(wal_dir, _factory(), fsync=False)
+        assert info.logged_events == point
+        rep = rt2.run()
+        assert rep.records == ref.records, f"diverged after crash @ {point}"
+        assert all(j.state is JobState.DONE for j in rt2.jobs)
+
+
+def test_recovery_determinism_with_failures_and_cache(tmp_path):
+    """Crash-transparency through the full stack: device failures mid-
+    trace, a shared result cache, and explicit sources. Admission logs and
+    cache stats must match the uncrashed run, not just the records."""
+    shared = list(range(120))
+
+    def build(wal_dir):
+        rt = _runtime(wal_dir, pool_cores=12,
+                      cache=ResultCache(capacity=4096))
+        rt.submit(120, 6.0, at=0.0, seed=0, sources=shared)
+        rt.submit(120, 6.0, at=0.4, seed=1, sources=shared)
+        rt.submit(80, 5.0, at=0.8, seed=2,
+                  sources=list(range(500, 580)))
+        rt.inject_failures({1.0: [0, 1]})
+        return rt
+
+    ref_rt = build(None)
+    ref = ref_rt.run()
+
+    rt = build(tmp_path)
+    assert rt.run(max_events=9) is None
+    rt2, _ = ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+    rep = rt2.run()
+    assert rep.records == ref.records
+    assert [j.log for j in rt2.jobs] == [j.log for j in ref_rt.jobs]
+    assert rt2.cache.stats == ref_rt.cache.stats
+    assert rt2.model.hit_rate == ref_rt.model.hit_rate
+
+
+def test_replay_rebills_preprocess_cores(tmp_path):
+    """With no snapshots the whole trace replays; replayed arrivals re-bill
+    their preprocess core-seconds into replay_pre_core_s, and the recover
+    marker lands in the WAL (satellite a's daemon printout reads both)."""
+    rt = _runtime(tmp_path, snapshot_every=0)
+    _submit_small(rt)
+    assert rt.run(max_events=6) is None           # covers >= 1 arrival
+    rt2, info = ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+    assert info.snapshot_step is None
+    assert info.replayed_events == info.logged_events == 6
+    rep = rt2.run()
+    assert rt2.replay_pre_core_s > 0.0
+    assert rep.completed == len(rep.records)
+    markers = [r for r in WriteAheadLog.read(tmp_path)
+               if r["type"] == "recover"]
+    assert markers and markers[-1]["replayed"] == 6
+
+
+def test_replay_divergence_detected(tmp_path):
+    """A tampered event record (wrong tag) must fail loudly during replay,
+    not silently produce a different history."""
+    rt = _runtime(tmp_path, snapshot_every=0)
+    _submit_small(rt)
+    assert rt.run(max_events=8) is None
+    path = tmp_path / WAL_FILE
+    lines = path.read_text().splitlines()
+    for i, line in enumerate(lines):
+        rec = json.loads(line)
+        if rec["type"] == "event":
+            rec["tag"] = 999
+            lines[i] = json.dumps(rec)
+            break
+    path.write_text("\n".join(lines) + "\n")
+    rt2, _ = ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+    with pytest.raises(RuntimeError, match="diverged"):
+        rt2.run()
+
+
+def test_recover_survives_deleted_snapshots(tmp_path):
+    """GC'd (or corrupted) snapshots degrade to replay-from-zero, never to
+    a failed recovery."""
+    import shutil
+
+    ref_rt = _runtime()
+    _submit_small(ref_rt)
+    ref = ref_rt.run()
+
+    rt = _runtime(tmp_path, snapshot_every=5)
+    _submit_small(rt)
+    assert rt.run(max_events=13) is None
+    shutil.rmtree(rt.wal.snapshot_dir)
+    rt2, info = ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+    assert info.snapshot_step is None
+    assert info.replayed_events == 13
+    rep = rt2.run()
+    assert rep.records == ref.records

@@ -36,6 +36,11 @@ python -m benchmarks.serving_sim --check
 # uncached serving path, warm leg >= 30% core-hours reduction at 100% SLA
 python -m benchmarks.index_cache --check
 
+# chaos smoke (DESIGN.md §12): WAL-attached run with device failure, lane
+# slowdowns and two process crashes — recovery must be crash-transparent
+# (records bit-identical to the uncrashed run) with zero job loss
+python -m benchmarks.serving_sim --chaos
+
 trap 'rm -f BENCH_kernels.committed.json BENCH_kernels.fresh1.json \
             BENCH_kernels.fresh2.json BENCH_kernels.merged.json' EXIT
 python -m benchmarks.run --only kernels,fora_hot,serving,index --json BENCH_kernels.fresh1.json
