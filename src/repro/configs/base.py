@@ -287,10 +287,11 @@ class LMArch(ArchDef):
 
     def smoke_run(self, key):
         cfg = self.smoke_cfg
-        params = transformer.init(key, cfg)
+        k_init, k_toks, k_labels = jax.random.split(key, 3)
+        params = transformer.init(k_init, cfg)
         B, S = 2, 32
-        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
-        labels = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        toks = jax.random.randint(k_toks, (B, S), 0, cfg.vocab)
+        labels = jax.random.randint(k_labels, (B, S), 0, cfg.vocab)
         opt_state = adamw_init(params)
         loss, grads = jax.value_and_grad(transformer.loss_fn)(
             params, cfg, toks, labels)
@@ -461,9 +462,10 @@ class GNNArch(ArchDef):
         d = cfg.d_in if hasattr(cfg, "d_in") else 16
         from ..models.gnn.common import random_graph_batch
         n_classes = getattr(cfg, "n_classes", 2)
-        batch = random_graph_batch(key, n, m, d, n_graphs=g,
+        k_batch, k_init = jax.random.split(key)
+        batch = random_graph_batch(k_batch, n, m, d, n_graphs=g,
                                    with_positions=True, n_classes=n_classes)
-        params = self.model.init(key, cfg)
+        params = self.model.init(k_init, cfg)
         if self._is_dimenet:
             kj, ji = dimenet.build_triplets(np.asarray(batch.edge_index), n,
                                             max_triplets=512)

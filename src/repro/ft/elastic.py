@@ -68,8 +68,7 @@ class ElasticController:
             self.allocator.mark_failed(idx)
         event = {"step": step, "failed": list(failed),
                  "missed_heartbeat": silent,
-                 "healthy": len(self.allocator.healthy),
-                 "time": time.time()}
+                 "healthy": len(self.allocator.healthy)}
         if stats is not None and queries_left > 0:
             adm = self.allocator.readmit(queries_left, deadline_left, stats)
             event["readmission"] = {"cores": adm.cores,
@@ -98,8 +97,7 @@ class ElasticController:
         self.rescale_events.append(
             {"step": None, "failed": list(silent),
              "missed_heartbeat": list(silent),
-             "healthy": len(self.allocator.healthy),
-             "time": time.time()})
+             "healthy": len(self.allocator.healthy)})
         if self.on_rescale is not None:
             self.on_rescale(len(self.allocator.healthy))
         return silent

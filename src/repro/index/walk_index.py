@@ -106,6 +106,10 @@ class WalkIndex:
         for lo in range(0, width, lane_block):
             lane_ids = jnp.arange(lo, min(lo + lane_block, width),
                                   dtype=jnp.int32)
+            # dnalint: disable=prng-discipline -- deliberate shared stream:
+            # every block gets the same root key with disjoint lane_ids, and
+            # _build_block fold_ins the lane id, so lane streams are disjoint
+            # and bit-identical to the fused live path's
             blocks.append(_build_block(*arrays, starts, key, lane_ids,
                                        alpha=alpha, num_steps=num_steps))
         WalkIndex.builds += 1
@@ -177,6 +181,9 @@ class WalkIndex:
         for lo in range(0, self.width, _LANE_BLOCK):
             lane_ids = jnp.arange(lo, min(lo + _LANE_BLOCK, self.width),
                                   dtype=jnp.int32)
+            # dnalint: disable=prng-discipline -- same shared-stream contract
+            # as build(): one refresh key across blocks, lanes disambiguated
+            # by fold_in(lane_id) inside _build_block
             blocks.append(_build_block(*self.graph_arrays, starts, fresh,
                                        lane_ids, alpha=self.alpha,
                                        num_steps=self.num_steps))

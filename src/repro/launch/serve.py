@@ -29,6 +29,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
+from pathlib import Path
 
 
 def _print_mesh_plan(cores: int, max_lanes: int) -> None:
@@ -191,8 +193,32 @@ def _build_daemon_runtime(args):
                         cache=cache)
     if args.wal_dir:
         rt.attach_wal(WriteAheadLog(args.wal_dir),
-                      snapshot_every=args.snapshot_every)
+                      snapshot_every=args.snapshot_every,
+                      compact_keep=args.wal_compact_keep)
     return rt, factory, heartbeat
+
+
+def _lint_self(rules: tuple[str, ...] = ("replay-determinism",)):
+    """Run dnalint (tools/analysis) over the WAL-logged serving modules of
+    the *installed* repro package; returns the findings list. Used by
+    ``--lint-self`` to refuse attaching a WAL to a binary whose replay
+    determinism is statically broken. Returns None when the tools package
+    is not importable (installed wheel without the repo checkout)."""
+    import repro
+
+    # namespace package: no __file__, locate via __path__
+    pkg_root = Path(next(iter(repro.__path__))).resolve()   # .../src/repro
+    repo_root = pkg_root.parent.parent
+    if not (repo_root / "tools" / "analysis").is_dir():
+        return None
+    if str(repo_root) not in sys.path:
+        sys.path.insert(0, str(repo_root))
+    from tools.analysis import run_analysis
+
+    paths = [str(pkg_root / d) for d in ("serving", "ft", "checkpoint")
+             if (pkg_root / d).is_dir()]
+    report = run_analysis(paths, rules=list(rules), root=repo_root)
+    return report.findings
 
 
 def serve_daemon(args) -> None:
@@ -207,6 +233,25 @@ def serve_daemon(args) -> None:
     ``--chaos SPEC`` torments the run with seeded failures/slowdowns/
     crashes."""
     from ..serving import ServingRuntime
+
+    if args.lint_self:
+        findings = _lint_self()
+        if findings is None:
+            print("lint-self: tools/analysis not available "
+                  "(installed without the repo checkout)")
+        elif findings:
+            for f in findings:
+                print(f.render())
+            if args.wal_dir:
+                raise SystemExit(
+                    f"lint-self: {len(findings)} replay-determinism "
+                    f"finding(s) in the WAL-logged modules — refusing to "
+                    f"attach --wal-dir (recovery could not replay this "
+                    f"binary deterministically)")
+            print(f"lint-self: {len(findings)} finding(s) (no --wal-dir, "
+                  f"continuing)")
+        else:
+            print("lint-self: WAL-logged modules are replay-deterministic")
 
     if args.recover:
         if not args.wal_dir:
@@ -354,6 +399,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="daemon: full-state snapshot cadence in processed "
                          "events (0 = log-only; recovery then replays from "
                          "event zero)")
+    ap.add_argument("--wal-compact-keep", type=int, default=0,
+                    help="daemon: after each snapshot, retain this many "
+                         "restorable snapshots and truncate the WAL prefix "
+                         "they cover (0 = never compact; the log grows "
+                         "unbounded but replay-from-zero stays possible)")
+    ap.add_argument("--lint-self", action="store_true",
+                    help="daemon: run the dnalint replay-determinism rule "
+                         "over the WAL-logged serving modules before "
+                         "starting; with --wal-dir, findings refuse "
+                         "attachment")
     ap.add_argument("--recover", action="store_true",
                     help="daemon: resume from --wal-dir instead of "
                          "submitting new work; prints the replayed-event "

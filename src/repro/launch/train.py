@@ -90,8 +90,9 @@ def main() -> None:
     elif isinstance(arch, GNNArch):
         from ..models.gnn.common import random_graph_batch
         cfg = arch.make_smoke_cfg()
-        params = arch.model.init(key, cfg)
-        gb = random_graph_batch(key, 128, 512, cfg.d_in,
+        k_init, k_batch = jax.random.split(key)
+        params = arch.model.init(k_init, cfg)
+        gb = random_graph_batch(k_batch, 128, 512, cfg.d_in,
                                 n_classes=getattr(cfg, "n_classes", 2),
                                 with_positions=True)
 

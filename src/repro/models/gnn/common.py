@@ -93,7 +93,7 @@ def sym_norm_coeff(edge_index, edge_mask, n):
 def random_graph_batch(key, n, m, d_feat, *, n_graphs=1, with_positions=False,
                        d_edge=0, n_classes=7, dtype=jnp.float32) -> GraphBatch:
     """Random valid GraphBatch for smoke tests."""
-    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
     feat = jax.random.normal(k1, (n, d_feat), dtype)
     src = jax.random.randint(k2, (m,), 0, n)
     dst = jax.random.randint(k3, (m,), 0, n)
@@ -105,7 +105,7 @@ def random_graph_batch(key, n, m, d_feat, *, n_graphs=1, with_positions=False,
         positions=jax.random.normal(k4, (n, 3), dtype) if with_positions else None,
         graph_ids=(jnp.arange(n) % n_graphs).astype(jnp.int32),
         labels=jax.random.randint(k5, (n,), 0, n_classes),
-        edge_feat=(jax.random.normal(k5, (m, d_edge), dtype) if d_edge else None),
+        edge_feat=(jax.random.normal(k6, (m, d_edge), dtype) if d_edge else None),
         num_graphs=n_graphs,
     )
     return batch

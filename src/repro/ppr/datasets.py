@@ -13,6 +13,7 @@ deterministic per seed.
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -51,7 +52,9 @@ def synthesize(spec: DatasetSpec, scale: int = SCALE_DEFAULT,
                seed: int = 0, max_degree_cap: int | None = None) -> Graph:
     """Power-law stand-in graph at 1/scale of the paper's size."""
     n, m_target = spec.scaled(scale)
-    rng = np.random.default_rng(seed ^ hash(spec.name) & 0x7FFFFFFF)
+    # crc32, not hash(): str hashes are PYTHONHASHSEED-randomized, and the
+    # graph must be byte-identical across restarts for WAL replay
+    rng = np.random.default_rng(seed ^ zlib.crc32(spec.name.encode()))
     avg_deg = m_target / n
     # Out-degrees: lognormal with mean matched to avg_deg, clipped to [1, cap].
     sigma = spec.degree_sigma

@@ -241,6 +241,7 @@ class ServingRuntime:
         # -- durability (DESIGN.md §12) --
         self.wal: WriteAheadLog | None = None
         self._snapshot_every = 0
+        self._compact_keep = 0
         self.events_processed = 0          # total heap events handled
         self._replay_expect: deque[dict] = deque()   # logged events to verify
         self._in_replay = False            # current event is a replayed one
@@ -250,16 +251,25 @@ class ServingRuntime:
 
     # -- durability (DESIGN.md §12) ----------------------------------------
     def attach_wal(self, wal: WriteAheadLog, snapshot_every: int = 0,
-                   _log_init: bool = True) -> None:
+                   compact_keep: int = 0, _log_init: bool = True) -> None:
         """Start logging this runtime's inputs and events to ``wal``;
         snapshot full state every ``snapshot_every`` processed events
         (0 = never — recovery then replays from event 0). Must be attached
-        before any submission so the init record captures a clean slate."""
+        before any submission so the init record captures a clean slate.
+
+        ``compact_keep > 0`` bounds the log: after each snapshot the WAL
+        keeps the newest ``compact_keep`` restorable snapshots and truncates
+        the event prefix the oldest of them covers
+        (:meth:`WriteAheadLog.compact`). Recovery then starts from a
+        retained snapshot — replay-from-zero is gone, and ``recover``
+        refuses a log whose retained snapshots are all lost rather than
+        silently serving a partial history."""
         if _log_init and (self.jobs or self._heap):
             raise ValueError("attach_wal before submitting work — the WAL "
                              "must capture the runtime's inputs from zero")
         self.wal = wal
         self._snapshot_every = snapshot_every
+        self._compact_keep = int(compact_keep)
         if _log_init:
             alloc = self.pool.allocator
             cache = None
@@ -278,6 +288,7 @@ class ServingRuntime:
                           "walk_share": self.model.walk_share,
                           "index_coverage": self.model.index_coverage},
                 "snapshot_every": snapshot_every,
+                "compact_keep": int(compact_keep),
             })
 
     def _wal_note(self, what: str, **fields: Any) -> None:
@@ -483,13 +494,19 @@ class ServingRuntime:
 
     def snapshot(self) -> None:
         """Write a full-state checkpoint (atomic tmp-rename through
-        ``checkpoint.store``) and log it as the new compaction point."""
+        ``checkpoint.store``) and log it as the new compaction point. With
+        ``compact_keep`` set, also truncate the WAL prefix this (and the
+        other retained) snapshots cover and GC superseded snapshot dirs."""
         if self.wal is None:
             raise ValueError("no WAL attached")
         from ..checkpoint import store as ckpt_store
         leaves = pack_state(self._state_dict())
-        ckpt_store.save(self.wal.snapshot_dir, self.events_processed, leaves)
+        # the store's own age-out must never outpace the WAL's retention
+        ckpt_store.save(self.wal.snapshot_dir, self.events_processed, leaves,
+                        keep=max(3, self._compact_keep))
         self.wal.append({"type": "snapshot", "step": self.events_processed})
+        if self._compact_keep > 0:
+            self.wal.compact(keep=self._compact_keep)
 
     # -- state packing ------------------------------------------------------
     def _pack_payload(self, kind: str, payload: Any) -> Any:
@@ -569,6 +586,9 @@ class ServingRuntime:
             slot_exec = getattr(job.executor, "run_chunk", job.executor)
             job.stepper = SlotStepper.from_state(d["stepper"], slot_exec)
         if d["reissue_rng"] is not None:
+            # dnalint: disable=prng-discipline,replay-determinism -- shell
+            # generator only: its entropy-seeded state is overwritten from
+            # the snapshot on the next line before any draw
             job.reissue_rng = np.random.default_rng()
             job.reissue_rng.bit_generator.state = d["reissue_rng"]
         if self.cfg.stragglers and job.stepper is not None:
@@ -694,6 +714,7 @@ class ServingRuntime:
                  cache=cache, cost_model=model)
         wal = WriteAheadLog(wal_dir, fsync=fsync)
         rt.attach_wal(wal, snapshot_every=int(init.get("snapshot_every", 0)),
+                      compact_keep=int(init.get("compact_keep", 0)),
                       _log_init=False)
         rt._mute_wal = True
         try:
@@ -725,6 +746,14 @@ class ServingRuntime:
             rt._load_state(unpack_state(leaves))
             snap_step = int(step)
             break
+        if snap_step is None:
+            covered = max((int(r.get("covered", 0)) for r in records
+                           if r["type"] == "compact"), default=0)
+            if covered > 0:
+                raise ValueError(
+                    f"WAL at {wal_dir} was compacted past event {covered} "
+                    f"and no retained snapshot is restorable — the dropped "
+                    f"prefix cannot be replayed from zero")
         replay = deque(r for r in events
                        if int(r["n"]) > (snap_step or 0))
         rt._replay_expect = replay
@@ -936,7 +965,13 @@ class ServingRuntime:
             return
 
         ell, k = self._initial_grant(job, now, len(rest_ids))
-        self.pool.acquire(job.job_id, k)
+        if not self.pool.acquire(job.job_id, k):
+            # admission sized k against the pool it can see; a refusal here
+            # means the accounting diverged — proceeding would oversubscribe
+            raise RuntimeError(
+                f"pool refused k={k} for job {job.job_id} "
+                f"(free={self.pool.free}) — admission/pool accounting "
+                f"diverged")
         self._grant_peak[job.job_id] = k
         job.state = JobState.RUNNING
         job.slots_t0 = now + job.t_pre

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Any
@@ -70,6 +71,92 @@ class WriteAheadLog:
 
     def close(self) -> None:
         self._f.close()
+
+    def compact(self, keep: int = 1) -> dict:
+        """Truncate the log prefix covered by retained snapshots and delete
+        superseded snapshot directories.
+
+        Retains the newest ``keep`` *restorable* snapshots (manifest present
+        on disk); the oldest retained step becomes the cover point: event
+        records at or before it are dropped, input records (init/submit/
+        inject/slowdown) are always kept (recovery rebuilds the runtime from
+        them), and a ``compact`` marker records how far the prefix was
+        truncated so recovery can refuse a replay-from-zero it can no longer
+        perform. The rewrite is atomic (tmp + rename, same as checkpoint
+        dirs); snapshot directories are deleted only *after* the shortened
+        log is durable, so a crash mid-compaction leaves either the old log
+        with all snapshots or the new log with at worst orphan snapshot
+        dirs (removed by the next compaction).
+
+        Returns ``{"covered", "dropped_events", "dropped_snapshots"}``.
+        """
+        records = self.read(self.dir)
+        restorable: list[int] = []
+        for r in records:
+            if r["type"] == "snapshot":
+                step = int(r["step"])
+                if step not in restorable and \
+                        (self.snapshot_dir / f"step_{step:08d}" /
+                         "manifest.json").exists():
+                    restorable.append(step)
+        stats = {"covered": 0, "dropped_events": 0, "dropped_snapshots": 0}
+        if keep < 1 or not restorable:
+            return stats
+        retained = sorted(restorable)[-keep:]
+        cutoff = retained[0]
+        prior = max((int(r.get("covered", 0)) for r in records
+                     if r["type"] == "compact"), default=0)
+        covered = max(cutoff, prior)
+        # file position of the cover-point snapshot record: note/recover
+        # records before it describe the dropped prefix and go with it
+        cut_pos = next(i for i, r in enumerate(records)
+                       if r["type"] == "snapshot"
+                       and int(r["step"]) == cutoff)
+        kept: list[dict] = []
+        for i, r in enumerate(records):
+            t = r["type"]
+            if t == "init":
+                kept.append(r)
+                kept.append({"type": "compact", "covered": covered,
+                             "v": WAL_VERSION})
+            elif t == "compact":
+                continue                      # superseded by the new marker
+            elif t in ("submit", "inject", "slowdown"):
+                kept.append(r)
+            elif t == "snapshot":
+                if int(r["step"]) in retained:
+                    kept.append(r)
+                else:
+                    stats["dropped_snapshots"] += 1
+            elif t == "event":
+                if int(r["n"]) > covered:
+                    kept.append(r)
+                else:
+                    stats["dropped_events"] += 1
+            elif i > cut_pos:
+                kept.append(r)                # note/recover past the cover
+        stats["covered"] = covered
+        tmp = self.dir / (WAL_FILE + ".tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            for r in kept:
+                f.write(json.dumps(r, separators=(",", ":")) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        self._f.close()
+        os.replace(tmp, self.path)
+        dir_fd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(dir_fd)
+        finally:
+            os.close(dir_fd)
+        self._f = open(self.path, "a", encoding="utf-8")
+        # snapshots not retained are now unreferenced — including any the
+        # checkpoint store's own keep-GC would have aged out later
+        if self.snapshot_dir.is_dir():
+            for d in sorted(self.snapshot_dir.glob("step_*")):
+                if int(d.name.split("_")[1]) not in retained:
+                    shutil.rmtree(d, ignore_errors=True)
+        return stats
 
     @staticmethod
     def read(wal_dir: str | Path) -> list[dict]:

@@ -1,0 +1,12 @@
+"""Bad fixture: a suppression with no written justification is itself a
+finding (bare-suppression), and an aimless one is unused-suppression."""
+
+import numpy as np
+
+
+def entropy():
+    return np.random.default_rng()  # dnalint: disable=prng-discipline
+
+
+# dnalint: disable=host-sync -- nothing on the next line ever triggers this
+CONSTANT = 42

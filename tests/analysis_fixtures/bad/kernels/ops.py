@@ -1,0 +1,7 @@
+"""Dispatch layer for the bad fixture kernels — no shift() dispatch."""
+
+from .ref import unrelated_ref
+
+
+def unrelated(x):
+    return unrelated_ref(x)

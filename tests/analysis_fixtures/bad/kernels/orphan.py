@@ -1,0 +1,30 @@
+"""Bad fixture kernel module: a pallas_call with no public *_pallas
+wrapper, plus a wrapper with no oracle and no dispatch."""
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _double_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def _hidden(x):
+    # kernel reachable only through a private helper: unregistered
+    return pl.pallas_call(
+        _double_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def _shift_kernel(x_ref, o_ref, *, by):
+    o_ref[...] = x_ref[...] + by
+
+
+@functools.partial(jax.jit, static_argnames=("by",))
+def shift_pallas(x, by=1.0):
+    # no shift_ref in ref.py, no shift() in ops.py
+    return pl.pallas_call(
+        functools.partial(_shift_kernel, by=by),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

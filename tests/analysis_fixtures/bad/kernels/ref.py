@@ -1,0 +1,5 @@
+"""Oracles for the bad fixture kernels — deliberately missing shift_ref."""
+
+
+def unrelated_ref(x):
+    return x

@@ -1,0 +1,29 @@
+"""Bad fixture: pool-accounting violations — ignored grant bool, a leak on
+an exit path, an unprotected raise window, and a class that only takes."""
+
+from repro.serving import CorePool
+
+
+def ignored_grant(pool, job_id):
+    pool.acquire(job_id, 4)              # all-or-nothing bool dropped
+    return job_id
+
+
+def leaky(work):
+    pool = CorePool.of(8)
+    if not pool.acquire("job", 4):
+        return None
+    out = work()                         # raise here leaks the grant
+    if out is None:
+        return None                      # exit path without release
+    pool.release("job")
+    return out
+
+
+class Taker:
+    def __init__(self, pool):
+        self.pool = pool
+
+    def grab(self, job_id):
+        return self.pool.reserve(job_id, 2) and job_id
+        # no unreserve/release anywhere in the class

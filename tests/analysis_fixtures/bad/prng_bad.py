@@ -1,0 +1,30 @@
+"""Bad fixture: PRNG discipline violations (prng-discipline must flag
+each function here)."""
+
+import jax
+import numpy as np
+
+
+def reuse(key, n):
+    a = jax.random.normal(key, (n,))             # first draw
+    b = jax.random.uniform(key, (n,))            # same key drawn again
+    return a + b
+
+
+def loop_reuse(key, steps):
+    outs = []
+    for _ in range(steps):
+        outs.append(jax.random.normal(key, ()))  # same stream every iter
+    return outs
+
+
+def entropy():
+    return np.random.default_rng()               # unseeded: OS entropy
+
+
+def legacy(n):
+    return np.random.rand(n)                     # hidden global state
+
+
+def hash_seeded(name: str):
+    return np.random.default_rng(hash(name))     # PYTHONHASHSEED-randomized

@@ -1,0 +1,30 @@
+"""Bad fixture: nondeterminism in a WAL-logged module (replay-determinism
+must flag every construct here)."""
+
+import os
+import random
+import time
+import uuid
+
+import numpy as np
+
+
+def stamp(event):
+    event["time"] = time.time()                  # wall clock
+    return event
+
+
+def token():
+    return uuid.uuid4().hex + os.urandom(4).hex()  # unreplayable entropy
+
+
+def jitter():
+    rng = np.random.default_rng()                # unseeded: OS entropy
+    return rng.standard_normal() + random.random()  # stdlib global stream
+
+
+def drain(pending: set):
+    out = []
+    for item in pending:                         # set iteration order
+        out.append(item)
+    return out + list({1, 2, 3})                 # list(set) materializes

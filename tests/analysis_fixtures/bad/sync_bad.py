@@ -1,0 +1,20 @@
+"""Bad fixture: host-synchronizing constructs inside traced code
+(host-sync must flag each)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _norm(x):
+    s = x.sum().item()                   # device->host sync in traced callee
+    return x / s
+
+
+@jax.jit
+def fused(x):
+    y = jnp.tanh(x)
+    print("debug:", y)                   # prints a tracer, syncs every call
+    host = np.asarray(y)                 # silent device_get
+    z = _norm(y)
+    return z * float(y[0]) + host.sum() + jax.device_get(y)[0]

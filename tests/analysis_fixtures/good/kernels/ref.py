@@ -1,0 +1,5 @@
+"""Pure-jnp oracles for the good fixture kernels."""
+
+
+def scale_ref(x, factor=2.0):
+    return x * factor

@@ -1,0 +1,17 @@
+"""Good fixture kernel module: wrapper + oracle + dispatch all present."""
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _scale_kernel(x_ref, o_ref, *, factor):
+    o_ref[...] = x_ref[...] * factor
+
+
+@functools.partial(jax.jit, static_argnames=("factor",))
+def scale_pallas(x, factor=2.0):
+    return pl.pallas_call(
+        functools.partial(_scale_kernel, factor=factor),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

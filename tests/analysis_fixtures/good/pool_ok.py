@@ -1,0 +1,27 @@
+"""Good fixture: pool grants checked, paired, and crash-safe —
+pool-accounting must stay quiet."""
+
+from repro.serving import CorePool
+
+
+def run_job(work):
+    pool = CorePool.of(8)
+    if not pool.acquire("job", 4):
+        return None
+    try:
+        return work()
+    finally:
+        pool.release("job")
+
+
+class Scheduler:
+    def __init__(self, pool):
+        self.pool = pool
+
+    def grant(self, job_id, k):
+        if self.pool.acquire(job_id, k):
+            return k
+        return 0
+
+    def done(self, job_id):
+        self.pool.release(job_id)

@@ -1,0 +1,30 @@
+"""Good fixture: disciplined PRNG use — split/fold_in before every draw,
+branches are exclusive, and one draw per derived key."""
+
+import jax
+import numpy as np
+
+
+def draw(key, n, fast=False):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (n,))
+    if fast:
+        return a + jax.random.uniform(k2, (n,))
+    return a - jax.random.uniform(k2, (n,))      # exclusive branch: same k2 ok
+
+
+def early_out(key, n, cheap=False):
+    if cheap:
+        return jax.random.uniform(key, (n,))     # returns: doesn't flow on
+    return jax.random.normal(key, (n,))
+
+
+def per_step(key, steps):
+    outs = []
+    for i in range(steps):
+        outs.append(jax.random.normal(jax.random.fold_in(key, i), ()))
+    return outs
+
+
+def host_stream(seed: int):
+    return np.random.default_rng(np.random.SeedSequence([seed, 17]))

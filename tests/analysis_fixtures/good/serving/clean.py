@@ -1,0 +1,18 @@
+"""Good fixture: a WAL-logged module that stays replay-deterministic."""
+
+import numpy as np
+
+
+def pick(items):
+    # sorted() iteration over a set is deterministic
+    pending = {3, 1, 2}
+    order = sorted(pending)
+    rng = np.random.default_rng(7)
+    return order[int(rng.integers(len(order)))]
+
+
+def drain(events):
+    total = 0
+    for ev in events:          # list iteration: ordered, fine
+        total += ev["n"]
+    return total

@@ -1,0 +1,24 @@
+"""Good fixture: violations silenced by *justified* suppressions — both the
+trailing and the comment-above form, plus a wrapped multi-line reason."""
+
+import jax
+import numpy as np
+
+
+def entropy_shell(state):
+    rng = np.random.default_rng()  # dnalint: disable=prng-discipline -- shell generator; state overwritten below
+    rng.bit_generator.state = state
+    return rng
+
+
+def shared_stream(key, blocks):
+    outs = []
+    for lane in blocks:
+        # dnalint: disable=prng-discipline -- deliberate shared stream: the
+        # callee fold_ins the lane id, so per-lane substreams are disjoint
+        outs.append(_draw_block(key, lane))
+    return outs
+
+
+def _draw_block(key, lane):
+    return jax.random.normal(jax.random.fold_in(key, lane), ())

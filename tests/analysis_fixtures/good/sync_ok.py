@@ -1,0 +1,24 @@
+"""Good fixture: host syncs only *outside* traced code, casts only on
+statics — host-sync must stay quiet."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def scaled(x, n):
+    return x * float(n)                  # cast on a static: resolved at trace
+
+
+@jax.jit
+def fused(x):
+    return jnp.tanh(x) * 2.0
+
+
+def readout(x):
+    # not reachable from any jit root: sync here is the sanctioned readout
+    y = fused(x)
+    return float(np.asarray(jax.device_get(y)).sum()), y.sum().item()

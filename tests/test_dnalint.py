@@ -1,0 +1,185 @@
+"""dnalint (tools/analysis): every rule fires on its seeded bad fixture and
+stays quiet on the good twin; suppressions need written reasons; the
+committed baseline round-trips; and the repo's own src/ tree is clean —
+the CI gate this suite pins."""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = REPO_ROOT / "tests" / "analysis_fixtures"
+
+sys.path.insert(0, str(REPO_ROOT))
+
+from tools.analysis import run_analysis, write_baseline  # noqa: E402
+
+ALL_RULES = {"host-sync", "prng-discipline", "replay-determinism",
+             "pool-accounting", "kernel-registration"}
+
+
+def _rules_hit(report):
+    return {f.rule for f in report.findings}
+
+
+# ---------------------------------------------------------------------------
+# fixtures: bad fires, good is quiet
+
+
+def test_every_rule_fires_on_bad_fixtures():
+    report = run_analysis([str(FIXTURES / "bad")], root=REPO_ROOT)
+    assert ALL_RULES <= _rules_hit(report)
+    assert report.exit_code == 1
+
+
+def test_good_fixtures_are_clean():
+    report = run_analysis([str(FIXTURES / "good")], root=REPO_ROOT)
+    assert report.findings == []
+    assert report.exit_code == 0
+
+
+@pytest.mark.parametrize("rule,path,min_findings", [
+    ("host-sync", "bad/sync_bad.py", 4),
+    ("prng-discipline", "bad/prng_bad.py", 5),
+    ("replay-determinism", "bad/serving/clock.py", 6),
+    ("pool-accounting", "bad/pool_bad.py", 3),
+    ("kernel-registration", "bad/kernels", 2),
+])
+def test_rule_coverage_per_fixture(rule, path, min_findings):
+    report = run_analysis([str(FIXTURES / path)], rules=[rule],
+                          root=REPO_ROOT)
+    mine = [f for f in report.findings if f.rule == rule]
+    assert len(mine) >= min_findings, \
+        f"{rule} found only {len(mine)} on {path}"
+
+
+def test_orphan_pallas_call_is_flagged():
+    report = run_analysis([str(FIXTURES / "bad" / "kernels")],
+                          rules=["kernel-registration"], root=REPO_ROOT)
+    msgs = " | ".join(f.message for f in report.findings)
+    assert "no oracle" in msgs and "no dispatch" in msgs
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+
+def test_justified_suppressions_silence_and_bare_ones_report():
+    good = run_analysis([str(FIXTURES / "good" / "suppressed_ok.py")],
+                        root=REPO_ROOT)
+    assert good.findings == []
+    assert len(good.suppressed) == 2         # trailing + comment-above forms
+
+    bad = run_analysis([str(FIXTURES / "bad" / "bare_suppress.py")],
+                       root=REPO_ROOT)
+    rules = [f.rule for f in bad.findings]
+    assert "bare-suppression" in rules
+    assert "unused-suppression" in rules
+
+
+def test_unused_suppression_not_flagged_on_partial_runs():
+    # running a single rule can't prove a suppression aimless
+    rep = run_analysis([str(FIXTURES / "bad" / "bare_suppress.py")],
+                       rules=["host-sync"], root=REPO_ROOT)
+    assert "unused-suppression" not in [f.rule for f in rep.findings]
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+
+def test_baseline_round_trip(tmp_path):
+    target = str(FIXTURES / "bad" / "prng_bad.py")
+    first = run_analysis([target], root=REPO_ROOT)
+    assert first.findings
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, first.findings)
+
+    second = run_analysis([target], root=REPO_ROOT, baseline=bl)
+    assert second.findings == []             # everything accepted
+    assert len(second.baselined) == len(first.findings)
+
+    # a NEW violation in a baselined file still surfaces
+    src = Path(target).read_text()
+    mutated = tmp_path / "prng_bad.py"
+    mutated.write_text(src + "\n\ndef fresh():\n"
+                             "    import numpy as np\n"
+                             "    return np.random.default_rng()\n")
+    third = run_analysis([str(mutated)], root=tmp_path, baseline=bl)
+    assert any("unseeded" in f.message and f.line > len(src.splitlines())
+               for f in third.findings)
+
+
+# ---------------------------------------------------------------------------
+# the repo gate
+
+
+def test_repo_src_is_clean_under_committed_baseline():
+    """The PR contract: src/ has zero un-suppressed, un-baselined findings.
+    If this fails, fix the violation or suppress it with a written reason —
+    do not stuff the baseline."""
+    report = run_analysis(["src"], root=REPO_ROOT,
+                          baseline=REPO_ROOT / "tools" / "analysis" /
+                          "baseline.json")
+    rendered = "\n".join(f.render() for f in report.findings)
+    assert report.exit_code == 0, f"dnalint findings in src/:\n{rendered}"
+
+
+def test_committed_baseline_is_empty():
+    data = json.loads((REPO_ROOT / "tools" / "analysis" /
+                       "baseline.json").read_text())
+    assert data["fingerprints"] == []        # no accepted debt
+
+
+# ---------------------------------------------------------------------------
+# CLI
+
+
+def test_cli_json_output():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--json",
+         str(FIXTURES / "bad" / "pool_bad.py")],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    assert payload["findings"]
+    assert {"rule", "path", "line", "message"} <= set(payload["findings"][0])
+
+
+def test_cli_rule_filter_and_exit_zero():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--rule", "host-sync",
+         str(FIXTURES / "bad" / "pool_bad.py")],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0              # pool findings filtered out
+
+
+# ---------------------------------------------------------------------------
+# serve --lint-self
+
+
+def test_lint_self_clean_on_this_repo():
+    from repro.launch.serve import _lint_self
+
+    findings = _lint_self()
+    assert findings == []
+
+
+def test_lint_self_refuses_wal_dir_on_findings(tmp_path, monkeypatch):
+    from repro.launch import serve
+
+    class FakeFinding:
+        def render(self):
+            return "fake finding"
+
+    monkeypatch.setattr(serve, "_lint_self",
+                        lambda rules=("replay-determinism",): [FakeFinding()])
+    argv = ["--daemon", "--lint-self", "--wal-dir", str(tmp_path / "wal"),
+            "--num-jobs", "1"]
+    with pytest.raises(SystemExit, match="refusing"):
+        serve.main(argv)

@@ -1,0 +1,150 @@
+"""WAL snapshot GC + prefix compaction (DESIGN.md §12): with
+``compact_keep`` set the log is bounded — the prefix covered by retained
+snapshots is truncated and superseded snapshot dirs are deleted — while
+recovery stays bit-for-bit: it resumes from a retained snapshot, falls back
+to an older retained one if the newest is lost, and *refuses* (rather than
+silently mis-serving) when the compacted prefix would have to be replayed
+from zero."""
+
+from __future__ import annotations
+
+import shutil
+
+import pytest
+
+from repro.serving import (CorePool, JobState, ServingConfig, ServingRuntime,
+                           SimJobExecutor, WriteAheadLog)
+
+
+def _factory(mean=0.05, cv=0.3):
+    return lambda job_id, nq, sd: SimJobExecutor(mean=mean, cv=cv, seed=sd)
+
+
+def _runtime(wal_dir=None, *, snapshot_every=5, compact_keep=0):
+    rt = ServingRuntime(
+        CorePool.of(8), _factory(),
+        ServingConfig(scaling_factor=0.9, sample_frac=0.05))
+    if wal_dir is not None:
+        rt.attach_wal(WriteAheadLog(wal_dir, fsync=False),
+                      snapshot_every=snapshot_every,
+                      compact_keep=compact_keep)
+    return rt
+
+
+def _submit_small(rt, num_jobs=4):
+    rt.submit_poisson(num_jobs, 1.2, queries=(10, 25), deadline=(2.0, 4.0),
+                      seed=3)
+
+
+def _reference():
+    rt = _runtime()
+    _submit_small(rt)
+    return rt.run(), rt.events_processed
+
+
+def test_compaction_truncates_covered_prefix(tmp_path):
+    ref, _ = _reference()
+
+    rt = _runtime(tmp_path, compact_keep=1)
+    _submit_small(rt)
+    assert rt.run(max_events=12) is None          # snapshots at 5 and 10
+    records = WriteAheadLog.read(tmp_path)
+    snaps = [r["step"] for r in records if r["type"] == "snapshot"]
+    assert snaps == [10]                          # snapshot 5 superseded
+    compacts = [r for r in records if r["type"] == "compact"]
+    assert len(compacts) == 1 and compacts[0]["covered"] == 10
+    assert all(int(r["n"]) > 10 for r in records
+               if r["type"] == "event")           # covered prefix is gone
+    dirs = sorted(d.name for d in rt.wal.snapshot_dir.glob("step_*"))
+    assert dirs == ["step_00000010"]              # superseded dir deleted
+    # inputs survive compaction — recovery rebuilds from them
+    assert sum(r["type"] == "submit" for r in records) == 4
+
+    rt2, info = ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+    assert info.snapshot_step == 10
+    assert info.replayed_events == 2              # events 11..12
+    rep = rt2.run()
+    assert rep.records == ref.records
+    assert rep.end_time == ref.end_time
+
+
+def test_compaction_crash_anywhere_matches_reference(tmp_path):
+    """The PR-6 crash-transparency property must hold with compaction on:
+    crash after every event prefix, recover from the truncated log, finish —
+    records bit-identical to the uncompacted, uncrashed run."""
+    ref, total = _reference()
+    assert total > 10
+
+    for point in range(1, total):
+        wal_dir = tmp_path / f"crash_{point:03d}"
+        rt = _runtime(wal_dir, compact_keep=1)
+        _submit_small(rt)
+        assert rt.run(max_events=point) is None
+        rt2, info = ServingRuntime.recover(wal_dir, _factory(), fsync=False)
+        rep = rt2.run()
+        assert rep.records == ref.records, f"diverged after crash @ {point}"
+        assert all(j.state is JobState.DONE for j in rt2.jobs)
+
+
+def test_compaction_fallback_to_older_retained(tmp_path):
+    """Losing the newest retained snapshot degrades to the next older
+    *retained* one — still inside the compacted log's replayable suffix."""
+    ref, _ = _reference()
+
+    rt = _runtime(tmp_path, compact_keep=2)
+    _submit_small(rt)
+    assert rt.run(max_events=12) is None          # retained: steps 5, 10
+    shutil.rmtree(rt.wal.snapshot_dir / "step_00000010")
+    rt2, info = ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+    assert info.snapshot_step == 5
+    assert info.replayed_events == 7              # events 6..12
+    rep = rt2.run()
+    assert rep.records == ref.records
+
+
+def test_compacted_log_with_all_snapshots_lost_raises(tmp_path):
+    """Without compaction, losing every snapshot degrades to replay-from-
+    zero (PR-6 contract). With compaction the zero prefix no longer exists,
+    so recovery must refuse loudly instead of replaying a partial history."""
+    rt = _runtime(tmp_path, compact_keep=1)
+    _submit_small(rt)
+    assert rt.run(max_events=12) is None
+    shutil.rmtree(rt.wal.snapshot_dir)
+    with pytest.raises(ValueError, match="compacted"):
+        ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+
+
+def test_compact_noop_without_restorable_snapshots(tmp_path):
+    wal = WriteAheadLog(tmp_path, fsync=False)
+    wal.append({"type": "init", "config": {}})
+    for i in range(3):
+        wal.append({"type": "event", "n": i + 1})
+    before = WriteAheadLog.read(tmp_path)
+    stats = wal.compact(keep=1)
+    assert stats == {"covered": 0, "dropped_events": 0,
+                     "dropped_snapshots": 0}
+    assert WriteAheadLog.read(tmp_path) == before
+
+
+def test_compact_is_idempotent(tmp_path):
+    rt = _runtime(tmp_path, compact_keep=1)
+    _submit_small(rt)
+    assert rt.run(max_events=12) is None
+    before = WriteAheadLog.read(tmp_path)
+    stats = rt.wal.compact(keep=1)
+    assert stats["dropped_events"] == 0 and stats["dropped_snapshots"] == 0
+    assert WriteAheadLog.read(tmp_path) == before
+
+
+def test_compact_keep_persists_across_recovery(tmp_path):
+    """compact_keep rides in the init record: a recovered daemon keeps
+    compacting at the cadence the crashed one was configured with."""
+    rt = _runtime(tmp_path, compact_keep=1)
+    _submit_small(rt)
+    assert rt.run(max_events=7) is None
+    rt2, _ = ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+    assert rt2._compact_keep == 1
+    rt2.run()
+    records = WriteAheadLog.read(tmp_path)
+    snaps = [r["step"] for r in records if r["type"] == "snapshot"]
+    assert len(snaps) == 1                        # still compacting to 1

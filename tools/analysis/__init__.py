@@ -1,0 +1,17 @@
+"""dnalint — static enforcement of this repo's runtime contracts.
+
+``python -m tools.analysis`` (see ``__main__``) or programmatically:
+
+    from tools.analysis import run_analysis
+    report = run_analysis(["src"], root=REPO_ROOT, baseline=...)
+
+Rules (DESIGN.md §13): host-sync, prng-discipline, replay-determinism,
+pool-accounting, kernel-registration — plus engine-level parse-error /
+bare-suppression / unused-suppression hygiene.
+"""
+
+from .core import (Finding, Project, Report, RULES, run_analysis,
+                   write_baseline)
+
+__all__ = ["Finding", "Project", "Report", "RULES", "run_analysis",
+           "write_baseline"]

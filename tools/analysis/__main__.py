@@ -1,0 +1,84 @@
+"""dnalint CLI.
+
+    python -m tools.analysis [PATH ...] [--rule R]... [--baseline FILE]
+                             [--write-baseline] [--json] [--list-rules]
+
+Default scan set is ``src/`` under --root (default: cwd). Exit codes:
+0 clean, 1 active findings, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .core import RULES, run_analysis, write_baseline
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="dnalint: repo-specific invariant analyzer "
+                    "(host-sync / prng-discipline / replay-determinism / "
+                    "pool-accounting / kernel-registration)")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to scan (default: src/)")
+    ap.add_argument("--rule", action="append", default=None,
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="JSON baseline of accepted findings to subtract")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite --baseline with the current findings")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--root", default=".",
+                    help="project root for relative paths + fingerprints")
+    args = ap.parse_args(argv)
+
+    from . import rules as _rules  # noqa: F401  (register before --list)
+    if args.list_rules:
+        for name in sorted(RULES):
+            doc = (sys.modules[RULES[name].__module__].__doc__ or "")
+            head = doc.strip().splitlines()[0] if doc else ""
+            print(f"{name:20s} {head}")
+        return 0
+
+    root = Path(args.root).resolve()
+    paths = args.paths or (["src"] if (root / "src").is_dir() else ["."])
+    try:
+        report = run_analysis(paths, rules=args.rule, root=root,
+                              baseline=None if args.write_baseline
+                              else args.baseline)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        if not args.baseline:
+            print("error: --write-baseline needs --baseline FILE",
+                  file=sys.stderr)
+            return 2
+        write_baseline(Path(args.baseline), report.findings)
+        print(f"wrote {len(report.findings)} fingerprint(s) to "
+              f"{args.baseline}")
+        return 0
+
+    if args.as_json:
+        print(json.dumps(report.to_json(), indent=2))
+    else:
+        for f in report.findings:
+            print(f.render())
+        tail = (f"dnalint: {len(report.findings)} finding(s) "
+                f"({len(report.suppressed)} suppressed, "
+                f"{len(report.baselined)} baselined) over "
+                f"{report.files_scanned} file(s), "
+                f"rules: {', '.join(report.rules)}")
+        print(tail)
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,299 @@
+"""Import-aware function index, traced-root detection and reachability.
+
+"Traced" means the function body runs under ``jax.jit`` tracing (or is a
+Pallas kernel body): host-synchronizing constructs inside it either crash
+at trace time or — worse — silently pull values to the host on every call,
+which is exactly what the fused FORA path's transfer-guard contract forbids
+(DESIGN.md §7). The host-sync rule needs the *closure* of those roots, so
+this module resolves direct calls across the scanned file set:
+
+- ``Name()`` calls to functions in the same module (top-level or nested) or
+  imported via ``from x import f``,
+- ``alias.f()`` calls through ``import x as alias`` / ``from pkg import x``,
+- ``self.m()`` calls to methods of the enclosing class.
+
+Resolution is best-effort and *under*-approximate by design: an unresolved
+call is simply not followed (never a false positive, possibly a miss).
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from .core import Project, SourceFile
+
+
+@dataclass(frozen=True)
+class FuncInfo:
+    file: SourceFile
+    node: ast.FunctionDef | ast.AsyncFunctionDef = field(hash=False,
+                                                         compare=False)
+    qualname: str = ""
+    cls: str | None = None
+
+    def __hash__(self):
+        return hash((self.file.rel, self.qualname, self.node.lineno))
+
+    def __eq__(self, other):
+        return (isinstance(other, FuncInfo)
+                and (self.file.rel, self.qualname, self.node.lineno)
+                == (other.file.rel, other.qualname, other.node.lineno))
+
+
+def dotted(node: ast.expr) -> list[str] | None:
+    """``a.b.c`` -> ["a","b","c"]; None for anything not a pure name chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+class ModuleIndex:
+    """Per-file function/method tables and the import alias map."""
+
+    def __init__(self, project: Project, sf: SourceFile):
+        self.sf = sf
+        self.functions: dict[str, FuncInfo] = {}     # name -> first def
+        self.methods: dict[tuple[str, str], FuncInfo] = {}
+        self.module_aliases: dict[str, SourceFile | None] = {}
+        self.object_imports: dict[str, tuple[SourceFile | None, str]] = {}
+        self.import_names: set[str] = set()          # all imported aliases
+        self.constants: dict[str, ast.expr] = {}     # module-level assigns
+        if sf.tree is None:
+            return
+        self._index(project, sf.tree)
+
+    def _index(self, project: Project, tree: ast.Module) -> None:
+        for node in tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                self.constants[node.targets[0].id] = node.value
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                cls = None
+                # class methods get a Class.name qualname via a second pass
+                self.functions.setdefault(
+                    node.name, FuncInfo(self.sf, node, node.name, cls))
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    name = alias.asname or alias.name.split(".")[0]
+                    self.import_names.add(name)
+                    target = project.resolve_module(
+                        self.sf, alias.name if alias.asname else name)
+                    self.module_aliases[name] = target
+            elif isinstance(node, ast.ImportFrom):
+                base = project.resolve_module(self.sf, node.module or "",
+                                              node.level)
+                for alias in node.names:
+                    name = alias.asname or alias.name
+                    self.import_names.add(name)
+                    # "from pkg import mod" may name a module, not an object
+                    sub = None
+                    if node.module is not None or node.level:
+                        sub = project.resolve_module(
+                            self.sf,
+                            f"{node.module}.{alias.name}" if node.module
+                            else alias.name, node.level)
+                    if sub is not None:
+                        self.module_aliases[name] = sub
+                    else:
+                        self.object_imports[name] = (base, alias.name)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        info = FuncInfo(self.sf, sub,
+                                        f"{node.name}.{sub.name}", node.name)
+                        self.methods[(node.name, sub.name)] = info
+                        self.functions[sub.name] = info
+
+    def aliases_of(self, *module_names: str) -> set[str]:
+        """Local aliases bound to any of the given external module names
+        (e.g. aliases_of("numpy") -> {"np"})."""
+        out: set[str] = set()
+        if self.sf.tree is None:
+            return out
+        for node in ast.walk(self.sf.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name in module_names or \
+                            alias.name.split(".")[0] in module_names:
+                        out.add(alias.asname or alias.name.split(".")[0])
+        return out
+
+
+class CallGraph:
+    def __init__(self, project: Project):
+        self.project = project
+        self.modules: dict[str, ModuleIndex] = {
+            sf.rel: ModuleIndex(project, sf) for sf in project.files}
+
+    def index(self, sf: SourceFile) -> ModuleIndex:
+        return self.modules[sf.rel]
+
+    # -- traced roots -------------------------------------------------------
+    def traced_roots(self) -> list[tuple[FuncInfo, set[str] | None, str]]:
+        """(function, static param names or None=unknown, why) for every
+        function whose body is traced: ``jax.jit`` decorated/wrapped, a
+        Pallas ``*_kernel`` body in a kernels/ dir, or the callee of a
+        ``pallas_call``."""
+        roots: dict[FuncInfo, tuple[set[str] | None, str]] = {}
+        for sf in self.project.files:
+            if sf.tree is None:
+                continue
+            mi = self.index(sf)
+            in_kernels = "kernels" in sf.rel.split("/")
+            for node in ast.walk(sf.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        statics = self._jit_statics(mi, dec, node)
+                        if statics is not NOT_JIT:
+                            info = mi.functions.get(node.name)
+                            if info is not None and info.node is node:
+                                roots.setdefault(info, (statics, "jax.jit"))
+                    if in_kernels and node.name.endswith("_kernel"):
+                        info = mi.functions.get(node.name)
+                        if info is not None and info.node is node:
+                            roots.setdefault(info, (None, "pallas kernel"))
+                elif isinstance(node, ast.Call):
+                    callee = dotted(node.func)
+                    if callee and callee[-1] == "jit" and node.args:
+                        target = self._name_of(node.args[0])
+                        if target and target in mi.functions:
+                            statics = self._statics_from_call(mi, node)
+                            roots.setdefault(mi.functions[target],
+                                             (statics, "jax.jit"))
+                    if callee and callee[-1] == "pallas_call" and node.args:
+                        target = self._name_of(node.args[0])
+                        if target and target in mi.functions:
+                            roots.setdefault(mi.functions[target],
+                                             (None, "pallas_call"))
+        return [(info, statics, why)
+                for info, (statics, why) in roots.items()]
+
+    @staticmethod
+    def _name_of(node: ast.expr) -> str | None:
+        if isinstance(node, ast.Name):
+            return node.id
+        # functools.partial(kernel_fn, ...) passed to pallas_call
+        if isinstance(node, ast.Call) and node.args and \
+                isinstance(node.args[0], ast.Name):
+            callee = dotted(node.func)
+            if callee and callee[-1] == "partial":
+                return node.args[0].id
+        return None
+
+    def _jit_statics(self, mi: ModuleIndex, dec: ast.expr,
+                     fn: ast.FunctionDef):
+        """NOT_JIT if the decorator isn't a jit form; else the static param
+        names (None = jit but statics unresolvable)."""
+        chain = dotted(dec)
+        if chain and chain[-1] == "jit":
+            return set()
+        if isinstance(dec, ast.Call):
+            chain = dotted(dec.func)
+            if chain and chain[-1] == "jit":
+                return self._statics_from_call(mi, dec, fn)
+            if chain and chain[-1] == "partial" and dec.args:
+                inner = dotted(dec.args[0])
+                if inner and inner[-1] == "jit":
+                    return self._statics_from_call(mi, dec, fn)
+        return NOT_JIT
+
+    def _statics_from_call(self, mi: ModuleIndex, call: ast.Call,
+                           fn: ast.FunctionDef | None = None):
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                names = self._literal_strs(mi, kw.value)
+                return names if names is not None else None
+            if kw.arg == "static_argnums" and fn is not None:
+                nums = self._literal_ints(mi, kw.value)
+                if nums is None:
+                    return None
+                params = [a.arg for a in fn.args.args]
+                return {params[i] for i in nums if i < len(params)}
+        return set()
+
+    def _literal_strs(self, mi: ModuleIndex, node: ast.expr):
+        if isinstance(node, ast.Name):
+            node = mi.constants.get(node.id, node)
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return {node.value}
+        if isinstance(node, (ast.Tuple, ast.List)):
+            out = set()
+            for el in node.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    out.add(el.value)
+                else:
+                    return None
+            return out
+        return None
+
+    def _literal_ints(self, mi: ModuleIndex, node: ast.expr):
+        if isinstance(node, ast.Name):
+            node = mi.constants.get(node.id, node)
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return {node.value}
+        if isinstance(node, (ast.Tuple, ast.List)):
+            out = set()
+            for el in node.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                    out.add(el.value)
+                else:
+                    return None
+            return out
+        return None
+
+    # -- reachability -------------------------------------------------------
+    def reachable(self, roots: list[FuncInfo]) -> dict[FuncInfo, FuncInfo]:
+        """BFS closure over resolvable calls; maps each reached function to
+        the root it is reachable from."""
+        owner: dict[FuncInfo, FuncInfo] = {r: r for r in roots}
+        frontier = list(roots)
+        while frontier:
+            cur = frontier.pop()
+            for callee in self._callees(cur):
+                if callee not in owner:
+                    owner[callee] = owner[cur]
+                    frontier.append(callee)
+        return owner
+
+    def _callees(self, info: FuncInfo) -> list[FuncInfo]:
+        mi = self.index(info.file)
+        out: list[FuncInfo] = []
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Name):
+                if fn.id in mi.functions:
+                    out.append(mi.functions[fn.id])
+                elif fn.id in mi.object_imports:
+                    src, name = mi.object_imports[fn.id]
+                    if src is not None:
+                        tgt = self.index(src).functions.get(name)
+                        if tgt is not None:
+                            out.append(tgt)
+            elif isinstance(fn, ast.Attribute):
+                base = fn.value
+                if isinstance(base, ast.Name):
+                    if base.id == "self" and info.cls is not None:
+                        tgt = mi.methods.get((info.cls, fn.attr))
+                        if tgt is not None:
+                            out.append(tgt)
+                    elif base.id in mi.module_aliases:
+                        src = mi.module_aliases[base.id]
+                        if src is not None:
+                            tgt = self.index(src).functions.get(fn.attr)
+                            if tgt is not None:
+                                out.append(tgt)
+        return out
+
+
+NOT_JIT = object()

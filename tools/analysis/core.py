@@ -1,0 +1,289 @@
+"""dnalint engine: file collection, suppressions, baseline, rule registry.
+
+The rules themselves live in :mod:`tools.analysis.rules`; each registers a
+``(project) -> list[Finding]`` callable here. The engine owns everything
+rule-agnostic:
+
+- collecting ``*.py`` sources into a :class:`Project` (parsed once),
+- inline suppressions — ``# dnalint: disable=RULE[,RULE2] -- reason`` on
+  the offending line, or on a comment-only line directly above it. A
+  suppression *without* a reason is itself a finding (``bare-suppression``),
+  and a suppression that matches nothing is flagged (``unused-suppression``)
+  when the full rule set runs,
+- the committed findings baseline: content-addressed fingerprints
+  (rule + relative path + stripped source line) so unrelated line drift
+  does not churn the file, with multiplicity for repeated identical lines.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from collections import Counter
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Iterable
+
+SUPPRESS_RE = re.compile(
+    r"#\s*dnalint:\s*disable=([A-Za-z0-9_*,\- ]+?)"
+    r"(?:\s*--\s*(.+?))?\s*$")
+
+BASELINE_VERSION = 1
+
+# rule name -> rule(project) -> list[Finding]; populated by tools.analysis.rules
+RULES: dict[str, Callable[["Project"], list["Finding"]]] = {}
+
+
+def rule(name: str):
+    """Decorator registering a rule under ``name``."""
+    def deco(fn):
+        RULES[name] = fn
+        fn.rule_name = name
+        return fn
+    return deco
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # project-root-relative posix path
+    line: int          # 1-based
+    message: str
+    snippet: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}::{self.path}::{self.snippet.strip()}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class Suppression:
+    rules: frozenset[str]
+    reason: str | None
+    line: int          # line the comment sits on
+    target: int        # line a finding must sit on to be covered
+    used: bool = False
+
+    def covers(self, f: Finding) -> bool:
+        return f.line == self.target and (f.rule in self.rules
+                                          or "all" in self.rules)
+
+
+def _scan_suppressions(lines: list[str]) -> list[Suppression]:
+    sups: list[Suppression] = []
+    for i, raw in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(raw)
+        if not m:
+            continue
+        names = frozenset(s.strip() for s in m.group(1).split(",") if s.strip())
+        reason = m.group(2)
+        # a comment-only line covers the next *code* line (a wrapped
+        # justification may continue on further comment lines); a trailing
+        # comment covers its own line
+        if raw.lstrip().startswith("#"):
+            target = i + 1
+            while target <= len(lines) and \
+                    lines[target - 1].lstrip().startswith("#"):
+                target += 1
+        else:
+            target = i
+        sups.append(Suppression(names, reason, i, target))
+    return sups
+
+
+class SourceFile:
+    """One parsed python source: text, lines, AST (or parse error), and the
+    dnalint suppressions found in it."""
+
+    def __init__(self, path: Path, root: Path):
+        self.path = path
+        try:
+            self.rel = path.relative_to(root).as_posix()
+        except ValueError:
+            self.rel = path.as_posix()
+        self.text = path.read_text(encoding="utf-8")
+        self.lines = self.text.splitlines()
+        self.error: SyntaxError | None = None
+        try:
+            self.tree: ast.Module | None = ast.parse(self.text,
+                                                     filename=str(path))
+        except SyntaxError as e:
+            self.tree = None
+            self.error = e
+        self.suppressions = _scan_suppressions(self.lines)
+
+    def line_at(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def finding(self, rule_name: str, node_or_line, message: str) -> Finding:
+        lineno = (node_or_line if isinstance(node_or_line, int)
+                  else getattr(node_or_line, "lineno", 0))
+        return Finding(rule_name, self.rel, lineno, message,
+                       self.line_at(lineno))
+
+
+class Project:
+    """The scanned file set plus resolution roots for absolute imports."""
+
+    def __init__(self, root: Path, files: list[SourceFile]):
+        self.root = root
+        self.files = files
+        self.by_path: dict[Path, SourceFile] = {f.path: f for f in files}
+        # where absolute imports (``repro.kernels.ops``) may anchor
+        self.source_roots = [root, root / "src"]
+
+    @classmethod
+    def collect(cls, root: Path, paths: Iterable[Path]) -> "Project":
+        seen: dict[Path, None] = {}
+        for p in paths:
+            p = p if p.is_absolute() else root / p
+            p = p.resolve()
+            if p.is_file() and p.suffix == ".py":
+                seen.setdefault(p)
+            elif p.is_dir():
+                for sub in sorted(p.rglob("*.py")):
+                    if "__pycache__" in sub.parts:
+                        continue
+                    seen.setdefault(sub.resolve())
+        return cls(root, [SourceFile(p, root) for p in seen])
+
+    def resolve_module(self, sf: SourceFile, modname: str,
+                       level: int = 0) -> SourceFile | None:
+        """Best-effort import target inside the scanned set (None =
+        external / not scanned)."""
+        parts = modname.split(".") if modname else []
+        bases: list[Path] = []
+        if level:
+            base = sf.path.parent
+            for _ in range(level - 1):
+                base = base.parent
+            bases = [base]
+        else:
+            bases = list(self.source_roots)
+            # also try relative to the file's own ancestor packages so
+            # fixture trees resolve without a configured source root
+            bases.append(sf.path.parent)
+        for base in bases:
+            cand = base
+            for part in parts:
+                cand = cand / part
+            for target in (cand.with_suffix(".py"), cand / "__init__.py"):
+                hit = self.by_path.get(target)
+                if hit is not None:
+                    return hit
+        return None
+
+
+@dataclass
+class Report:
+    findings: list[Finding]            # active (unsuppressed, unbaselined)
+    suppressed: list[Finding]
+    baselined: list[Finding]
+    rules: list[str]
+    files_scanned: int
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.findings else 0
+
+    def to_json(self) -> dict:
+        return {
+            "rules": self.rules,
+            "files_scanned": self.files_scanned,
+            "findings": [{"rule": f.rule, "path": f.path, "line": f.line,
+                          "message": f.message, "snippet": f.snippet}
+                         for f in self.findings],
+            "suppressed": len(self.suppressed),
+            "baselined": len(self.baselined),
+        }
+
+
+def load_baseline(path: Path) -> Counter:
+    data = json.loads(Path(path).read_text(encoding="utf-8"))
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version {data.get('version')}")
+    return Counter(data.get("fingerprints", []))
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    fps = sorted(f.fingerprint for f in findings)
+    Path(path).write_text(
+        json.dumps({"version": BASELINE_VERSION, "fingerprints": fps},
+                   indent=2) + "\n", encoding="utf-8")
+
+
+def run_analysis(paths: Iterable[str | Path], *,
+                 rules: Iterable[str] | None = None,
+                 root: str | Path | None = None,
+                 baseline: str | Path | None = None) -> Report:
+    """Run the selected rules (default: all) over ``paths`` and apply
+    suppressions + baseline. The engine-level hygiene checks
+    (``parse-error`` / ``bare-suppression`` / ``unused-suppression``)
+    always run."""
+    from . import rules as _rules_pkg          # noqa: F401  (registers RULES)
+
+    root = Path(root or Path.cwd()).resolve()
+    project = Project.collect(root, [Path(p) for p in paths])
+    selected = list(rules) if rules else sorted(RULES)
+    unknown = [r for r in selected if r not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule(s): {', '.join(unknown)} "
+                         f"(have: {', '.join(sorted(RULES))})")
+
+    findings: list[Finding] = []
+    for sf in project.files:
+        if sf.error is not None:
+            findings.append(Finding("parse-error", sf.rel,
+                                    sf.error.lineno or 0,
+                                    f"syntax error: {sf.error.msg}"))
+    for name in selected:
+        findings.extend(RULES[name](project))
+
+    active: list[Finding] = []
+    suppressed: list[Finding] = []
+    sup_index = {sf.rel: sf.suppressions for sf in project.files}
+    for f in findings:
+        hit = next((s for s in sup_index.get(f.path, ()) if s.covers(f)),
+                   None)
+        if hit is not None:
+            hit.used = True
+            suppressed.append(f)
+        else:
+            active.append(f)
+
+    full_run = set(selected) == set(RULES)
+    for sf in project.files:
+        for sup in sf.suppressions:
+            if sup.reason is None:
+                active.append(Finding(
+                    "bare-suppression", sf.rel, sup.line,
+                    "suppression without a reason — append ' -- <why>'",
+                    sf.line_at(sup.line)))
+            elif full_run and not sup.used:
+                active.append(Finding(
+                    "unused-suppression", sf.rel, sup.line,
+                    f"suppression for {sorted(sup.rules)} matches no "
+                    "finding — remove it", sf.line_at(sup.line)))
+
+    baselined: list[Finding] = []
+    if baseline is not None and Path(baseline).exists():
+        budget = load_baseline(Path(baseline))
+        rest = []
+        for f in sorted(active, key=lambda f: (f.path, f.line, f.rule)):
+            if budget.get(f.fingerprint, 0) > 0:
+                budget[f.fingerprint] -= 1
+                baselined.append(f)
+            else:
+                rest.append(f)
+        active = rest
+
+    active.sort(key=lambda f: (f.path, f.line, f.rule))
+    return Report(findings=active, suppressed=suppressed,
+                  baselined=baselined, rules=selected,
+                  files_scanned=len(project.files))

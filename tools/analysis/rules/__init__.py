@@ -1,0 +1,4 @@
+"""dnalint rule set — importing this package registers every rule in
+:data:`tools.analysis.core.RULES`."""
+
+from . import host_sync, kernelreg, pool, prng, replay  # noqa: F401

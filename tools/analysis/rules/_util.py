@@ -1,0 +1,98 @@
+"""Shared AST helpers for dnalint rules."""
+
+from __future__ import annotations
+
+import ast
+
+from ..callgraph import dotted
+
+# np.random module-level constructors that are fine to *name* (the legacy
+# module-level draw functions are not — they mutate hidden global state)
+NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                "Philox", "MT19937", "SFC64", "BitGenerator"}
+
+# jax.random key *consumers* — a key fed to two of these repeats a stream
+JAX_CONSUME = {"uniform", "normal", "randint", "bernoulli", "categorical",
+               "choice", "permutation", "gumbel", "exponential", "poisson",
+               "gamma", "beta", "laplace", "cauchy", "rademacher", "bits",
+               "truncated_normal", "dirichlet", "multivariate_normal",
+               "shuffle", "t", "loggamma", "orthogonal", "ball"}
+# ...and key *derivers* — these are the sanctioned way to reuse a key
+JAX_DERIVE = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data", "clone",
+              "key_data"}
+
+
+def np_aliases(tree: ast.Module) -> set[str]:
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "numpy":
+                    out.add(alias.asname or "numpy")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "numpy":
+                for alias in node.names:
+                    if alias.name == "random":
+                        out.add(f"__from_np__{alias.asname or 'random'}")
+    return out
+
+
+def module_aliases(tree: ast.Module, module: str) -> set[str]:
+    """Aliases under which exactly ``module`` (e.g. "time") is imported."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == module:
+                    out.add(alias.asname or module)
+    return out
+
+
+def is_np_random(chain: list[str] | None, np_names: set[str]) -> str | None:
+    """If ``chain`` is an np.random.<fn> reference, return <fn>."""
+    if not chain:
+        return None
+    if len(chain) >= 3 and chain[0] in np_names and chain[1] == "random":
+        return chain[2]
+    if len(chain) == 2 and f"__from_np__{chain[0]}" in np_names:
+        return chain[1]
+    return None
+
+
+def jax_random_fn(chain: list[str] | None) -> str | None:
+    """If ``chain`` is a jax.random.<fn> (or jrandom.<fn>) reference,
+    return <fn>."""
+    if not chain or len(chain) < 2:
+        return None
+    if chain[-2] == "random" or chain[0] in ("jrandom", "jrd", "jr"):
+        fn = chain[-1]
+        if fn in JAX_CONSUME or fn in JAX_DERIVE:
+            return fn
+    return None
+
+
+def call_chain(node: ast.Call) -> list[str] | None:
+    return dotted(node.func)
+
+
+def contains_hash_call(node: ast.expr) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id == "hash":
+            return True
+    return False
+
+
+def qualname_stack(tree: ast.Module):
+    """Yield (node, qualname) for every node, where qualname reflects the
+    enclosing ClassDef/FunctionDef chain ("Cls.meth", "fn.<locals>.g", ...)."""
+    def visit(node, stack):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                yield child, ".".join(stack + [child.name])
+                yield from visit(child, stack + [child.name])
+            else:
+                yield child, ".".join(stack)
+                yield from visit(child, stack)
+    yield from visit(tree, [])

@@ -1,0 +1,122 @@
+"""Rule ``host-sync`` — no host synchronization inside traced code.
+
+The fused FORA hot path's contract (DESIGN.md §7, pinned at runtime by the
+``jax.transfer_guard`` tests) is that the steady-state loop never leaves the
+device: one staged upload, one readout. This rule enforces it *statically*
+over the whole closure of every traced region — ``jax.jit``-wrapped
+functions (``_fora_fused_impl`` and friends, the functions ``fora_fused`` /
+``run_chunk`` dispatch into), Pallas ``*_kernel`` bodies, and ``pallas_call``
+callees — plus everything reachable from them through resolvable calls.
+
+Flags, inside that closure:
+- ``.item()`` / ``.tolist()`` / ``.block_until_ready()`` — explicit syncs,
+- ``np.asarray`` / ``np.array`` / ... — host numpy conversion of traced
+  values (the exact construct the transfer guard trips on),
+- any ``np.random.*`` — host RNG inside traced code breaks both tracing
+  and the PRNG-stream discipline,
+- ``jax.device_get``, ``print()``, ``time.*`` calls,
+- ``float()/int()/bool()`` on traced values — on a non-static parameter of
+  a jit root (``static_argnames`` are resolved, including through a
+  module-level tuple like ``_FUSED_STATICS``), or on a local assigned from
+  a ``jnp.``/``jax.`` call.
+
+Host-side ``np.*`` arithmetic on *static* shapes (Pallas grid math) is
+legal at trace time and deliberately not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..callgraph import CallGraph, FuncInfo, dotted
+from ..core import Finding, Project, rule
+from . import _util
+
+SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+NP_CONVERT = {"asarray", "array", "ascontiguousarray", "frombuffer",
+              "fromiter", "copyto", "save", "load", "savez", "savetxt",
+              "loadtxt"}
+CASTS = {"float", "int", "bool"}
+
+
+def _traced_derived(fn: ast.AST, jnp_names: set[str]) -> set[str]:
+    """Local names assigned from jnp./jax. calls — conservatively traced."""
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            chain = dotted(node.value.func)
+            if chain and chain[0] in jnp_names:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.add(tgt.id)
+    return out
+
+
+@rule("host-sync")
+def check(project: Project) -> list[Finding]:
+    graph = CallGraph(project)
+    roots = graph.traced_roots()
+    statics_of = {info: statics for info, statics, _ in roots}
+    why_of = {info: why for info, _, why in roots}
+    owner = graph.reachable([info for info, _, _ in roots])
+
+    findings: list[Finding] = []
+    for info, root in owner.items():
+        sf = info.file
+        mi = graph.index(sf)
+        np_names = _util.np_aliases(sf.tree)
+        time_names = _util.module_aliases(sf.tree, "time")
+        jnp_names = mi.aliases_of("jax.numpy", "jax") | {"jnp", "jax", "lax"}
+        derived = _traced_derived(info.node, jnp_names)
+        is_root = info in statics_of
+        statics = statics_of.get(info)
+        params = {a.arg for a in info.node.args.args}
+        ctx = (f"in traced '{info.qualname}'"
+               if info is root else
+               f"in '{info.qualname}' (reachable from traced "
+               f"'{root.qualname}')")
+        via = why_of.get(root, "jax.jit")
+
+        def flag(node, what):
+            findings.append(sf.finding(
+                "host-sync", node, f"{what} {ctx} [{via}]"))
+
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Attribute) and fn.attr in SYNC_METHODS:
+                flag(node, f"host sync '.{fn.attr}()'")
+                continue
+            chain = dotted(fn)
+            if chain:
+                if chain[0] in np_names and len(chain) >= 2:
+                    if chain[1] in NP_CONVERT:
+                        flag(node, f"host numpy conversion "
+                                   f"'{'.'.join(chain)}'")
+                    elif chain[1] == "random":
+                        flag(node, f"host RNG '{'.'.join(chain)}'")
+                elif chain[-1] == "device_get" and len(chain) >= 2:
+                    flag(node, "explicit 'jax.device_get'")
+                elif chain[0] in time_names and len(chain) == 2:
+                    flag(node, f"wall clock 'time.{chain[1]}'")
+            if isinstance(fn, ast.Name):
+                if fn.id == "print":
+                    flag(node, "'print()'")
+                elif fn.id in CASTS and len(node.args) == 1:
+                    arg = node.args[0]
+                    while isinstance(arg, ast.Subscript):
+                        arg = arg.value          # float(y[0]) syncs like y
+                    if isinstance(arg, ast.Name):
+                        traced_param = (is_root and statics is not None
+                                        and arg.id in params
+                                        and arg.id not in statics)
+                        if traced_param or arg.id in derived:
+                            flag(node, f"'{fn.id}()' on traced value "
+                                       f"'{arg.id}'")
+                    elif isinstance(arg, ast.Call):
+                        sub = dotted(arg.func)
+                        if sub and sub[0] in jnp_names:
+                            flag(node, f"'{fn.id}()' on traced "
+                                       f"'{'.'.join(sub)}(...)' result")
+    return findings

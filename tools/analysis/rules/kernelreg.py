@@ -1,0 +1,80 @@
+"""Rule ``kernel-registration`` — every Pallas kernel is oracled + routed.
+
+The kernels package contract (kernels/__init__, DESIGN.md §5): each kernel
+module exports a public ``<op>_pallas`` wrapper, ``ref.py`` holds the
+pure-jnp semantic oracle ``<op>_ref`` (the allclose target *and* the CPU
+fallback), and ``ops.py`` owns the dispatch ``<op>()`` that picks between
+them. A kernel missing its oracle is untestable; one missing its dispatch
+is unreachable by call sites (or, worse, called directly and skipping the
+backend decision). Per ``kernels/`` directory in the scan set:
+
+- a module containing ``pallas_call`` must export a public ``*_pallas``
+  wrapper,
+- ``<op>_pallas`` requires ``<op>_ref`` in ``ref.py``,
+- ``<op>_pallas`` requires an ``ops.py`` dispatch function that references
+  both the wrapper and its ref oracle.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..core import Finding, Project, SourceFile, rule
+
+SKIP = {"ops.py", "ref.py", "__init__.py"}
+
+
+def _top_level_funcs(sf: SourceFile) -> dict[str, ast.FunctionDef]:
+    if sf.tree is None:
+        return {}
+    return {n.name: n for n in sf.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+@rule("kernel-registration")
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    kernel_dirs = sorted({sf.path.parent for sf in project.files
+                          if sf.path.parent.name == "kernels"})
+    for kdir in kernel_dirs:
+        members = {sf.path.name: sf for sf in project.files
+                   if sf.path.parent == kdir}
+        ref_sf = members.get("ref.py")
+        ops_sf = members.get("ops.py")
+        if ref_sf is None and ops_sf is None:
+            continue                 # not a kernels package of ours
+        ref_names = set(_top_level_funcs(ref_sf)) if ref_sf else set()
+        ops_funcs = _top_level_funcs(ops_sf) if ops_sf else {}
+        ops_text = ops_sf.text if ops_sf else ""
+
+        for name, sf in sorted(members.items()):
+            if name in SKIP or sf.tree is None:
+                continue
+            funcs = _top_level_funcs(sf)
+            wrappers = {n: fn for n, fn in funcs.items()
+                        if n.endswith("_pallas") and not n.startswith("_")}
+            if "pallas_call" in sf.text and not wrappers:
+                findings.append(sf.finding(
+                    "kernel-registration", 1,
+                    f"'{name}' contains pallas_call but exports no public "
+                    f"*_pallas wrapper — the kernel is unreachable"))
+            for wname, fn in sorted(wrappers.items()):
+                base = wname[: -len("_pallas")]
+                oracle = f"{base}_ref"
+                if oracle not in ref_names:
+                    findings.append(sf.finding(
+                        "kernel-registration", fn,
+                        f"'{wname}' has no oracle '{oracle}' in ref.py — "
+                        f"kernel is untestable and has no CPU fallback"))
+                dispatch = ops_funcs.get(base)
+                if dispatch is None:
+                    findings.append(sf.finding(
+                        "kernel-registration", fn,
+                        f"'{wname}' has no dispatch '{base}()' in ops.py — "
+                        f"call sites cannot route to it"))
+                elif wname not in ops_text:
+                    findings.append(sf.finding(
+                        "kernel-registration", fn,
+                        f"ops.py dispatch '{base}()' never references "
+                        f"'{wname}'"))
+    return findings

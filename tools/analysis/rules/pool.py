@@ -1,0 +1,302 @@
+"""Rule ``pool-accounting`` — every grant is paired and crash-safe.
+
+``CorePool`` (serving/pool.py) is strict bookkeeping: ``acquire``/
+``reserve`` are all-or-nothing and return a bool, ``grow`` is best-effort,
+and every path that takes cores must give them back (``release``/
+``unreserve``/``shrink``/``shed``) or the pool leaks capacity for the rest
+of the process. Path-sensitively (CFG-lite over if/try/loop/return):
+
+- **ignored grant result**: an ``acquire``/``reserve`` call as a bare
+  expression statement — the all-or-nothing bool is dropped, so a refused
+  grant silently proceeds as if granted (``if pool.acquire(...)``/
+  ``if not pool.acquire(...)`` is the checked pattern: only the success
+  branch is modeled as holding the grant),
+- **leak on exit**: a *locally created* pool (``CorePool(...)`` /
+  ``CorePool.of(...)`` / allocator constructors) acquired but not released
+  on every path out of the function,
+- **exception gap**: between an acquire and its release sits a call that
+  can raise, with no ``try/finally`` releasing the pool — a raise leaks
+  the grant,
+- **unpaired family**: a class/module that acquires but never releases
+  (or reserves but never unreserves) anywhere.
+
+Receivers are matched by name: anything whose expression mentions ``pool``
+or ``alloc`` (``self.pool``, ``pool``, ``self.allocator``), so unrelated
+``lock.acquire()`` patterns stay out of scope.
+"""
+
+from __future__ import annotations
+
+import ast
+from collections import Counter
+
+from ..core import Finding, Project, SourceFile, rule
+
+ACQUIRE = {"acquire", "reserve"}
+GROW = {"grow"}
+RELEASE = {"release", "unreserve", "shrink", "shed", "shed_plan"}
+PAIR = {"acquire": {"release"}, "reserve": {"unreserve", "release"},
+        "grow": {"shrink", "release", "shed", "shed_plan"}}
+CTOR_TOKENS = ("CorePool", "DeviceAllocator", "Allocator")
+MAX_STATES = 64
+
+
+def _recv_text(sf: SourceFile, node: ast.expr) -> str | None:
+    try:
+        return ast.get_source_segment(sf.text, node)
+    except Exception:                                   # pragma: no cover
+        return None
+
+
+def _poolish(text: str | None, local_pools: set[str]) -> bool:
+    if text is None:
+        return False
+    low = text.lower()
+    return "pool" in low or "alloc" in low or text in local_pools
+
+
+def _pool_calls(sf: SourceFile, stmt: ast.stmt, local_pools: set[str]):
+    """(kind, recv, node) events inside one statement, plus whether the
+    statement contains any other (possibly raising) call."""
+    events, other_call = [], False
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and \
+                fn.attr in (ACQUIRE | GROW | RELEASE):
+            recv = _recv_text(sf, fn.value)
+            if _poolish(recv, local_pools):
+                events.append((fn.attr, recv, node))
+                continue
+        other_call = True
+    return events, other_call
+
+
+class _State:
+    __slots__ = ("open", "risky")
+
+    def __init__(self, open_=None, risky=None):
+        self.open: Counter = Counter(open_ or {})  # recv -> open grants
+        self.risky: set[str] = set(risky or ())    # recv with unprotected gap
+
+    def clone(self) -> "_State":
+        return _State(self.open, self.risky)
+
+
+def _apply(sf, stmt, states, protected, local_pools, findings, acq_lines):
+    events, other_call = _pool_calls(sf, stmt, local_pools)
+    for st in states:
+        if other_call:
+            for recv, n in st.open.items():
+                if n > 0 and recv not in protected:
+                    st.risky.add(recv)
+        for kind, recv, node in events:
+            if kind in ACQUIRE or kind in GROW:
+                st.open[recv] += 1
+                acq_lines.setdefault(recv, node.lineno)
+            elif kind in RELEASE:
+                if st.open[recv] > 0:
+                    st.open[recv] -= 1
+                    if st.open[recv] == 0:
+                        st.risky.discard(recv)
+
+
+def _finally_releases(sf, finalbody, local_pools) -> set[str]:
+    out = set()
+    for stmt in finalbody:
+        events, _ = _pool_calls(sf, stmt, local_pools)
+        out.update(recv for kind, recv, _n in events if kind in RELEASE)
+    return out
+
+
+def _grant_test(sf, test, local_pools):
+    """If the If-test is ``pool.acquire(...)`` / ``not pool.acquire(...)``,
+    return (recv, lineno, negated) — the branch outcome then decides whether
+    the grant is held. None for any other test."""
+    node, negated = test, False
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+        node, negated = node.operand, True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in ACQUIRE:
+        recv = _recv_text(sf, node.func.value)
+        if _poolish(recv, local_pools):
+            return recv, node.lineno, negated
+    return None
+
+
+def _walk(sf, stmts, states, protected, local_pools, findings, acq_lines,
+          exits):
+    for stmt in stmts:
+        if isinstance(stmt, ast.If):
+            gt = _grant_test(sf, stmt.test, local_pools)
+            if gt is not None:
+                # checked grant: only the success outcome holds the grant
+                recv, lineno, negated = gt
+                acq_lines.setdefault(recv, lineno)
+                granted = [s.clone() for s in states]
+                for s in granted:
+                    s.open[recv] += 1
+                refused = [s.clone() for s in states]
+                a, b = (refused, granted) if negated else (granted, refused)
+                a = _walk(sf, stmt.body, a, protected, local_pools,
+                          findings, acq_lines, exits)
+                b = _walk(sf, stmt.orelse, b, protected, local_pools,
+                          findings, acq_lines, exits)
+                states = (a + b)[:MAX_STATES]
+                continue
+            _apply(sf, ast.Expr(value=stmt.test, lineno=stmt.lineno,
+                                col_offset=0),
+                   states, protected, local_pools, findings, acq_lines)
+            a = [s.clone() for s in states]
+            b = [s.clone() for s in states]
+            a = _walk(sf, stmt.body, a, protected, local_pools, findings,
+                      acq_lines, exits)
+            b = _walk(sf, stmt.orelse, b, protected, local_pools, findings,
+                      acq_lines, exits)
+            states = (a + b)[:MAX_STATES]
+        elif isinstance(stmt, ast.Try):
+            prot = protected | _finally_releases(sf, stmt.finalbody,
+                                                 local_pools)
+            inner_exits: list[_State] = []
+            body_states = _walk(sf, stmt.body, [s.clone() for s in states],
+                                prot, local_pools, findings, acq_lines,
+                                inner_exits)
+            handler_states = []
+            for h in stmt.handlers:
+                handler_states += _walk(sf, h.body,
+                                        [s.clone() for s in states], prot,
+                                        local_pools, findings, acq_lines,
+                                        inner_exits)
+            states = (body_states + handler_states)[:MAX_STATES] or states
+            states = _walk(sf, stmt.orelse, states, prot, local_pools,
+                           findings, acq_lines, inner_exits)
+            # a return/raise escaping the try still runs the finally
+            if inner_exits:
+                exits.extend(_walk(sf, stmt.finalbody,
+                                   inner_exits[:MAX_STATES], protected,
+                                   local_pools, findings, acq_lines, exits))
+            states = _walk(sf, stmt.finalbody, states, protected,
+                           local_pools, findings, acq_lines, exits)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            once = _walk(sf, stmt.body, [s.clone() for s in states],
+                         protected, local_pools, findings, acq_lines, exits)
+            states = (states + once)[:MAX_STATES]
+            states = _walk(sf, stmt.orelse, states, protected, local_pools,
+                           findings, acq_lines, exits)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            states = _walk(sf, stmt.body, states, protected, local_pools,
+                           findings, acq_lines, exits)
+        elif isinstance(stmt, (ast.Return, ast.Raise)):
+            _apply(sf, stmt, states, protected, local_pools, findings,
+                   acq_lines)
+            exits.extend(states)
+            return []
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            continue                       # separate scope
+        else:
+            _apply(sf, stmt, states, protected, local_pools, findings,
+                   acq_lines)
+    return states
+
+
+def _local_pools(fn: ast.FunctionDef) -> set[str]:
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            src = ast.unparse(node.value.func) if hasattr(ast, "unparse") \
+                else ""
+            if any(tok in src for tok in CTOR_TOKENS):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.add(tgt.id)
+    return out
+
+
+@rule("pool-accounting")
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        if not any(tok in sf.text for tok in
+                   ("acquire", "reserve", ".grow(")):
+            continue
+
+        # -- ignored all-or-nothing grant result (path-insensitive) --
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Expr) and \
+                    isinstance(node.value, ast.Call):
+                fn = node.value.func
+                if isinstance(fn, ast.Attribute) and fn.attr in ACQUIRE:
+                    recv = _recv_text(sf, fn.value)
+                    if _poolish(recv, set()):
+                        findings.append(sf.finding(
+                            "pool-accounting", node,
+                            f"result of all-or-nothing "
+                            f"'{recv}.{fn.attr}()' is ignored — a refused "
+                            f"grant proceeds as granted"))
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            local_pools = _local_pools(node)
+            acq_lines: dict[str, int] = {}
+            exits: list[_State] = []
+            out = _walk(sf, node.body, [_State()], set(), local_pools,
+                        findings, acq_lines, exits)
+            exits.extend(out)
+            # leak / exception-gap verdicts only for pools this function
+            # *created* — a self.pool grant legitimately outlives the call
+            leaked, gapped = set(), set()
+            for st in exits:
+                for recv, n in st.open.items():
+                    if recv in local_pools and n > 0:
+                        leaked.add(recv)
+                for recv in st.risky:
+                    if recv in local_pools:
+                        gapped.add(recv)
+            for recv in sorted(leaked):
+                findings.append(sf.finding(
+                    "pool-accounting", acq_lines.get(recv, node.lineno),
+                    f"'{recv}' grant not released on every path out of "
+                    f"'{node.name}'"))
+            for recv in sorted(gapped - leaked):
+                findings.append(sf.finding(
+                    "pool-accounting", acq_lines.get(recv, node.lineno),
+                    f"'{recv}' grant in '{node.name}' leaks if an "
+                    f"intervening call raises — release in try/finally"))
+
+        # -- unpaired family, per class and module top level --
+        scopes = [("module", sf.tree)] + \
+            [(n.name, n) for n in ast.walk(sf.tree)
+             if isinstance(n, ast.ClassDef)]
+        for scope_name, scope in scopes:
+            used: dict[str, int] = {}
+            released: set[str] = set()
+            for node in ast.walk(scope):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute):
+                    attr = node.func.attr
+                    recv = _recv_text(sf, node.func.value)
+                    if not _poolish(recv, set()):
+                        continue
+                    if attr in PAIR and attr not in used:
+                        used[attr] = node.lineno
+                    if attr in RELEASE:
+                        released.add(attr)
+            if scope_name == "module":
+                # module scope aggregates its classes; only flag classes
+                continue
+            for attr, lineno in used.items():
+                if not (PAIR[attr] & released):
+                    findings.append(sf.finding(
+                        "pool-accounting", lineno,
+                        f"'{scope_name}' calls '{attr}' but never any of "
+                        f"{sorted(PAIR[attr])} — grants can never be "
+                        f"returned"))
+    return findings

@@ -1,0 +1,272 @@
+"""Rule ``prng-discipline`` — every random stream is named and consumed once.
+
+The repo's bit-identical guarantees (per-lane walk streams via
+``fold_in``, shard-invariant sampling, the ``SeedSequence([seed, 0x57A6])``
+straggler re-issue stream) all assume the same key never feeds two
+consuming draws. Flags:
+
+- **key reuse**: a ``jax.random`` key (function param named ``key``/
+  ``*_key``/``keys``, or a local produced by ``PRNGKey``/``split``/
+  ``fold_in``) consumed by two draws *on the same control-flow path*.
+  ``split``/``fold_in`` are derivations, not consumptions; uses in
+  exclusive ``if``/``else`` branches don't add up, and a branch that
+  ends in ``return``/``raise`` doesn't flow into the code after it; a
+  consumption inside a loop counts double (each iteration redraws the
+  same stream). Passing a key to a helper counts as one consumption —
+  except constructors (``cls(...)``/CapWord calls), which *store* keys,
+  and calls whose subtree derives (``jax.vmap(lambda k, i:
+  fold_in(k, i))(keys)`` is a batched derivation, not a draw). Only
+  functions that themselves call ``jax.random`` are analyzed, so an
+  unrelated ``key`` param (a cache key, a dict key) stays out of scope.
+- **unseeded host RNG**: ``np.random.default_rng()`` / ``SeedSequence()``
+  with no arguments (OS entropy — unreplayable), legacy module-level
+  ``np.random.<draw>()`` calls (hidden global state), and unseeded stdlib
+  ``random.<fn>`` usage.
+- **hash-derived seeds**: seeding ``default_rng``/``SeedSequence``/
+  ``PRNGKey`` from builtin ``hash()`` — str hashes are randomized per
+  process (PYTHONHASHSEED), so the stream differs across restarts, which
+  breaks WAL replay of anything built from it.
+"""
+
+from __future__ import annotations
+
+import ast
+from collections import Counter
+
+from ..callgraph import dotted
+from ..core import Finding, Project, rule
+from ._util import (JAX_CONSUME, JAX_DERIVE, NP_RANDOM_OK,
+                    contains_hash_call, is_np_random, jax_random_fn,
+                    module_aliases, np_aliases)
+
+SEEDED_CTORS = {"default_rng", "SeedSequence", "PRNGKey"}
+
+
+_PRNGISH_ANN = ("key", "prng", "array", "jax", "ndarray")
+
+
+def _key_params(fn: ast.FunctionDef) -> set[str]:
+    out = set()
+    for a in fn.args.args + fn.args.kwonlyargs:
+        n = a.arg
+        if not (n in ("key", "keys", "rng_key")
+                or n.endswith("_key") or n.endswith("_keys")):
+            continue
+        if a.annotation is not None:
+            # `key: Hashable` is a cache/dict key, not a PRNG stream
+            ann = ast.unparse(a.annotation).lower()
+            if not any(tok in ann for tok in _PRNGISH_ANN):
+                continue
+        out.add(n)
+    return out
+
+
+class _KeyUse(ast.NodeVisitor):
+    """Max-per-path consumption counter for the key variables of one
+    function (CFG-lite: sequence adds, branches take the elementwise max,
+    loops double their body)."""
+
+    def __init__(self, keys: set[str]):
+        self.keys = set(keys)
+        self.use_lines: dict[str, list[int]] = {k: [] for k in keys}
+        self.finished: list[Counter] = []    # totals of returned-out paths
+
+    @staticmethod
+    def _is_ctor(func: ast.expr) -> bool:
+        """cls(...) / WalkIndex(...) / mod.Thing(...): stores, not draws."""
+        tail = None
+        if isinstance(func, ast.Name):
+            tail = func.id
+        elif isinstance(func, ast.Attribute):
+            tail = func.attr
+        return tail is not None and (tail == "cls" or tail[:1].isupper())
+
+    @staticmethod
+    def _derives_inside(call: ast.Call) -> bool:
+        for sub in ast.walk(call):
+            if isinstance(sub, ast.Call) and \
+                    jax_random_fn(dotted(sub.func)) in JAX_DERIVE:
+                return True
+        return False
+
+    # -- expression-level consumption counting --
+    def expr_uses(self, node: ast.expr | None) -> Counter:
+        c: Counter = Counter()
+        if node is None:
+            return c
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn = jax_random_fn(dotted(sub.func))
+            if fn in JAX_DERIVE:
+                continue                      # split/fold_in: sanctioned
+            consuming = fn in JAX_CONSUME or fn is None
+            if not consuming:
+                continue
+            if fn is None and (self._is_ctor(sub.func)
+                               or self._derives_inside(sub)):
+                continue                      # stored or batch-derived
+            for arg in list(sub.args) + [kw.value for kw in sub.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in self.keys:
+                    c[arg.id] += 1
+                    self.use_lines[arg.id].append(sub.lineno)
+        return c
+
+    def _exprs_of(self, stmt: ast.stmt) -> list[ast.expr]:
+        out = []
+        for field_ in ast.iter_child_nodes(stmt):
+            if isinstance(field_, ast.expr):
+                out.append(field_)
+        return out
+
+    @staticmethod
+    def _terminates(stmts: list[ast.stmt]) -> bool:
+        return bool(stmts) and isinstance(
+            stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+    def body_uses(self, stmts: list[ast.stmt]) -> Counter:
+        total: Counter = Counter()
+        for stmt in stmts:
+            if isinstance(stmt, ast.If):
+                # a branch ending in return/raise is a *finished* path —
+                # its uses are checked on their own and do not flow into
+                # the statements after the If
+                t = self.expr_uses(stmt.test)
+                cont: Counter = Counter()
+                for branch in (stmt.body, stmt.orelse):
+                    c = self.body_uses(branch)
+                    if self._terminates(branch):
+                        self.finished.append(total + t + c)
+                    else:
+                        cont = self._max(cont, c)
+                total = total + t + cont
+            else:
+                total += self.stmt_uses(stmt)
+        return total
+
+    @staticmethod
+    def _max(a: Counter, b: Counter) -> Counter:
+        out = Counter(a)
+        for k, v in b.items():
+            out[k] = max(out[k], v)
+        return out
+
+    def stmt_uses(self, stmt: ast.stmt) -> Counter:
+        if isinstance(stmt, ast.If):
+            c = self.expr_uses(stmt.test)
+            return c + self._max(self.body_uses(stmt.body),
+                                 self.body_uses(stmt.orelse))
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            c = self.expr_uses(stmt.iter)
+            body = self.body_uses(stmt.body)
+            return c + Counter({k: 2 * v for k, v in body.items()}) \
+                + self.body_uses(stmt.orelse)
+        if isinstance(stmt, ast.While):
+            c = self.expr_uses(stmt.test)
+            body = self.body_uses(stmt.body)
+            return c + Counter({k: 2 * v for k, v in body.items()})
+        if isinstance(stmt, ast.Try):
+            c = self.body_uses(stmt.body)
+            hc: Counter = Counter()
+            for h in stmt.handlers:
+                hc = self._max(hc, self.body_uses(h.body))
+            return c + hc + self.body_uses(stmt.orelse) \
+                + self.body_uses(stmt.finalbody)
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            c = Counter()
+            for item in stmt.items:
+                c += self.expr_uses(item.context_expr)
+            return c + self.body_uses(stmt.body)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def (scan/vmap step): closure uses count once
+            return self.body_uses(stmt.body)
+        if isinstance(stmt, ast.ClassDef):
+            return self.body_uses(stmt.body)
+        c = Counter()
+        for e in self._exprs_of(stmt):
+            c += self.expr_uses(e)
+        return c
+
+
+def _collect_keys(fn: ast.FunctionDef) -> set[str]:
+    keys = _key_params(fn)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            jfn = jax_random_fn(dotted(node.value.func))
+            if jfn in JAX_DERIVE:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        keys.add(tgt.id)
+                    elif isinstance(tgt, (ast.Tuple, ast.List)):
+                        for el in tgt.elts:
+                            if isinstance(el, ast.Name):
+                                keys.add(el.id)
+    return keys
+
+
+@rule("prng-discipline")
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        np_names = np_aliases(sf.tree)
+        random_names = module_aliases(sf.tree, "random")
+
+        # -- key reuse, per function --
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            keys = _collect_keys(node)
+            if not keys:
+                continue
+            walker = _KeyUse(keys)
+            counts = walker.body_uses(node.body)
+            for fin in walker.finished:
+                counts = _KeyUse._max(counts, fin)
+            for k, n in sorted(counts.items()):
+                if n >= 2:
+                    lines = walker.use_lines[k]
+                    at = lines[1] if len(lines) > 1 else \
+                        (lines[0] if lines else node.lineno)
+                    findings.append(sf.finding(
+                        "prng-discipline", at,
+                        f"key '{k}' consumed {n}x on one path in "
+                        f"'{node.name}' — derive fresh keys with "
+                        f"split()/fold_in() instead"))
+
+        # -- unseeded / legacy / hash-seeded host RNG, module-wide --
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted(node.func)
+            npfn = is_np_random(chain, np_names)
+            if npfn is not None:
+                if npfn in ("default_rng", "SeedSequence") and \
+                        not node.args and not node.keywords:
+                    findings.append(sf.finding(
+                        "prng-discipline", node,
+                        f"unseeded np.random.{npfn}() draws OS entropy — "
+                        f"pass a seed (replay cannot reproduce it)"))
+                elif npfn not in NP_RANDOM_OK:
+                    findings.append(sf.finding(
+                        "prng-discipline", node,
+                        f"legacy np.random.{npfn}() uses hidden global "
+                        f"state — use a seeded Generator"))
+            elif chain and chain[0] in random_names and len(chain) == 2 \
+                    and chain[1] not in ("Random", "SystemRandom", "seed"):
+                findings.append(sf.finding(
+                    "prng-discipline", node,
+                    f"stdlib random.{chain[1]}() uses the unseeded global "
+                    f"stream — use a seeded np Generator"))
+            if chain and chain[-1] in SEEDED_CTORS:
+                for arg in list(node.args) + \
+                        [kw.value for kw in node.keywords]:
+                    if contains_hash_call(arg):
+                        findings.append(sf.finding(
+                            "prng-discipline", node,
+                            f"{chain[-1]} seeded from builtin hash() — str "
+                            f"hashes are randomized per process "
+                            f"(PYTHONHASHSEED), so streams differ across "
+                            f"restarts and WAL replay diverges"))
+    return findings

@@ -1,0 +1,170 @@
+"""Rule ``replay-determinism`` — WAL-logged modules stay replayable.
+
+Recovery (DESIGN.md §12) is verified deterministic *re-execution*: the
+rebuilt runtime must retrace the crashed run bit-for-bit, so nothing in the
+modules whose state reaches the WAL (``serving/``, ``ft/``,
+``checkpoint/``) may depend on wall clocks, OS entropy, or unordered
+iteration. Flags, in those modules:
+
+- any ``time.*`` clock use — calls *and* bare references (a
+  ``clock=time.monotonic`` default smuggles the wall clock in),
+- ``datetime.now/utcnow/today``, ``os.urandom``, ``uuid.uuid1/uuid4``,
+- unseeded ``np.random.default_rng()``/``SeedSequence()`` and stdlib
+  ``random`` global-stream use,
+- iterating a ``set`` (for / comprehension / ``list(s)``) — iteration
+  order varies with PYTHONHASHSEED; ``sorted(...)`` and membership tests
+  are fine, as are order-independent reductions (``min/max/sum/len``).
+
+Allowlist: the wall-clock heartbeat is the *one* sanctioned ``time``
+site — ``HeartbeatMonitor.__init__``'s injectable ``clock`` default
+(``ft/elastic.py``). Liveness detection is wall-clock by nature; replay
+determinism is preserved because heartbeat-detected failures enter the
+WAL as ordinary events, and tests inject a virtual clock.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..callgraph import dotted
+from ..core import Finding, Project, rule
+from ._util import (NP_RANDOM_OK, is_np_random, module_aliases, np_aliases,
+                    qualname_stack)
+
+SCOPE_DIRS = {"serving", "ft", "checkpoint"}
+TIME_ATTRS = {"time", "monotonic", "perf_counter", "process_time",
+              "time_ns", "monotonic_ns", "perf_counter_ns"}
+# (path suffix, enclosing qualname) pairs exempt from the time.* check
+ALLOWLIST = (
+    # the sanctioned wall-clock heartbeat: injectable clock default; see
+    # module docstring for why this one site is safe
+    ("ft/elastic.py", "HeartbeatMonitor.__init__"),
+)
+ORDER_FREE = {"sorted", "min", "max", "sum", "len", "any", "all",
+              "frozenset", "set"}
+
+
+def _in_scope(rel: str) -> bool:
+    return bool(SCOPE_DIRS & set(rel.split("/")[:-1]))
+
+
+def _set_typed_names(scope: ast.AST) -> set[str]:
+    names: set[str] = set()
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for a in node.args.args + node.args.kwonlyargs:
+                if a.annotation is not None and \
+                        "set" in ast.unparse(a.annotation).lower():
+                    names.add(a.arg)
+        if isinstance(node, ast.Assign):
+            v = node.value
+            is_set = (isinstance(v, (ast.Set, ast.SetComp))
+                      or (isinstance(v, ast.Call)
+                          and isinstance(v.func, ast.Name)
+                          and v.func.id == "set"))
+            if is_set:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        names.add(tgt.id)
+    return names
+
+
+def _is_setish(node: ast.expr, set_names: set[str]) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id == "set":
+        return True
+    return isinstance(node, ast.Name) and node.id in set_names
+
+
+@rule("replay-determinism")
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in project.files:
+        if sf.tree is None or not _in_scope(sf.rel):
+            continue
+        time_names = module_aliases(sf.tree, "time")
+        np_names = np_aliases(sf.tree)
+        random_names = module_aliases(sf.tree, "random")
+        os_names = module_aliases(sf.tree, "os")
+        uuid_names = module_aliases(sf.tree, "uuid")
+        dt_names = module_aliases(sf.tree, "datetime")
+        set_names = _set_typed_names(sf.tree)
+
+        def allowed(qual: str) -> bool:
+            return any(sf.rel.endswith(suffix) and qual == q
+                       for suffix, q in ALLOWLIST)
+
+        for node, qual in qualname_stack(sf.tree):
+            chain = dotted(node) if isinstance(node, ast.Attribute) else None
+            if chain and chain[0] in time_names and len(chain) == 2 \
+                    and chain[1] in TIME_ATTRS:
+                if not allowed(qual):
+                    findings.append(sf.finding(
+                        "replay-determinism", node,
+                        f"wall clock 'time.{chain[1]}' in WAL-logged module"
+                        f" — replay cannot reproduce it (inject a virtual "
+                        f"clock or drop the field)"))
+                continue
+            if not isinstance(node, ast.Call):
+                if isinstance(node, (ast.For, ast.AsyncFor)) and \
+                        _is_setish(node.iter, set_names):
+                    findings.append(sf.finding(
+                        "replay-determinism", node,
+                        "iteration over a set — order varies with "
+                        "PYTHONHASHSEED; wrap in sorted(...)"))
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.GeneratorExp, ast.DictComp)):
+                    for gen in node.generators:
+                        if _is_setish(gen.iter, set_names):
+                            findings.append(sf.finding(
+                                "replay-determinism", node,
+                                "comprehension over a set — order varies "
+                                "with PYTHONHASHSEED; wrap in sorted(...)"))
+                continue
+            cchain = dotted(node.func)
+            npfn = is_np_random(cchain, np_names)
+            if npfn in ("default_rng", "SeedSequence") and not node.args \
+                    and not node.keywords:
+                findings.append(sf.finding(
+                    "replay-determinism", node,
+                    f"unseeded np.random.{npfn}() in WAL-logged module — "
+                    f"OS entropy is unreplayable"))
+            elif npfn is not None and npfn not in NP_RANDOM_OK:
+                findings.append(sf.finding(
+                    "replay-determinism", node,
+                    f"legacy np.random.{npfn}() (hidden global state) in "
+                    f"WAL-logged module"))
+            elif cchain and cchain[0] in random_names and len(cchain) == 2 \
+                    and cchain[1] not in ("Random", "SystemRandom"):
+                findings.append(sf.finding(
+                    "replay-determinism", node,
+                    f"stdlib random.{cchain[1]}() global stream in "
+                    f"WAL-logged module"))
+            elif cchain and cchain[0] in os_names and len(cchain) == 2 \
+                    and cchain[1] == "urandom":
+                findings.append(sf.finding(
+                    "replay-determinism", node,
+                    "os.urandom in WAL-logged module"))
+            elif cchain and cchain[0] in uuid_names and len(cchain) == 2 \
+                    and cchain[1] in ("uuid1", "uuid4"):
+                findings.append(sf.finding(
+                    "replay-determinism", node,
+                    f"uuid.{cchain[1]}() in WAL-logged module — "
+                    f"unreplayable identifier"))
+            elif cchain and cchain[0] in dt_names and \
+                    cchain[-1] in ("now", "utcnow", "today"):
+                findings.append(sf.finding(
+                    "replay-determinism", node,
+                    f"'{'.'.join(cchain)}()' wall clock in WAL-logged "
+                    f"module"))
+            elif isinstance(node.func, ast.Name) and \
+                    node.func.id in ("list", "tuple") and \
+                    len(node.args) == 1 and \
+                    _is_setish(node.args[0], set_names):
+                findings.append(sf.finding(
+                    "replay-determinism", node,
+                    f"'{node.func.id}(set)' materializes hash order — "
+                    f"use sorted(...)"))
+    return findings

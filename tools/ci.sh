@@ -18,6 +18,26 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# dnalint (DESIGN.md §13): the repo's invariant analyzer is a HARD gate —
+# src/ must be clean modulo the committed (empty) baseline, and the seeded
+# bad fixtures must still be caught (a lint that stops firing is a lint
+# that silently rotted)
+python -m tools.analysis --baseline tools/analysis/baseline.json
+if python -m tools.analysis tests/analysis_fixtures/bad > /dev/null 2>&1
+then
+    echo "dnalint failed to flag the seeded bad fixtures" >&2
+    exit 1
+fi
+
+# ruff (pinned in requirements-dev.txt, config in ruff.toml) — skipped when
+# the container image doesn't ship it; dnalint above is the hard gate
+if command -v ruff > /dev/null 2>&1
+then
+    ruff check .
+else
+    echo "ruff not installed — skipping (see requirements-dev.txt)"
+fi
+
 # the forced-8-device leg below covers the sharded subprocess test directly,
 # so the main run skips the redundant inner relaunch
 REPRO_SHARDED_SUBPROCESS=skip python -m pytest -x -q
