@@ -16,18 +16,29 @@ stays gateable (tools/bench_compare.py skips rows with baseline <= 0):
 * ``serving/chaos_core_hours_vs_clean_pct`` — chaos core-s / failure-free
   anchor core-s (same workload, no faults) x 100 — what the faults cost
 * ``serving/chaos_unfinished_p1``   — unfinished jobs under chaos + 1
+* ``serving/engine_qps``            — engine-mode µs per answered query on
+  the burst trace (1e6 * end_time / answered; QPS + speedup vs. the
+  chunked path on the SAME trace in the note)
+* ``serving/engine_lane_util``      — engine lane idle percentage + 1
+  (time-weighted over the controller's occupancy samples)
 
 ``--check`` mode (the CI smoke leg) re-runs the same seeded scenario twice
 and asserts: deterministic replay, >= 95% deadline hit-rate, total
 core-hours strictly below static per-job Lemma-2 provisioning, and the
 failure-injection run completing every job via readmission (no job loss).
+``--check --engine`` drives the burst trace through both paths and asserts
+the engine headline: deterministic replay, 100% SLA hit-rate preserved,
+and >= 1.5x queries/sec over the chunked path (ISSUE 8).
 ``--chaos`` mode (DESIGN.md §12) drives the WAL-attached chaos scenario —
 device failure + lane slowdowns + process crashes with recovery — and
 asserts: deterministic replay, crash-transparency (records bit-identical
 to the same chaos scenario run without crashes), every job completed,
-at least one recovery and at least one straggler re-issue.
+at least one recovery and at least one straggler re-issue (``--engine``
+swaps the straggler assertion for lane-occupancy coverage — engine mode
+has no slot boundaries to re-issue at).
 
     PYTHONPATH=src python -m benchmarks.serving_sim [--check] [--chaos]
+                                                    [--engine]
 """
 
 from __future__ import annotations
@@ -68,21 +79,63 @@ CHAOS_SNAPSHOT_EVERY = 16
 CHAOS_SPARES = 0.1
 CHAOS_SPEC = "seed=7,failures=1,slowdowns=2,horizon=18,slow_factor=2.5"
 CHAOS_CRASH_AT = (25, 60)
+# engine headline scenario: a burst (high arrival rate) of mixed-deadline
+# jobs. The chunked planner stretches every job across its own deadline
+# window (Alg. 2 sizes ell to land at T*d), so burst throughput is
+# deadline-bound; the engine's EDF lane pool is work-conserving and drains
+# the same trace as fast as the lanes allow.
+ENGINE_JOBS = 16
+ENGINE_RATE = 3.0
 
 
 def _drive(pool_cores: int, *, failures: dict | None = None,
            num_jobs: int = NUM_JOBS, seed: int = SEED,
            rate: float = RATE, queries: tuple = QUERIES,
-           deadline: tuple = DEADLINE) -> ServingReport:
+           deadline: tuple = DEADLINE, engine: bool = False,
+           lane_pool: int = 0,
+           return_runtime: bool = False):
     rt = ServingRuntime(
         CorePool.of(pool_cores),
         lambda job_id, nq, sd: SimJobExecutor(mean=0.05, cv=0.3, seed=sd),
-        ServingConfig(scaling_factor=0.9, sample_frac=0.05))
+        ServingConfig(scaling_factor=0.9, sample_frac=0.05,
+                      engine=engine, lane_pool=lane_pool))
     rt.submit_poisson(num_jobs, rate, queries=queries, deadline=deadline,
                       seed=seed)
     if failures:
         rt.inject_failures(failures)
-    return rt.run()
+    rep = rt.run()
+    return (rep, rt) if return_runtime else rep
+
+
+def _drive_engine_pair() -> tuple[ServingReport, ServingReport,
+                                  ServingRuntime]:
+    """Chunked and engine reports for the SAME burst trace (same seeds,
+    same arrivals, same pool) — the queries/sec-at-fixed-SLA headline."""
+    kw = dict(num_jobs=ENGINE_JOBS, rate=ENGINE_RATE)
+    chunk = _drive(POOL_CORES, **kw)
+    erep, ert = _drive(POOL_CORES, engine=True, return_runtime=True, **kw)
+    return chunk, erep, ert
+
+
+def _answered(rep: ServingReport) -> int:
+    return sum(r.num_queries for r in rep.records if r.state == "done")
+
+
+def _qps(rep: ServingReport) -> float:
+    return _answered(rep) / rep.end_time if rep.end_time > 0 else 0.0
+
+
+def _lane_utilisation(events: list[dict], end_time: float) -> float:
+    """Time-weighted busy-lane fraction over [first sample, end_time]."""
+    if not events or end_time <= 0:
+        return 0.0
+    util = 0.0
+    for cur, nxt in zip(events, events[1:]):
+        util += cur["busy"] / max(1, cur["lanes"]) * (nxt["t"] - cur["t"])
+    last = events[-1]
+    util += (last["busy"] / max(1, last["lanes"])
+             * max(0.0, end_time - last["t"]))
+    return util / end_time
 
 
 def _drive_failure_run() -> ServingReport:
@@ -95,7 +148,8 @@ def _chaos_factory(job_id: int, nq: int, sd: int) -> SimJobExecutor:
     return SimJobExecutor(mean=0.05, cv=0.3, seed=sd)
 
 
-def _chaos_runtime(wal_dir: str | None) -> ServingRuntime:
+def _chaos_runtime(wal_dir: str | None,
+                   engine: bool = False) -> ServingRuntime:
     """The chaos workload: spares so straggler re-issue can fire, WAL
     attached when a directory is given (crash legs need one; the clean
     anchor passes None)."""
@@ -103,7 +157,7 @@ def _chaos_runtime(wal_dir: str | None) -> ServingRuntime:
         CorePool.of(CHAOS_POOL, spares_fraction=CHAOS_SPARES),
         _chaos_factory,
         ServingConfig(scaling_factor=0.9, sample_frac=0.05,
-                      stragglers=True))
+                      stragglers=True, engine=engine))
     if wal_dir is not None:
         rt.attach_wal(WriteAheadLog(wal_dir, fsync=False),
                       snapshot_every=CHAOS_SNAPSHOT_EVERY)
@@ -114,19 +168,20 @@ def _chaos_runtime(wal_dir: str | None) -> ServingRuntime:
     return rt
 
 
-def _drive_chaos() -> tuple[ServingReport, list, ServingRuntime]:
+def _drive_chaos(engine: bool = False) -> tuple[ServingReport, list,
+                                                ServingRuntime]:
     """Faults + crashes + recovery; fsync off — the benchmark measures the
     scheduler, not the disk."""
     with tempfile.TemporaryDirectory() as wal_dir:
-        rt = _chaos_runtime(wal_dir)
+        rt = _chaos_runtime(wal_dir, engine=engine)
         return drive_with_crashes(rt, wal_dir, _chaos_factory,
                                   CHAOS_CRASH_AT, fsync=False)
 
 
-def _drive_chaos_uncrashed() -> ServingReport:
+def _drive_chaos_uncrashed(engine: bool = False) -> ServingReport:
     """Same workload and fault schedule, no process crashes — the report
     the crashed-and-recovered run must reproduce bit-for-bit."""
-    return _chaos_runtime(None).run()
+    return _chaos_runtime(None, engine=engine).run()
 
 
 def _drive_chaos_anchor() -> ServingReport:
@@ -177,6 +232,18 @@ def run() -> None:
          f"done={crep.completed};extended={crep.extended};"
          f"degraded={crep.degraded}")
 
+    chunk, erep, ert = _drive_engine_pair()
+    eng_qps, chk_qps = _qps(erep), _qps(chunk)
+    emit("serving/engine_qps",
+         1e6 * erep.end_time / max(1, _answered(erep)),
+         f"qps={eng_qps:.1f};chunked_qps={chk_qps:.1f};"
+         f"speedup={eng_qps / max(chk_qps, 1e-12):.2f}x;"
+         f"hit_rate={erep.hit_rate:.3f}")
+    util = _lane_utilisation(ert.controller.occupancy_events, erep.end_time)
+    emit("serving/engine_lane_util", 100.0 * (1.0 - util) + 1.0,
+         f"busy_frac={util:.3f};lanes={ert.engine.lanes};"
+         f"samples={len(ert.controller.occupancy_events)}")
+
 
 def check() -> None:
     """CI smoke assertions over the same seeded scenario (ISSUE 4)."""
@@ -201,22 +268,58 @@ def check() -> None:
           f"(extended={frep.extended}, degraded={frep.degraded})")
 
 
-def check_chaos() -> None:
-    """CI chaos smoke (ISSUE 6): crash-transparency + no job loss."""
-    crep, infos, rt = _drive_chaos()
-    crep2, infos2, _ = _drive_chaos()
+def check_engine() -> None:
+    """CI engine smoke (ISSUE 8): the queries/sec-at-fixed-SLA headline —
+    deterministic replay, 100% SLA preserved, >= 1.5x over chunked."""
+    chunk, erep, ert = _drive_engine_pair()
+    erep2 = _drive(POOL_CORES, engine=True, num_jobs=ENGINE_JOBS,
+                   rate=ENGINE_RATE)
+    assert erep == erep2, "engine-mode serving sim is not replay-" \
+        "deterministic"
+    assert erep.completed == len(erep.records), (
+        f"engine run lost {len(erep.records) - erep.completed} job(s)")
+    assert erep.hit_rate == 1.0, (
+        f"engine hit-rate {erep.hit_rate:.3f} != 1.0 — the speedup must "
+        "not cost SLA")
+    speedup = _qps(erep) / max(_qps(chunk), 1e-12)
+    assert speedup >= 1.5, (
+        f"engine {_qps(erep):.1f} q/s vs chunked {_qps(chunk):.1f} q/s "
+        f"= {speedup:.2f}x < 1.5x target")
+    util = _lane_utilisation(ert.controller.occupancy_events, erep.end_time)
+    assert util > 0.0, "no lane occupancy was accounted"
+    print(f"serving_sim --check --engine OK: engine {_qps(erep):.1f} q/s "
+          f"vs chunked {_qps(chunk):.1f} q/s ({speedup:.2f}x >= 1.5x), "
+          f"hit_rate={erep.hit_rate:.3f}, busy_frac={util:.3f}")
+
+
+def check_chaos(engine: bool = False) -> None:
+    """CI chaos smoke (ISSUE 6): crash-transparency + no job loss. With
+    ``engine=True`` (ISSUE 8) the same fault schedule drives the
+    continuous-batching path; the straggler assertion is replaced by
+    lane-occupancy coverage (no slot boundaries to re-issue at)."""
+    crep, infos, rt = _drive_chaos(engine=engine)
+    crep2, infos2, _ = _drive_chaos(engine=engine)
     assert crep == crep2 and len(infos) == len(infos2), \
         "chaos scenario is not replay-deterministic"
     assert len(infos) >= 1, (
         f"crash points {CHAOS_CRASH_AT} never fired — trace drained "
         f"before event {min(CHAOS_CRASH_AT)}; retune the scenario")
-    uncrashed = _drive_chaos_uncrashed()
+    uncrashed = _drive_chaos_uncrashed(engine=engine)
     assert crep.records == uncrashed.records, (
         "crashed-and-recovered chaos run diverged from the same scenario "
         "without crashes — recovery is not transparent")
     assert crep.completed == len(crep.records), (
         f"chaos run lost {len(crep.records) - crep.completed} accepted "
         "job(s) — the durability contract is broken")
+    if engine:
+        n_occ = len(rt.controller.occupancy_events)
+        assert n_occ >= 1, (
+            "engine chaos run recorded no lane-occupancy samples — "
+            "occupancy accounting is not wired")
+        print(f"serving_sim --chaos --engine OK: done={crep.completed}/"
+              f"{len(crep.records)} recoveries={len(infos)} "
+              f"occupancy_samples={n_occ} hit_rate={crep.hit_rate:.3f}")
+        return
     n_straggler = len(rt.controller.straggler_events)
     assert n_straggler >= 1, (
         "chaos slowdowns never triggered a straggler re-issue — "
@@ -235,10 +338,16 @@ if __name__ == "__main__":
     ap.add_argument("--chaos", action="store_true",
                     help="assert the chaos-harness smoke criteria "
                          "(crash-transparency, no job loss)")
+    ap.add_argument("--engine", action="store_true",
+                    help="with --check: assert the engine >= 1.5x QPS "
+                         "headline; with --chaos: drive the chaos scenario "
+                         "through the engine path")
     args = ap.parse_args()
-    if args.check:
+    if args.check and args.engine:
+        check_engine()
+    elif args.check:
         check()
     elif args.chaos:
-        check_chaos()
+        check_chaos(engine=args.engine)
     else:
         run()

@@ -50,6 +50,7 @@ class ElasticController:
     on_rescale: Callable[[int], None] | None = None
     rescale_events: list[dict] = field(default_factory=list)
     straggler_events: list[dict] = field(default_factory=list)
+    occupancy_events: list[dict] = field(default_factory=list)
 
     def tick(self, step: int, stats: RuntimeStats | None = None,
              queries_left: int = 0, deadline_left: float = 0.0) -> bool:
@@ -101,6 +102,15 @@ class ElasticController:
         if self.on_rescale is not None:
             self.on_rescale(len(self.allocator.healthy))
         return silent
+
+    def note_occupancy(self, t: float, busy: int, lanes: int,
+                       pending: int) -> None:
+        """Record one engine lane-occupancy sample (the time-series
+        ``serve.py`` prints and the engine benchmarks aggregate into lane
+        utilisation; snapshotted with the runtime for replay parity)."""
+        self.occupancy_events.append(
+            {"t": float(t), "busy": int(busy), "lanes": int(lanes),
+             "pending": int(pending)})
 
     def note_stragglers(self, step: int, job_id: int, lanes: list[int],
                         makespan_before: float,

@@ -23,6 +23,12 @@ DCAF-style degradation and §III-A deadline extension:
 
     PYTHONPATH=src python -m repro.launch.serve --workload lm-decode \\
         --daemon --arrival-rate 0.5 --num-jobs 16 --queries 256 --deadline 8
+
+The daemon defaults to the continuous-batching lane engine (DESIGN.md §14:
+per-lane occupancy accounting instead of slot grants, with a lane-occupancy
+time-series printed from the controller log); ``--no-engine`` restores the
+slot-granted chunked path and ``--lane-pool N`` sizes the engine's lane
+pool explicitly.
 """
 
 from __future__ import annotations
@@ -173,9 +179,13 @@ def _build_daemon_runtime(args):
     from ..serving import (CorePool, ServingConfig, ServingRuntime,
                            WriteAheadLog)
 
+    # --daemon defaults to the continuous-batching engine (DESIGN.md §14);
+    # --no-engine restores the slot-granted chunked path
+    engine = args.engine if args.engine is not None else True
     cfg = ServingConfig(scaling_factor=args.d, sample_frac=args.sample_frac,
                         graph_version=args.graph_version,
-                        stragglers=args.stragglers)
+                        stragglers=args.stragglers,
+                        engine=engine, lane_pool=args.lane_pool)
     pool = CorePool.of(args.max_cores,
                        lanes_per_device=max(1, args.max_lanes or 1),
                        spares_fraction=args.spares_fraction)
@@ -219,6 +229,24 @@ def _lint_self(rules: tuple[str, ...] = ("replay-determinism",)):
              if (pkg_root / d).is_dir()]
     report = run_analysis(paths, rules=list(rules), root=repo_root)
     return report.findings
+
+
+def _print_occupancy(rt, width: int = 8) -> None:
+    """Lane-occupancy time-series from the controller's engine samples,
+    downsampled to ~``width`` evenly spaced rows (DESIGN.md §14 — the
+    operator's view of continuous-lane utilisation)."""
+    occ = getattr(rt.controller, "occupancy_events", None)
+    if not occ:
+        return
+    print(f"  lane occupancy     : {len(occ)} samples")
+    step = max(1, len(occ) // width)
+    picks = list(occ[::step])
+    if picks[-1] is not occ[-1]:
+        picks.append(occ[-1])
+    for s in picks:
+        bar = "#" * round(24 * s["busy"] / max(1, s["lanes"]))
+        print(f"    t={s['t']:8.3f}s busy={s['busy']:>4}/{s['lanes']} "
+              f"pending={s['pending']:>5} |{bar:<24}|")
 
 
 def serve_daemon(args) -> None:
@@ -315,6 +343,7 @@ def serve_daemon(args) -> None:
         print(f"  cache              : {len(cache)} entries "
               f"hit_rate={cache.hit_rate:.3f} "
               f"saved_core_s={cache.stats.saved_cost:.1f}")
+    _print_occupancy(rt)
     if args.record_trace:
         records = rt.trace_records()
         with open(args.record_trace, "w") as f:
@@ -365,6 +394,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--daemon", action="store_true",
                     help="continuous serving runtime (DESIGN.md §10) "
                          "instead of the one-shot pipeline")
+    ap.add_argument("--engine", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="daemon: continuous-batching lane engine "
+                         "(DESIGN.md §14) — the default; --no-engine "
+                         "restores the slot-granted chunked path")
+    ap.add_argument("--lane-pool", type=int, default=0,
+                    help="daemon: engine lane-pool size (0 = one lane per "
+                         "pool core)")
     ap.add_argument("--arrival-rate", type=float, default=0.5,
                     help="daemon: Poisson arrival rate (jobs/second)")
     ap.add_argument("--num-jobs", type=int, default=16,

@@ -36,6 +36,33 @@ from .fora import (ForaParams, _pow2_ceil_host, default_walk_budget, fora,
                    fora_fused)
 from .forward_push import forward_push_np
 from .graph import DeviceGraph, Graph, ShardedDeviceGraph
+from .random_walk import _BULK_RNG_ELEMS, walk_length_for_tail
+
+# Reference batch size for the pinned bulk-RNG decision: the bulk-vs-per-step
+# strategies draw DIFFERENT streams (random_walk.py), and the legacy per-call
+# heuristic counts the actual batch B — so the same query's walks would change
+# bits with chunk size. The executor pins the decision at a fixed reference
+# batch instead, making every fused call (any chunk size, any engine lane
+# count) draw the same per-query stream.
+_REF_BLOCK = 64
+
+# Fused-batch quantum for the bit-parity contract. XLA's SpMM codegen
+# reduces a row with different bits depending on which loop the row lands
+# in — the vectorised main loop covers rows in full 8-wide groups, the
+# scalar remainder handles the B mod 8 tail (and the degenerate B=1 batch
+# is different again). Rows inside full vector groups are bit-identical at
+# EVERY batch size; tail rows are not. So both parity-contract paths
+# quantise the batch to a multiple of this width: ``answer_chunk`` pads by
+# cycling the chunk's own qids (duplicate qid -> same per-query stream ->
+# identical row, free copies), and the engine rounds its lane-pool row
+# count up. Every real row then always runs in a full vector group and its
+# bits never depend on batch composition.
+_PAR_BATCH_QUANTUM = 8
+
+
+def _pad_batch(size: int) -> int:
+    """Round a fused batch size up to the parity quantum."""
+    return -(-size // _PAR_BATCH_QUANTUM) * _PAR_BATCH_QUANTUM
 
 
 @dataclass
@@ -81,6 +108,13 @@ class ForaExecutor:
     #                                lanes per node and serve covered walk
     #                                lanes from it (DESIGN.md §11)
     index_seed: int = 0
+    query_seeded: bool = True      # per-query walk keys fold_in(base, qid):
+    #                                answers are a function of the query id
+    #                                alone, independent of chunk composition
+    #                                (the engine's bit-parity contract)
+    adaptive_budget: bool = False  # recalibrate the walk budget per block
+    #                                from observed residual mass (EWMA)
+    budget_ewma: float = 0.5       # smoothing for the observed r_max
     walk_index: "object | None" = field(default=None, init=False, repr=False)
     _warmed: bool = field(default=False, init=False)
     calls: int = field(default=0, init=False)
@@ -88,6 +122,8 @@ class ForaExecutor:
         default=None, init=False, repr=False)
     _num_walks: int | None = field(default=None, init=False)
     _warmed_sizes: set = field(default_factory=set, init=False)
+    _bulk_rng: bool | None = field(default=None, init=False)
+    _obs_rmax: float | None = field(default=None, init=False)
 
     def __post_init__(self) -> None:
         if self.devices < 1:
@@ -119,14 +155,28 @@ class ForaExecutor:
                              f"{len(devs)} present")
         return Mesh(np.array(devs[:self.devices]), ("shard",))
 
-    def _run_block(self, sources: np.ndarray, seed: int) -> None:
-        key = jax.random.PRNGKey(seed)
+    def _base_key(self) -> jax.Array:
+        """Base PRNG key for query-seeded walk streams: per-query keys are
+        fold_in(base, qid), so they depend on the workload seed and the
+        query id alone — never on chunk composition or call order."""
+        return jax.random.PRNGKey(self.workload.seed)
+
+    def _run_block(self, sources: np.ndarray, seed: int,
+                   qids: Sequence[int] | None = None) -> None:
         if self.fused:
+            if self.query_seeded and qids is not None:
+                key = self._base_key()
+                qseeds = np.ascontiguousarray(np.asarray(qids, np.int32))
+            else:
+                key = jax.random.PRNGKey(seed)
+                qseeds = None
             res = fora_fused(self._device_graph, sources, self.params, key,
                              num_walks=self._num_walks,
-                             index=self.walk_index)
+                             index=self.walk_index, query_seeds=qseeds,
+                             bulk_rng=self._bulk_rng)
             res.pi.block_until_ready()    # the block's single host sync
         else:
+            key = jax.random.PRNGKey(seed)
             res = fora(self.workload.graph, sources, self.params, key)
             pi = res.pi
             if hasattr(pi, "block_until_ready"):
@@ -201,18 +251,25 @@ class ForaExecutor:
                     self._device_graph, width=self.index_budget,
                     alpha=rp.alpha, walk_tail=rp.walk_tail,
                     seed=self.index_seed)
+        if self.fused and self._num_walks is not None:
+            # pin the bulk-RNG strategy at the reference batch so every
+            # chunk size draws the same per-query stream (see _REF_BLOCK)
+            steps = walk_length_for_tail(
+                self.params.alpha, self.params.walk_tail)
+            self._bulk_rng = (_REF_BLOCK * steps * self._num_walks
+                              <= _BULK_RNG_ELEMS)
         nq = self.workload.num_queries
         for qid in self._probe_qids():
             if self.block_size <= 1:
-                src = self._block_sources([qid])
+                probe = [qid]
             else:
                 # clamp the probe window inside the workload (source_of no
                 # longer wraps out-of-range ids)
                 size = min(self.block_size, nq)
                 start = min(qid, nq - size)
-                src = self._block_sources(range(start, start + size))
-            self._run_block(src, seed=qid)
-            self._warmed_sizes.add(len(src))
+                probe = list(range(start, start + size))
+            self._run_block(self._block_sources(probe), seed=qid, qids=probe)
+            self._warmed_sizes.add(len(probe))
         self._warmed = True
 
     def _warm_size(self, size: int) -> None:
@@ -220,8 +277,9 @@ class ForaExecutor:
         remainder chunk of a query list) OUTSIDE the measured region."""
         if size in self._warmed_sizes:
             return
-        src = self._block_sources(range(size))
-        self._run_block(src, seed=0)
+        nq = self.workload.num_queries
+        qids = [i % nq for i in range(size)]   # cycle: size may exceed nq
+        self._run_block(self._block_sources(qids), seed=0, qids=qids)
         self._warmed_sizes.add(size)
 
     def run_chunk(self, query_ids: Sequence[int], *,
@@ -244,6 +302,7 @@ class ForaExecutor:
         if not ids:
             raise ValueError("empty query chunk")
         self.warmup()
+        self._recalibrate_block()
         self._warm_size(len(ids))
         if seed is None:
             seed = ids[0]
@@ -257,15 +316,95 @@ class ForaExecutor:
                 src = jax.device_put(
                     np.ascontiguousarray(self._block_sources(ids),
                                          dtype=np.int32))
-                key = jax.random.PRNGKey(seed)
+                if self.query_seeded:
+                    key = self._base_key()
+                    qseeds = jax.device_put(
+                        np.ascontiguousarray(np.asarray(ids, np.int32)))
+                else:
+                    key = jax.random.PRNGKey(seed)
+                    qseeds = None
             t0 = time.perf_counter()
             res = fora_fused(self._device_graph, src, self.params, key,
                              num_walks=self._num_walks,
-                             index=self.walk_index)
+                             index=self.walk_index, query_seeds=qseeds,
+                             bulk_rng=self._bulk_rng)
             res.pi.block_until_ready()          # the chunk's single sync
             dt = time.perf_counter() - t0
+            if self.adaptive_budget:
+                # observe the block's worst residual mass at the harvest
+                # boundary (pi is already synced; this readback stays out
+                # of any ambient transfer guard the steady-state loop holds
+                # because adaptive mode is opt-in)
+                self.observe_residual_mass(
+                    float(np.asarray(res.residual_mass).max()))
         self.calls += 1
         return RuntimeStats(np.full(len(ids), dt / len(ids)))
+
+    def observe_residual_mass(self, r_max: float) -> None:
+        """Feed an observed per-block max residual mass into the adaptive
+        walk-budget EWMA (satellite of the engine PR — the PR-1 follow-up):
+        the next block / engine insertion recalibrates against it."""
+        if self._obs_rmax is None:
+            self._obs_rmax = float(r_max)
+        else:
+            b = self.budget_ewma
+            self._obs_rmax = (1.0 - b) * self._obs_rmax + b * float(r_max)
+
+    def _recalibrate_block(self) -> None:
+        """Per-block adaptive walk-budget re-calibration: shrink (or grow)
+        the static walk lane count to pow2(ceil(ewma_rmax * omega * safety)),
+        capped by the worst-case default. Opt-in (``adaptive_budget``); the
+        pow2 quantisation plus the EWMA keeps executable churn rare, and any
+        recompile lands in ``_warm_size`` outside the measured region."""
+        if (not self.adaptive_budget or not self.fused
+                or self._obs_rmax is None or self._num_walks is None):
+            return
+        rp = self.params.resolve(self.workload.graph)
+        need = max(1, math.ceil(self._obs_rmax * rp.omega * self.walk_safety))
+        target = min(_pow2_ceil_host(need), default_walk_budget(rp))
+        if target != self._num_walks:
+            self._num_walks = target
+            self._bulk_rng = (_REF_BLOCK
+                              * walk_length_for_tail(self.params.alpha,
+                                                     self.params.walk_tail)
+                              * target <= _BULK_RNG_ELEMS)
+            self._warmed_sizes.clear()   # stale executables: re-warm lazily
+
+    def current_walk_budget(self) -> int | None:
+        """The calibrated static walk lane count (post warmup; the engine
+        reads this at insertion so adaptive re-calibration feeds lane
+        budgets too)."""
+        return self._num_walks
+
+    def answer_chunk(self, query_ids: Sequence[int]) -> np.ndarray:
+        """PPR rows for one chunk via the chunked fused path — the
+        bit-parity reference the engine is tested against. Requires
+        ``query_seeded`` (otherwise chunk answers depend on composition and
+        no cross-batch parity exists)."""
+        if not (self.fused and self.query_seeded):
+            raise ValueError("answer_chunk needs the fused query-seeded path")
+        ids = list(query_ids)
+        if not ids:
+            raise ValueError("empty query chunk")
+        # quantise the batch into full vector groups by cycling the chunk's
+        # own qids (see _PAR_BATCH_QUANTUM): duplicate qids draw the same
+        # stream, so the extra rows are free copies
+        pad_to = _pad_batch(len(ids))
+        run_ids = (ids * pad_to)[:pad_to]
+        self.warmup()
+        self._recalibrate_block()
+        self._warm_size(len(run_ids))
+        with jax.transfer_guard("allow"):
+            src = jax.device_put(
+                np.ascontiguousarray(self._block_sources(run_ids),
+                                     dtype=np.int32))
+            qseeds = jax.device_put(
+                np.ascontiguousarray(np.asarray(run_ids, np.int32)))
+        res = fora_fused(self._device_graph, src, self.params,
+                         self._base_key(), num_walks=self._num_walks,
+                         index=self.walk_index, query_seeds=qseeds,
+                         bulk_rng=self._bulk_rng)
+        return np.asarray(res.pi)[:len(ids)]
 
     def degrade(self, factor: float) -> None:
         """DCAF-style graceful degradation for the *remaining* queries: scale
@@ -306,7 +445,7 @@ class ForaExecutor:
             for i, qid in enumerate(ids):
                 src = self._block_sources([qid])
                 t0 = time.perf_counter()
-                self._run_block(src, seed=qid)
+                self._run_block(src, seed=qid, qids=[qid])
                 times[i] = time.perf_counter() - t0
                 self.calls += 1
         else:
@@ -317,7 +456,7 @@ class ForaExecutor:
                 chunk = ids[lo: lo + self.block_size]
                 src = self._block_sources(chunk)
                 t0 = time.perf_counter()
-                self._run_block(src, seed=chunk[0])
+                self._run_block(src, seed=chunk[0], qids=chunk)
                 dt = time.perf_counter() - t0
                 times[lo: lo + len(chunk)] = dt / len(chunk)
                 self.calls += 1

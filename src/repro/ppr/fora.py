@@ -135,12 +135,14 @@ def default_walk_budget(rp: ResolvedFora) -> int:
 
 def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
                      out_offsets, out_degree, sources, key,
-                     idx_endpoints=None, idx_budget=None, idx_key=None, *,
+                     idx_endpoints=None, idx_budget=None, idx_key=None,
+                     query_seeds=None, *,
                      alpha: float, rmax: float, omega: float, n: int,
                      num_walks: int, num_steps: int, max_push_iters: int,
                      force: str | None = None,
                      shard_axis: str | None = None, num_shards: int = 1,
-                     index_lanes: int = 0, index_partial: bool = False):
+                     index_lanes: int = 0, index_partial: bool = False,
+                     bulk_rng: bool | None = None):
     """The whole FORA query block as ONE executable: seed construction,
     frontier push (pull-form ELL SpMM, dense or sliced view), pow2
     walk-budget quantisation and the residual walks all stay on device.
@@ -162,6 +164,16 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
     index's per-lane trajectory streams (``idx_key``). Start sampling is the
     same inverse-CDF draw from the query key as the live path, so per-query
     randomness is untouched and the zero-host-sync contract is preserved.
+
+    ``query_seeds`` (int32 (B,), usually the query ids) switches per-query
+    key derivation from ``split(key, B)`` — which ties a query's stream to
+    its *position and batch* — to ``fold_in(key, qid)``, making every
+    query's stream a function of (base key, qid) alone. This is the
+    composition-invariance contract the continuous-batching engine's
+    bit-parity rests on: the same query inserted into any lane of any batch
+    draws the same walks. ``bulk_rng`` pins the bulk-vs-per-step draw
+    strategy (two *different* streams) explicitly; ``None`` keeps the legacy
+    B-dependent heuristic.
     """
     B = sources.shape[0]
     seeds = jnp.zeros((B, n), jnp.float32).at[
@@ -177,10 +189,18 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
     need = jnp.maximum(jnp.ceil(r_sum * omega), 1.0)
     w_eff = jnp.exp2(jnp.ceil(jnp.log2(need)))
     w_eff = jnp.clip(w_eff, 1.0, float(num_walks)).astype(jnp.int32)
-    keys = jax.random.split(key, B)
+    if query_seeds is None:
+        keys = jax.random.split(key, B)
+    else:
+        keys = jax.vmap(lambda q: jax.random.fold_in(key, q))(query_seeds)
     # bulk-RNG decision must count the vmapped batch: the (L, W) draw
-    # batches to (B, L, W) under vmap
-    bulk = B * num_steps * num_walks <= _BULK_RNG_ELEMS
+    # batches to (B, L, W) under vmap. Callers that need the stream to be
+    # batch-composition-invariant (the executor / engine) pin it via the
+    # bulk_rng static instead.
+    if bulk_rng is None:
+        bulk = B * num_steps * num_walks <= _BULK_RNG_ELEMS
+    else:
+        bulk = bulk_rng
     if index_lanes > 0:
         # walk-index mode: starts sampled exactly as the live path samples
         # them (same key split, same op order), endpoints for the covered
@@ -229,7 +249,7 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
 
 _FUSED_STATICS = ("alpha", "rmax", "omega", "n", "num_walks", "num_steps",
                   "max_push_iters", "force", "shard_axis", "num_shards",
-                  "index_lanes", "index_partial")
+                  "index_lanes", "index_partial", "bulk_rng")
 _fora_fused = jax.jit(_fora_fused_impl, static_argnames=_FUSED_STATICS)
 # On TPU the (B,) sources buffer is donated (it aliases the int32
 # walks_effective output). On CPU donation is a measured ~1.7 ms/call
@@ -242,15 +262,18 @@ _fora_fused_donating = jax.jit(_fora_fused_impl,
 
 @functools.lru_cache(maxsize=64)
 def _fora_fused_sharded_exe(mesh, axis: str, num_shards: int, sliced: bool,
-                            alpha: float, rmax: float, omega: float, n: int,
+                            seeded: bool, alpha: float, rmax: float,
+                            omega: float, n: int,
                             num_walks: int, num_steps: int,
-                            max_push_iters: int, force: str | None):
+                            max_push_iters: int, force: str | None,
+                            bulk_rng: bool | None):
     """Build (and cache per mesh/statics) the shard_map'd fused executable.
 
     The whole fused body runs per-shard: in_specs shard the push table by
     (virtual) row along ``axis`` and replicate everything else; out_specs are
     replicated because the body's collectives (all-gather / psum) already
-    leave every output identical on all shards."""
+    leave every output identical on all shards. ``seeded`` adds the
+    replicated per-query ``query_seeds`` input (fold_in key derivation)."""
     from jax.sharding import PartitionSpec as P
 
     from ..distributed.ctx import shard_map_compat
@@ -258,23 +281,27 @@ def _fora_fused_sharded_exe(mesh, axis: str, num_shards: int, sliced: bool,
     kwargs = dict(alpha=alpha, rmax=rmax, omega=omega, n=n,
                   num_walks=num_walks, num_steps=num_steps,
                   max_push_iters=max_push_iters, force=force,
-                  shard_axis=axis, num_shards=num_shards)
+                  shard_axis=axis, num_shards=num_shards, bulk_rng=bulk_rng)
     row = P(axis, None)
     repl = P()
     if sliced:
         def fn(nbr, msk, wts, row_map, edge_dst, out_offsets, out_degree,
-               sources, key):
+               sources, key, *qseeds):
             return _fora_fused_impl(nbr, msk, wts, row_map, edge_dst,
                                     out_offsets, out_degree, sources, key,
-                                    **kwargs)
+                                    None, None, None,
+                                    qseeds[0] if qseeds else None, **kwargs)
         in_specs = (row, row, row, P(axis), repl, repl, repl, repl, repl)
     else:
         def fn(nbr, msk, wts, edge_dst, out_offsets, out_degree,
-               sources, key):
+               sources, key, *qseeds):
             return _fora_fused_impl(nbr, msk, wts, None, edge_dst,
                                     out_offsets, out_degree, sources, key,
-                                    **kwargs)
+                                    None, None, None,
+                                    qseeds[0] if qseeds else None, **kwargs)
         in_specs = (row, row, row, repl, repl, repl, repl, repl)
+    if seeded:
+        in_specs = in_specs + (repl,)
     mapped = shard_map_compat(fn, mesh=mesh, in_specs=in_specs,
                               out_specs=(repl, repl, repl, repl))
     return jax.jit(mapped)
@@ -282,7 +309,8 @@ def _fora_fused_sharded_exe(mesh, axis: str, num_shards: int, sliced: bool,
 
 def _fora_fused_sharded(dg: ShardedDeviceGraph, sources, rp: ResolvedFora,
                         key: jax.Array, *, num_walks: int,
-                        force: str | None) -> FusedForaResult:
+                        force: str | None, query_seeds=None,
+                        bulk_rng: bool | None = None) -> FusedForaResult:
     """shard_map dispatch of :func:`fora_fused` over a sharded residency."""
     steps = walk_length_for_tail(rp.alpha, rp.walk_tail)
     # pow2 budget, then rounded up so every shard gets an equal lane slice.
@@ -296,12 +324,15 @@ def _fora_fused_sharded(dg: ShardedDeviceGraph, sources, rp: ResolvedFora,
     sources = jnp.asarray(sources).astype(jnp.int32).reshape(-1)
     exe = _fora_fused_sharded_exe(
         dg.mesh, dg.axis, dg.num_shards, dg.in_row_map is not None,
-        rp.alpha, rp.rmax, rp.omega, dg.n, num_walks, steps, 10_000, force)
+        query_seeds is not None, rp.alpha, rp.rmax, rp.omega, dg.n,
+        num_walks, steps, 10_000, force, bulk_rng)
     table = (dg.in_neighbors, dg.in_mask, dg.in_weights)
     if dg.in_row_map is not None:
         table = table + (dg.in_row_map,)
-    pi, r_sum, iters, w_eff = exe(*table, dg.edge_dst, dg.out_offsets,
-                                  dg.out_degree, sources, key)
+    args = (dg.edge_dst, dg.out_offsets, dg.out_degree, sources, key)
+    if query_seeds is not None:
+        args = args + (jnp.asarray(query_seeds).astype(jnp.int32).reshape(-1),)
+    pi, r_sum, iters, w_eff = exe(*table, *args)
     return FusedForaResult(pi=pi, residual_mass=r_sum, push_iters=iters,
                            walks_effective=w_eff, walks_budget=num_walks)
 
@@ -311,7 +342,9 @@ def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
                key: jax.Array | None = None, *,
                num_walks: int | None = None,
                force: str | None = None,
-               index: "object | None" = None) -> FusedForaResult:
+               index: "object | None" = None,
+               query_seeds=None,
+               bulk_rng: bool | None = None) -> FusedForaResult:
     """Zero-host-sync FORA on a :class:`DeviceGraph` (or, node-sharded
     across a device mesh, a :class:`ShardedDeviceGraph` — DESIGN.md §9).
 
@@ -329,6 +362,12 @@ def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
     been built at this call's alpha/walk-tail (validated here) and is
     single-device only — the sharded residency replicates its own walk
     arrays and rejects an index.
+
+    ``query_seeds`` (int32 (B,)) derives each row's walk key as
+    ``fold_in(key, query_seeds[i])`` instead of ``split(key, B)`` — per-query
+    streams become independent of batch composition, the invariance the
+    serving engine's bit-parity contract needs. ``bulk_rng`` pins the
+    bulk-vs-per-step draw strategy (``None`` = legacy per-call heuristic).
     """
     rp = params.resolve(dg)
     if key is None:
@@ -340,7 +379,8 @@ def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
             raise ValueError("walk index is single-device only; the sharded "
                              "residency draws its walk lanes per shard")
         return _fora_fused_sharded(dg, sources, rp, key,
-                                   num_walks=num_walks, force=force)
+                                   num_walks=num_walks, force=force,
+                                   query_seeds=query_seeds, bulk_rng=bulk_rng)
     num_walks = _pow2_ceil_host(num_walks)
     steps = walk_length_for_tail(rp.alpha, rp.walk_tail)
     index_lanes, index_partial = 0, False
@@ -364,13 +404,16 @@ def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
     else:
         sources = jnp.asarray(sources).astype(jnp.int32).reshape(-1)
         fused_fn = _fora_fused
+    if query_seeds is not None:
+        query_seeds = jnp.asarray(query_seeds).astype(jnp.int32).reshape(-1)
     pi, r_sum, iters, w_eff = fused_fn(
         dg.in_neighbors, dg.in_mask, dg.in_weights, dg.in_row_map,
         dg.edge_dst, dg.out_offsets, dg.out_degree, sources, key,
-        idx_e, idx_b, idx_k,
+        idx_e, idx_b, idx_k, query_seeds,
         alpha=rp.alpha, rmax=rp.rmax, omega=rp.omega, n=dg.n,
         num_walks=num_walks, num_steps=steps, max_push_iters=10_000,
-        force=force, index_lanes=index_lanes, index_partial=index_partial)
+        force=force, index_lanes=index_lanes, index_partial=index_partial,
+        bulk_rng=bulk_rng)
     return FusedForaResult(pi=pi, residual_mass=r_sum, push_iters=iters,
                            walks_effective=w_eff, walks_budget=num_walks)
 

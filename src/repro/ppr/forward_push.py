@@ -65,7 +65,8 @@ def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
                  seeds: jax.Array, *, alpha: float, rmax: float, n: int,
                  max_iters: int = 10_000, row_map: jax.Array | None = None,
                  force: str | None = None,
-                 shard_axis: str | None = None) -> PushResult:
+                 shard_axis: str | None = None,
+                 pi0: jax.Array | None = None) -> PushResult:
     """Batched frontier push over the pull-form ELL view.
 
     ``in_neighbors``/``in_mask``/``in_weights`` are the (n, K) padded
@@ -83,6 +84,11 @@ def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
     (all-gather for dense rows, psum for sliced partials — DESIGN.md §9);
     ``seeds``/``out_degree`` stay replicated so the frontier schedule is
     identical on every shard.
+
+    ``pi0`` (default zeros) seeds the reserve accumulator, letting the
+    serving engine resume a bounded push (``max_iters`` = sweeps per engine
+    step) bit-identically to one uninterrupted run: chaining while_loop
+    executions of the SAME body is the same left-fold as one long loop.
     """
     deg = out_degree.astype(jnp.float32)
     deg_safe = jnp.maximum(deg, 1.0)
@@ -119,8 +125,8 @@ def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
         r = state.r * (1.0 - front) + moved
         return PushState(pi=pi, r=r, iters=state.iters + 1)
 
-    init = PushState(pi=jnp.zeros_like(seeds), r=seeds,
-                     iters=jnp.zeros((), jnp.int32))
+    init = PushState(pi=jnp.zeros_like(seeds) if pi0 is None else pi0,
+                     r=seeds, iters=jnp.zeros((), jnp.int32))
     final = jax.lax.while_loop(cond, body, init)
     return PushResult(pi=final.pi, r=final.r, iters=final.iters)
 

@@ -2,22 +2,29 @@
 
 Public API:
     CorePool                         shared devices x lanes core pool
+    LaneLedger                       lane-second admission ledger (§14)
     Job, JobRecord, JobState         deadline-tagged requests + outcomes
     ServingConfig, ServingReport     loop knobs / aggregate results
     ServingRuntime                   the continuous-arrivals event loop
     SimJobExecutor                   seeded simulated per-job executor
+    SimLaneEngine, LaneTask          virtual-time lane pool (engine mode)
     run_single_job                   one-shot path (dna_real, bit-for-bit)
     WriteAheadLog, RecoveryInfo      durable serving state (DESIGN.md §12)
+
+The device-side continuous-batching engine (``QueryEngine``) lives in
+:mod:`repro.serving.engine`; import it from there — it pulls in jax, which
+the event-loop modules above deliberately do not.
 """
 
 from .job import Job, JobRecord, JobState
-from .pool import CorePool
+from .lanes import LaneTask, SimLaneEngine
+from .pool import CorePool, LaneLedger
 from .runtime import (ServingConfig, ServingReport, ServingRuntime,
                       SimJobExecutor, run_single_job)
 from .wal import RecoveryInfo, WriteAheadLog
 
 __all__ = [
-    "CorePool", "Job", "JobRecord", "JobState", "RecoveryInfo",
-    "ServingConfig", "ServingReport", "ServingRuntime", "SimJobExecutor",
-    "WriteAheadLog", "run_single_job",
+    "CorePool", "Job", "JobRecord", "JobState", "LaneLedger", "LaneTask",
+    "RecoveryInfo", "ServingConfig", "ServingReport", "ServingRuntime",
+    "SimJobExecutor", "SimLaneEngine", "WriteAheadLog", "run_single_job",
 ]

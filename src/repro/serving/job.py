@@ -66,6 +66,16 @@ class Job:
     reissue_rng: Any = None                # per-job straggler re-issue stream
     #                                        (seeded off job.seed; snapshotted
     #                                        so recovery replays identically)
+    # -- engine mode (continuous lane batching, DESIGN.md §14) -------------
+    engine_total: int = 0                  # queries routed through the engine
+    engine_done: int = 0                   # completed or shed by late hits
+    inflight: int = 0                      # queries on lanes right now
+    draw_scale: float = 1.0                # executor scale when durations
+    #                                        were drawn — insertion rescales
+    #                                        by current/draw for degradation
+    #                                        and slowdowns applied since
+    engine_pending: list | None = None     # [[qid, duration], ...] awaiting
+    #                                        the engine_ready event (t_pre)
     _accounted_to: float = 0.0             # core-seconds integration cursor
     log: list[str] = field(default_factory=list)
 
@@ -107,7 +117,11 @@ class Job:
 
     @property
     def remaining(self) -> int:
-        return self.stepper.remaining if self.stepper is not None else 0
+        if self.stepper is not None:
+            return self.stepper.remaining
+        if self.engine_total:
+            return max(0, self.engine_total - self.engine_done)
+        return 0
 
     def t_avg_estimate(self) -> float:
         """Planning-time per-query estimate: rolling mean, scaled by the

@@ -166,3 +166,58 @@ class CorePool:
         """Map a grant onto the healthy device set (cores = devices x lanes)."""
         return plan_core_mesh(cores, self.allocator.capacity,
                               max_lanes_per_device=self.lanes_per_device)
+
+
+@dataclass
+class LaneLedger:
+    """Lane-second admission ledger for engine mode (DESIGN.md §14).
+
+    The engine path never holds slot grants: lanes are a shared continuous
+    resource and a job's claim on them is its *committed lane-seconds* —
+    the per-query durations it reserved at admission, consumed as queries
+    complete. Admission checks that outstanding commitments plus the new
+    job's work fit inside ``lanes * T_rel``; the ledger is the running left
+    side of that inequality. Pure accounting (the :class:`SimLaneEngine`
+    owns actual occupancy); snapshotted with the runtime so engine-mode
+    recovery replays the same admission decisions.
+    """
+
+    committed: dict[int, float] = field(default_factory=dict)
+
+    @property
+    def outstanding(self) -> float:
+        """Total reserved-but-unconsumed lane-seconds across jobs."""
+        return sum(self.committed.values())
+
+    def reserve(self, job_id: int, lane_seconds: float) -> None:
+        if lane_seconds < 0:
+            raise ValueError("lane_seconds must be >= 0")
+        self.committed[job_id] = (self.committed.get(job_id, 0.0)
+                                  + float(lane_seconds))
+
+    def consume(self, job_id: int, lane_seconds: float) -> None:
+        """Burn down a job's commitment as one of its queries completes
+        (clamped at zero — degraded queries may finish under estimate)."""
+        held = self.committed.get(job_id)
+        if held is None:
+            return
+        left = held - float(lane_seconds)
+        if left <= 1e-12:
+            self.committed.pop(job_id)
+        else:
+            self.committed[job_id] = left
+
+    def release(self, job_id: int) -> float:
+        """Drop a job's whole remaining commitment (completion/rejection)."""
+        return self.committed.pop(job_id, 0.0)
+
+    # -- snapshots ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"committed": [[j, v] for j, v
+                              in sorted(self.committed.items())]}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "LaneLedger":
+        led = cls()
+        led.committed = {int(j): float(v) for j, v in state["committed"]}
+        return led

@@ -56,7 +56,8 @@ from ..ft.elastic import ElasticController, FailureInjector, HeartbeatMonitor
 from ..index import ResultCache
 from ..index.result_cache import CacheEntry, CacheStats
 from .job import Job, JobRecord, JobState
-from .pool import CorePool
+from .lanes import SimLaneEngine
+from .pool import CorePool, LaneLedger
 from .wal import RecoveryInfo, WriteAheadLog, pack_state, unpack_state
 
 
@@ -87,6 +88,13 @@ class ServingConfig:
     #                                    straggling lanes on pool spares
     #                                    (DESIGN.md §12; needs spares_fraction
     #                                    > 0 on the pool to ever fire)
+    engine: bool = False               # continuous-batching lane engine
+    #                                    (DESIGN.md §14): per-lane occupancy
+    #                                    accounting replaces slot grants,
+    #                                    admission reserves lane-seconds,
+    #                                    free lanes take the EDF-earliest
+    #                                    admitted query from ANY job
+    lane_pool: int = 0                 # engine lane count (0 = pool.total)
 
     def __post_init__(self) -> None:
         if not 0.0 < self.scaling_factor <= 1.0:
@@ -95,6 +103,8 @@ class ServingConfig:
             raise ValueError("degrade_factor must be in (0,1)")
         if self.preprocess_cores < 1:
             raise ValueError("preprocess_cores must be >= 1")
+        if self.lane_pool < 0:
+            raise ValueError("lane_pool must be >= 0")
 
 
 @dataclass(frozen=True)
@@ -235,6 +245,13 @@ class ServingRuntime:
         self.jobs: list[Job] = []
         self._heap: list[tuple[float, int, str, Any]] = []
         self._seq = 0
+        # engine mode (DESIGN.md §14): the virtual lane pool + the
+        # lane-second admission ledger replace slot grants entirely
+        self.engine: SimLaneEngine | None = None
+        self.ledger: LaneLedger | None = None
+        if config.engine:
+            self.engine = SimLaneEngine(config.lane_pool or pool.total)
+            self.ledger = LaneLedger()
         self._grant_peak: dict[int, int] = {}
         self._lemma2_cs: dict[int, float] = {}
         self._waiting: list[Job] = []
@@ -427,9 +444,11 @@ class ServingRuntime:
                 self._handle_slot(payload, t)
             elif kind == "pre_release":
                 # a preprocessing reservation ends (Alg. 2's c cores return
-                # to the pool); a waiter may now fit
+                # to the pool); a waiter may now fit — and in engine mode
+                # the lane cap just rose, so free lanes refill too
                 if self.pool.unreserve(payload.job_id):
                     self._pop_waiter(self.clock)
+                    self._engine_fill(self.clock)
             elif kind == "publish":
                 # preprocessing-sample answers become visible only once the
                 # sample has actually finished computing (t_pre elapsed) —
@@ -437,6 +456,12 @@ class ServingRuntime:
                 # jobs hit answers that do not exist yet in virtual time
                 job, qids, stats = payload
                 self._record_answers(job, qids, stats, self.clock)
+            elif kind == "engine_ready":
+                # a job's preprocessing finished: its queries join the
+                # engine's EDF ready queue and grab any free lanes
+                self._handle_engine_ready(payload, self.clock)
+            elif kind == "engine":
+                self._handle_engine_done(payload, self.clock)
             elif kind == "fail":
                 self._handle_failure(payload, self.clock)
             elif kind == "slow":
@@ -456,10 +481,14 @@ class ServingRuntime:
         """Identity of an event independent of object graph (job ids,
         failure ordinals, slowdown factors) — what replay verification
         compares against the log."""
-        if kind in ("arrive", "slot", "pre_release"):
+        if kind in ("arrive", "slot", "pre_release", "engine_ready"):
             return payload.job_id
         if kind == "publish":
             return payload[0].job_id
+        if kind == "engine":
+            # a list, not a tuple: the logged tag round-trips through JSON
+            # and replay compares the deserialised value
+            return [int(x) for x in payload]
         if kind == "fail":
             return int(payload)
         if kind == "slow":
@@ -510,21 +539,25 @@ class ServingRuntime:
 
     # -- state packing ------------------------------------------------------
     def _pack_payload(self, kind: str, payload: Any) -> Any:
-        if kind in ("arrive", "slot", "pre_release"):
+        if kind in ("arrive", "slot", "pre_release", "engine_ready"):
             return {"job": payload.job_id}
         if kind == "publish":
             job, qids, stats = payload
             return {"job": job.job_id, "qids": [int(q) for q in qids],
                     "times": np.asarray(stats.times)}
+        if kind == "engine":
+            return [int(x) for x in payload]     # (lane, qid, job_id)
         return payload                       # fail ordinal / slow factor
 
     def _unpack_payload(self, kind: str, packed: Any) -> Any:
-        if kind in ("arrive", "slot", "pre_release"):
+        if kind in ("arrive", "slot", "pre_release", "engine_ready"):
             return self.jobs[int(packed["job"])]
         if kind == "publish":
             return (self.jobs[int(packed["job"])],
                     [int(q) for q in packed["qids"]],
                     RuntimeStats(np.asarray(packed["times"])))
+        if kind == "engine":
+            return (int(packed[0]), int(packed[1]), int(packed[2]))
         return packed
 
     def _pack_job(self, job: Job) -> dict:
@@ -537,6 +570,9 @@ class ServingRuntime:
             "replans": job.replans, "core_seconds": job.core_seconds,
             "cache_hits": job.cache_hits, "late_hits": job.late_hits,
             "effective_queries": job.effective_queries,
+            "engine_total": job.engine_total, "engine_done": job.engine_done,
+            "inflight": job.inflight, "draw_scale": job.draw_scale,
+            "engine_pending": job.engine_pending,
             "accounted_to": job._accounted_to, "log": list(job.log),
             "mesh": (None if job.mesh is None else
                      [job.mesh.cores, job.mesh.devices, job.mesh.lanes]),
@@ -572,6 +608,13 @@ class ServingRuntime:
         job.cache_hits = int(d["cache_hits"])
         job.late_hits = int(d["late_hits"])
         job.effective_queries = int(d["effective_queries"])
+        job.engine_total = int(d.get("engine_total", 0))
+        job.engine_done = int(d.get("engine_done", 0))
+        job.inflight = int(d.get("inflight", 0))
+        job.draw_scale = float(d.get("draw_scale", 1.0))
+        pend = d.get("engine_pending")
+        job.engine_pending = (None if pend is None else
+                              [[int(q), float(t)] for q, t in pend])
         job._accounted_to = float(d["accounted_to"])
         job.log = [str(line) for line in d["log"]]
         job.mesh = (None if d["mesh"] is None else
@@ -621,8 +664,12 @@ class ServingRuntime:
             "model": {"ewma": self.model._ewma},
             "controller": {
                 "rescale_events": list(self.controller.rescale_events),
-                "straggler_events": list(self.controller.straggler_events)},
+                "straggler_events": list(self.controller.straggler_events),
+                "occupancy_events": list(self.controller.occupancy_events)},
         }
+        if self.engine is not None:
+            state["engine"] = self.engine.state_dict()
+            state["ledger"] = self.ledger.state_dict()
         if self.cache is not None:
             state["cache"] = {
                 "entries": [[list(k), e.cost, e.created, e.hits]
@@ -661,6 +708,11 @@ class ServingRuntime:
             "rescale_events"]
         self.controller.straggler_events[:] = state["controller"][
             "straggler_events"]
+        self.controller.occupancy_events[:] = state["controller"].get(
+            "occupancy_events", [])
+        if "engine" in state:
+            self.engine = SimLaneEngine.from_state(state["engine"])
+            self.ledger = LaneLedger.from_state(state["ledger"])
         if self.cache is not None and "cache" in state:
             self.cache._entries.clear()
             for key, cost, created, hits in state["cache"]["entries"]:
@@ -944,7 +996,9 @@ class ServingRuntime:
             # this job (reporting only — admission handles the job itself)
             self._lemma2_cs[job.job_id] = 0.0
 
-        if not self._admit(job, now):
+        admitted = (self._admit_engine(job, now) if self.engine is not None
+                    else self._admit(job, now))
+        if not admitted:
             job.state = JobState.REJECTED
             job.log.append(f"t={now:.3f} rejected at admission")
             self._wal_note("rejected", job=job.job_id)
@@ -962,6 +1016,34 @@ class ServingRuntime:
                            (job, sample_ids, stats))
             self._reserve_pre(job, now, c)
             self._pop_waiter(now + job.t_pre)
+            return
+
+        if self.engine is not None:
+            # continuous-batching path (DESIGN.md §14): no slot grant is
+            # held — per-query durations are drawn NOW (after the admission
+            # ladder, so any degradation applied there is priced in), their
+            # sum reserved as lane-seconds, and the queries join the EDF
+            # ready queue once preprocessing finishes (engine_ready)
+            rest_stats = job.executor(rest_ids)
+            job.draw_scale = float(getattr(job.executor, "scale", 1.0))
+            durations = np.asarray(rest_stats.times, dtype=float)
+            work = float(durations.sum())
+            self.ledger.reserve(job.job_id, work)
+            job.engine_total = len(rest_ids)
+            job.engine_pending = [[int(q), float(t)]
+                                  for q, t in zip(rest_ids, durations)]
+            job.state = JobState.RUNNING
+            job.slots_t0 = now + job.t_pre
+            self._reserve_pre(job, now, c)
+            job.log.append(f"t={now:.3f} admitted (engine) s={s} "
+                           f"queries={len(rest_ids)} work={work:.3f} "
+                           f"lane-s t_pre={job.t_pre:.4f}")
+            self._wal_note("engine_admitted", job=job.job_id, s=s,
+                           queries=len(rest_ids), work=work)
+            if self._cache_on:
+                self._push(job.slots_t0, "publish",
+                           (job, sample_ids, stats))
+            self._push(job.slots_t0, "engine_ready", job)
             return
 
         ell, k = self._initial_grant(job, now, len(rest_ids))
@@ -1054,6 +1136,179 @@ class ServingRuntime:
                                f"{new_T:.3f}s (cap {capacity})")
                 return True
             return False
+
+    # -- engine mode: continuous lane batching (DESIGN.md §14) --------------
+    def _engine_cap(self) -> int:
+        """Usable lanes right now: the configured pool, shrunk by device
+        failures (the allocator's live capacity) and by preprocessing
+        reservations — the Alg. 2 ``c`` cores still come out of the same
+        machine. In-flight lanes above a shrunk cap drain normally; only
+        new insertions see the reduced capacity."""
+        return min(self.engine.lanes,
+                   max(0, self.pool.total - self.pool.reserved))
+
+    def _admit_engine(self, job: Job, now: float) -> bool:
+        """Lemma-1 admission for the engine path, with the same
+        degrade-then-extend rescue ladder as :meth:`_admit`. Two checks
+        must pass: the paper's core bound fits the lane pool, and the
+        job's estimated lane-seconds fit the pool's uncommitted
+        lane-second budget over its window (the :class:`LaneLedger` —
+        occupancy accounting replaces slot grants)."""
+        cfg = self.cfg
+        capacity = self._engine_cap()
+        if capacity < 1:
+            return False
+        x_eff = self.model.discounted_queries(job.effective_queries)
+        t_disc = self.model.time_discount()
+        while True:
+            T_rel = job.abs_deadline - now
+            t_max = job.stats.t_max * job.est_scale * t_disc
+            t_avg = job.stats.t_avg * job.est_scale * t_disc
+            try:
+                need = required_cores(
+                    lemma1_lower_bound(x_eff, t_max, T_rel))
+            except ValueError:
+                need = None                       # t_max > T or T <= 0
+            est_work = x_eff * t_avg              # expected lane-seconds
+            if (need is not None and need <= capacity
+                    and self.ledger.outstanding + est_work
+                    <= capacity * max(T_rel, 0.0)):
+                return True
+            if self._try_degrade(job, now, "engine admission"):
+                continue
+            if cfg.extend:
+                new_T = minimal_feasible_deadline(
+                    x_eff, job.stats.t_max * job.est_scale * t_disc,
+                    capacity)
+                new_T = max(new_T, (self.ledger.outstanding + est_work)
+                            / capacity)
+                job.abs_deadline = now + new_T
+                job.extended = True
+                job.log.append(f"t={now:.3f} engine admission extended T "
+                               f"to {new_T:.3f}s (lanes {capacity})")
+                return True
+            return False
+
+    def _handle_engine_ready(self, job: Job, now: float) -> None:
+        """Preprocessing done: move the job's (qid, duration) pairs from
+        its pending list into the engine's EDF ready queue and fill
+        whatever lanes are free."""
+        if job.state is not JobState.RUNNING or not job.engine_pending:
+            return
+        for qid, dur in job.engine_pending:
+            self.engine.enqueue(job.abs_deadline, job.job_id, int(qid),
+                                float(dur))
+        job.engine_pending = None
+        self._engine_fill(now)
+
+    def _engine_fill(self, now: float) -> None:
+        """THE continuous-batching step: while a lane is free and any
+        admitted query is ready, insert the EDF-earliest one. This runs at
+        every insertion opportunity (ready/completion/pre_release), which
+        is exactly what replaces between-slot Alg.-2 replanning — lanes
+        rebalance across jobs the moment one frees up. Still-pending
+        queries re-probe the cache first (DESIGN.md §11 late hits: answers
+        produced by concurrent jobs shed work before it ever takes a
+        lane)."""
+        if self.engine is None:
+            return
+        cap = self._engine_cap()
+        hits = lookups = 0
+        filled = False
+        while True:
+            lane = self.engine.free_lane(cap)
+            if lane is None:
+                break
+            entry = self.engine.pop_ready()
+            if entry is None:
+                break
+            _, job_id, qid, dur = entry
+            job = self.jobs[job_id]
+            if job.state is not JobState.RUNNING:
+                continue                       # job terminated mid-queue
+            if self._cache_on and self.cfg.cache_recheck:
+                key = self._cache_key(job, qid)
+                if key is not None:
+                    lookups += 1
+                    if self.cache.get(key, now=now) is not None:
+                        hits += 1
+                        job.late_hits += 1
+                        job.engine_done += 1
+                        self.ledger.consume(job.job_id, float(dur))
+                        job.log.append(f"t={now:.3f} q{qid} answered from "
+                                       "cache (late hit, lane bypassed)")
+                        self._engine_job_done(job, now)
+                        continue
+            scale = getattr(job.executor, "scale", None)
+            eff = (float(dur) if scale is None
+                   else float(dur) * float(scale) / job.draw_scale)
+            rebalanced = self.engine.occupy(lane, qid, job_id, now,
+                                            now + eff, eff)
+            job.inflight += 1
+            self._grant_peak[job_id] = max(self._grant_peak.get(job_id, 0),
+                                           job.inflight)
+            self._wal_note("engine_insert", job=job_id, qid=qid, lane=lane,
+                           t_end=now + eff)
+            if rebalanced:
+                self._wal_note("engine_rebalance", lane=lane, job=job_id)
+            self._push(now + eff, "engine", (lane, qid, job_id))
+            filled = True
+        if lookups:
+            self.model.observe(hits, lookups)
+        if filled or hits:
+            self._log_occupancy(now)
+
+    def _handle_engine_done(self, payload: tuple[int, int, int],
+                            now: float) -> None:
+        """One lane's query converged: evict it, bill its lane-seconds,
+        publish its answer, and refill the lane."""
+        lane, qid, job_id = payload
+        job = self.jobs[job_id]
+        task = self.engine.release(lane)
+        if task.qid != qid or task.job_id != job_id:
+            raise RuntimeError(
+                f"engine accounting diverged: lane {lane} held "
+                f"q{task.qid}/job{task.job_id}, event said q{qid}/"
+                f"job{job_id}")
+        job.inflight -= 1
+        job.engine_done += 1
+        job.core_seconds += task.work
+        self.ledger.consume(job_id, task.work)
+        if self._cache_on:
+            key = self._cache_key(job, qid)
+            if key is not None:
+                self.cache.put(key, cost=task.work, now=now)
+        self._wal_note("engine_evict", job=job_id, qid=qid, lane=lane)
+        self._engine_job_done(job, now)
+        self._engine_fill(now)
+        self._log_occupancy(now)
+
+    def _engine_job_done(self, job: Job, now: float) -> None:
+        """Terminal check after any engine-side progress: every routed
+        query accounted for and none in flight -> the job is DONE."""
+        if (job.state is JobState.RUNNING and job.engine_total
+                and job.engine_done >= job.engine_total
+                and job.inflight == 0):
+            job.state = JobState.DONE
+            job.completion = now
+            self.ledger.release(job.job_id)
+            job.log.append(f"t={now:.3f} done (engine) "
+                           f"lateness={job.lateness:.4f}")
+            self._wal_note("completed", job=job.job_id,
+                           lateness=job.lateness)
+            self._pop_waiter(now)
+
+    def _log_occupancy(self, now: float) -> None:
+        """Sample the lane-occupancy time-series into the controller log
+        (deduped against the previous sample so steady state costs
+        nothing)."""
+        ev = self.controller.occupancy_events
+        busy, lanes = self.engine.busy, self.engine.lanes
+        pending = self.engine.pending()
+        if ev and ev[-1]["busy"] == busy and ev[-1]["pending"] == pending \
+                and ev[-1]["lanes"] == lanes:
+            return
+        self.controller.note_occupancy(now, busy, lanes, pending)
 
     def _initial_grant(self, job: Job, now: float,
                        remaining: int) -> tuple[int, int]:

@@ -1,0 +1,25 @@
+"""Bad fixture: a continuous-batching engine step with host syncs inside
+the jit-reachable lane loop — host-sync must flag each (DESIGN.md §14 pins
+the engine's zero-host-sync steady state)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _converged(r, threshold):
+    # device->host readback inside the traced step: every step now blocks
+    # on the device, defeating continuous batching
+    return bool(np.asarray(r > threshold).any())
+
+
+@jax.jit
+def engine_step(pi, r, active, threshold):
+    front = (r > threshold).astype(r.dtype) * active[:, None]
+    pi = pi + 0.2 * r * front
+    if _converged(r, threshold):             # traced callee syncs
+        pi = pi * 1.0
+    busy = float(active.sum())               # cast on a tracer: sync
+    print("lanes busy:", busy)               # prints a tracer, syncs
+    host = np.asarray(r)                     # silent device_get mid-step
+    return pi, r * (1.0 - front) + host.sum() * 0.0

@@ -1,0 +1,24 @@
+"""Good fixture: the engine contract — the jitted lane-pool step touches
+no host; staging and harvest sync only at their sanctioned boundaries
+outside any jit root (DESIGN.md §14). host-sync must stay quiet."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def engine_step(pi, r, active, threshold):
+    front = (r > threshold).astype(r.dtype) * active[:, None]
+    pi = pi + 0.2 * r * front
+    r = r * (1.0 - front)
+    walked = jnp.logical_not(jnp.any(r > threshold, axis=1))
+    return pi, r, walked
+
+
+def harvest(pi, walked):
+    # the single readback boundary: not reachable from any jit root, so the
+    # sync here is the engine's sanctioned per-harvest device_get
+    done = np.asarray(jax.device_get(walked))
+    lanes = [int(i) for i in np.nonzero(done)[0]]
+    return lanes, np.asarray(pi)[done]

@@ -45,6 +45,7 @@ def test_good_fixtures_are_clean():
 
 @pytest.mark.parametrize("rule,path,min_findings", [
     ("host-sync", "bad/sync_bad.py", 4),
+    ("host-sync", "bad/engine_bad.py", 3),
     ("prng-discipline", "bad/prng_bad.py", 5),
     ("replay-determinism", "bad/serving/clock.py", 6),
     ("pool-accounting", "bad/pool_bad.py", 3),

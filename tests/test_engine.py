@@ -1,0 +1,211 @@
+"""Continuous-batching query engine (DESIGN.md §14): interleaving
+invariance against the chunked path, the zero-host-sync steady state, lane
+pool mechanics, and the virtual-time SimLaneEngine / LaneLedger twins."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # optional dev dep (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
+
+from repro.ppr import ForaExecutor, ForaParams, PprWorkload, small_test_graph
+from repro.serving import LaneLedger, SimLaneEngine
+from repro.serving.engine import QueryEngine
+
+NUM_QUERIES = 10
+
+# hypothesis examples may not take function-scoped fixtures; the executor
+# and the chunked-path reference answers are module-level lazy singletons
+# (one warmup, one compile cache shared by every interleaving example)
+_STATE: dict = {}
+
+
+def _setup():
+    if "ex" not in _STATE:
+        graph = small_test_graph(n=120, avg_deg=6, seed=3)
+        workload = PprWorkload(graph, num_queries=NUM_QUERIES, seed=0)
+        ex = ForaExecutor(workload, ForaParams(alpha=0.2, epsilon=0.5),
+                          fused=True)
+        _STATE["ex"] = ex
+        _STATE["ref"] = ex.answer_chunk(list(range(NUM_QUERIES)))
+    return _STATE["ex"], _STATE["ref"]
+
+
+def _run_interleaved(ex, qids, lanes, rng, sweeps=2):
+    """Drive insert/step/harvest in a random order until every query is
+    harvested; returns {qid: pi row}."""
+    eng = QueryEngine(ex, lanes, sweeps=sweeps)
+    pending = list(qids)
+    got = {}
+    for _ in range(10_000):
+        if len(got) == len(qids):
+            return got
+        choices = ["step", "harvest"]
+        if pending and eng.free:
+            choices.append("insert")
+        act = choices[int(rng.integers(len(choices)))]
+        if act == "insert":
+            eng.insert(pending.pop(0))
+        elif act == "step":
+            eng.step()
+        else:
+            for h in eng.harvest():
+                got[h.qid] = h.pi
+    raise AssertionError("interleaved engine failed to drain")
+
+
+# ---------------------------------------------------------------------------
+# bit-parity with the chunked path
+
+
+def test_engine_single_job_bit_identical_to_chunked():
+    """ISSUE-8 acceptance: a single-job run through the engine produces
+    bit-identical per-query results to the chunked path."""
+    ex, ref = _setup()
+    eng = QueryEngine(ex, lanes=4)
+    harvested = {}
+    for wave in (range(0, 4), range(4, 8), range(8, NUM_QUERIES)):
+        for qid in wave:
+            eng.insert(qid)
+        for h in eng.run_to_completion():
+            harvested[h.qid] = h
+    assert sorted(harvested) == list(range(NUM_QUERIES))
+    for qid, h in harvested.items():
+        assert np.array_equal(h.pi, ref[qid]), f"query {qid} bits diverged"
+        assert h.walks_effective >= 1
+        assert h.residual_mass >= 0.0
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_engine_any_interleaving_matches_isolated_runs(seed):
+    """ISSUE-8 satellite property: ANY interleaving of insert/step/harvest
+    across lane-pool sizes yields the same bits as the isolated chunked
+    runs — a query's answer does not depend on its lane, its co-tenants,
+    or when it was inserted."""
+    ex, ref = _setup()
+    rng = np.random.default_rng(seed)
+    lanes = int(rng.integers(1, 5))
+    got = _run_interleaved(ex, list(range(NUM_QUERIES)), lanes, rng)
+    assert sorted(got) == list(range(NUM_QUERIES))
+    for qid, pi in got.items():
+        assert np.array_equal(pi, ref[qid]), \
+            f"query {qid} diverged (lanes={lanes}, seed={seed})"
+
+
+# ---------------------------------------------------------------------------
+# zero-host-sync steady state
+
+
+def test_engine_steady_state_no_host_sync():
+    """ISSUE-8 acceptance: the steady-state step loop performs zero host
+    syncs — with staging (insert) and readback (harvest) at their
+    sanctioned boundaries, every step() runs under
+    jax.transfer_guard('disallow')."""
+    ex, _ = _setup()
+    eng = QueryEngine(ex, lanes=4)
+    for qid in range(4):
+        eng.insert(qid)
+    eng.run_to_completion()                     # warm the step executable
+    for qid in range(4, 8):
+        eng.insert(qid)                         # staging boundary (allow)
+    with jax.transfer_guard("disallow"):
+        eng.step()
+        eng.step()
+    out = eng.run_to_completion()               # harvest boundary (readback)
+    assert {h.qid for h in out} == set(range(4, 8))
+
+
+# ---------------------------------------------------------------------------
+# lane pool mechanics
+
+
+def test_engine_lane_pool_mechanics():
+    ex, ref = _setup()
+    eng = QueryEngine(ex, lanes=3)
+    assert (eng.busy, eng.free) == (0, 3)
+    assert eng.insert(0) == 0                   # lowest free lane first
+    assert eng.insert(1) == 1
+    assert eng.insert(2, lane=2) == 2           # explicit pin
+    assert (eng.busy, eng.free) == (3, 0)
+    assert eng.occupants() == {0: 0, 1: 1, 2: 2}
+    with pytest.raises(RuntimeError, match="no free lane"):
+        eng.insert(3)
+    out = eng.run_to_completion()
+    assert (eng.busy, eng.free) == (0, 3)
+    assert {h.lane for h in out} == {0, 1, 2}
+    with pytest.raises(RuntimeError, match="occupied"):
+        eng.insert(4, lane=1)
+        eng.insert(5, lane=1)
+    # the evicted lane is reusable and still bit-exact after re-insertion
+    eng.run_to_completion()
+    lane = eng.insert(6, lane=1)
+    (h,) = eng.run_to_completion()
+    assert (lane, h.qid) == (1, 6)
+    assert np.array_equal(h.pi, ref[6])
+
+
+def test_engine_rejects_unsupported_executors():
+    ex, _ = _setup()
+    with pytest.raises(ValueError, match="lane pool"):
+        QueryEngine(ex, lanes=0)
+    workload = ex.workload
+    unkeyed = ForaExecutor(workload, ForaParams(alpha=0.2, epsilon=0.5),
+                           fused=True, query_seeded=False)
+    with pytest.raises(ValueError, match="query-seeded"):
+        QueryEngine(unkeyed, lanes=2)
+    legacy = ForaExecutor(workload, ForaParams(alpha=0.2, epsilon=0.5),
+                          fused=False)
+    with pytest.raises(ValueError, match="fused"):
+        QueryEngine(legacy, lanes=2)
+    indexed = ForaExecutor(workload, ForaParams(alpha=0.2, epsilon=0.5),
+                           fused=True, index_budget=4)
+    with pytest.raises(ValueError, match="bypass"):
+        QueryEngine(indexed, lanes=2)
+
+
+# ---------------------------------------------------------------------------
+# virtual-time twins: SimLaneEngine + LaneLedger
+
+
+def test_sim_lane_engine_edf_and_occupancy():
+    sim = SimLaneEngine(lanes=2)
+    sim.enqueue(deadline=9.0, job_id=1, qid=0, duration=0.5)
+    sim.enqueue(deadline=4.0, job_id=2, qid=1, duration=0.5)
+    sim.enqueue(deadline=6.0, job_id=1, qid=2, duration=0.5)
+    assert sim.pending() == 3 and sim.pending_of(1) == 2
+    assert sim.pop_ready()[1:3] == (2, 1)       # earliest deadline first
+    assert sim.pop_ready()[1:3] == (1, 2)
+    lane = sim.free_lane(cap=2)
+    assert lane == 0
+    sim.occupy(lane, qid=1, job_id=2, now=0.0, t_end=0.5, work=0.5)
+    assert sim.busy == 1 and sim.free_lane(cap=1) is None
+    # a lane flipping jobs is a rebalance (continuous lane reassignment)
+    task = sim.release(0)
+    assert (task.qid, task.job_id) == (1, 2)
+    assert sim.occupy(0, qid=2, job_id=1, now=0.5, t_end=1.0, work=0.5)
+    rt = SimLaneEngine.from_state(sim.state_dict())
+    assert rt.state_dict() == sim.state_dict()
+    assert rt.busy == sim.busy and rt.pending() == sim.pending()
+
+
+def test_lane_ledger_reserve_consume_release():
+    led = LaneLedger()
+    led.reserve(1, 2.0)
+    led.reserve(2, 1.0)
+    assert led.outstanding == pytest.approx(3.0)
+    led.consume(1, 0.5)
+    assert led.committed[1] == pytest.approx(1.5)
+    led.consume(1, 5.0)                         # clamped at zero -> dropped
+    assert 1 not in led.committed
+    assert led.release(2) == pytest.approx(1.0)
+    assert led.outstanding == 0.0
+    led.reserve(3, 0.25)
+    back = LaneLedger.from_state(led.state_dict())
+    assert back.committed == led.committed
+    with pytest.raises(ValueError):
+        led.reserve(4, -1.0)

@@ -52,6 +52,11 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 # the failure-injection run completing via readmission (no job loss)
 python -m benchmarks.serving_sim --check
 
+# continuous-batching engine smoke (DESIGN.md §14): same burst trace
+# through the chunked and engine paths — engine must be deterministic,
+# keep the 100% SLA hit-rate, and deliver >= 1.5x queries/sec
+python -m benchmarks.serving_sim --check --engine
+
 # warm-cache smoke (DESIGN.md §11): cold leg bit-for-bit equal to the
 # uncached serving path, warm leg >= 30% core-hours reduction at 100% SLA
 python -m benchmarks.index_cache --check
@@ -60,6 +65,11 @@ python -m benchmarks.index_cache --check
 # slowdowns and two process crashes — recovery must be crash-transparent
 # (records bit-identical to the uncrashed run) with zero job loss
 python -m benchmarks.serving_sim --chaos
+
+# engine-mode chaos smoke (DESIGN.md §14): the same fault schedule through
+# the continuous-batching path — crash-transparent, zero job loss, with
+# lane-occupancy accounting surviving recovery
+python -m benchmarks.serving_sim --chaos --engine
 
 trap 'rm -f BENCH_kernels.committed.json BENCH_kernels.fresh1.json \
             BENCH_kernels.fresh2.json BENCH_kernels.merged.json' EXIT
