@@ -12,13 +12,22 @@ RECORDS: list[dict] = []
 
 
 def timed(fn: Callable, *args, repeats: int = 5, **kwargs):
-    """(result, us_per_call) with a warmup call.
+    """(result, us_per_call) with compilation hoisted out of the timed region.
 
     Reports the MIN over ``repeats`` — the steady-state floor. The mean folds
     scheduler preemptions into the number; on a loaded box that noise swings
     2-4x and would flap the CI tolerance gate (tools/bench_compare.py), while
-    the per-call floor is reproducible."""
+    the per-call floor is reproducible.
+
+    The warmup call absorbs tracing + XLA compilation; its wall time is kept
+    on ``timed.last_compile_us`` so callers can report compile cost as a
+    separate derived field instead of conflating it with steady state (the
+    pre-PR-9 bug: a jitted fn whose STATICS differ between the warmup and the
+    timed calls re-jits inside the timed region — keep statics fixed across
+    all calls, or use :func:`timed_aot` which pins one AOT executable)."""
+    t0 = time.perf_counter()
     fn(*args, **kwargs)
+    timed.last_compile_us = (time.perf_counter() - t0) * 1e6
     best = float("inf")
     out = None
     for _ in range(repeats):
@@ -26,6 +35,22 @@ def timed(fn: Callable, *args, repeats: int = 5, **kwargs):
         out = fn(*args, **kwargs)
         best = min(best, time.perf_counter() - t0)
     return out, best * 1e6
+
+
+timed.last_compile_us = 0.0
+
+
+def timed_aot(fn: Callable, *args, repeats: int = 5):
+    """(result, device_us, compile_us) via one AOT-compiled executable.
+
+    Delegates to ``repro.kernels.autotune.measure_compiled``: lower/compile
+    once outside the timed region, stage inputs with device_put, time
+    steady-state calls under ``jax.profiler`` step annotations. ``fn`` must
+    take its arrays positionally (no array closures — they would be baked in
+    as compile-time constants)."""
+    from repro.kernels.autotune import measure_compiled
+
+    return measure_compiled(fn, *args, repeats=repeats)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

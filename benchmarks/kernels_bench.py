@@ -11,15 +11,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
-from repro.kernels.ell_spmv import (ell_spmm_pallas, ell_spmm_sliced_pallas,
-                                    ell_spmv_pallas)
+from repro.kernels import ops, ref
+from repro.kernels.ell_spmv import (_spmm_virtual_rows, ell_spmm_pallas,
+                                    ell_spmm_sliced_pallas, ell_spmv_pallas)
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.walk_gather import walk_endpoint_gather_pallas
 from repro.ppr.graph import Graph
 
-from .common import emit, timed
+from .common import emit, timed, timed_aot
 
 
 def run() -> None:
@@ -53,6 +53,12 @@ def run() -> None:
     pal = ell_spmm_pallas(nbr, msk, w, xb)
     err = float(jnp.abs(pal - refo).max())
     emit("kernels/ell_spmm", us, f"maxerr={err:.2e};n={n};K={K};B={Bq}")
+    # device-time row (jax.profiler-backed AOT harness, DESIGN.md §15):
+    # steady-state us on the compiled dispatch, compile cost split out
+    spmm_fn = jax.jit(lambda a, b, c, d: ops.ell_spmm(a, b, c, d))
+    _, dev_us, comp_us = timed_aot(spmm_fn, nbr, msk, w, xb)
+    emit("kernels/ell_spmm_dev", dev_us,
+         f"compile_us={comp_us:.0f};n={n};K={K};B={Bq}")
 
     # fused push-threshold variant (the forward_push inner loop)
     thr = jnp.abs(jax.random.normal(ks[1], (n,))) * 0.1
@@ -84,6 +90,26 @@ def run() -> None:
     err = float(jnp.abs(pal - refo).max())
     emit("kernels/ell_spmm_sliced", us,
          f"maxerr={err:.2e};n={n_pl};W={sl.width};nv={sl.n_virtual};B={Bq}")
+    sliced_oracle_us = us
+
+    # in-kernel fused fold (DESIGN.md §15): the sliced kernel now folds its
+    # virtual-row partials into true rows inside the Pallas grid instead of a
+    # host-side segment_sum pass. Parity bar is bit-exactness against the
+    # former two-pass path (identical partials, identical ascending fold
+    # order), plus speedup vs the eager oracle row above. Timing is AOT
+    # device time on the jitted dispatch — compile cost is its own field.
+    yT_part = _spmm_virtual_rows(s_nbr, s_msk, s_w, xp, None,
+                                 block_n=256, interpret=True)
+    old_fold = jax.ops.segment_sum(
+        yT_part[:sl.n_virtual], s_map, num_segments=n_pl,
+        indices_are_sorted=True).T
+    bit_exact = bool(np.array_equal(np.asarray(pal), np.asarray(old_fold)))
+    fold_fn = jax.jit(lambda a, b, c, d, e: ops.ell_spmm_sliced(a, b, c, d, e))
+    _, dev_us, comp_us = timed_aot(fold_fn, s_nbr, s_msk, s_w, s_map, xp)
+    emit("kernels/ell_spmm_sliced_fused_fold", dev_us,
+         f"bit_exact_vs_host_fold={int(bit_exact)};"
+         f"speedup_vs_host_fold={sliced_oracle_us / max(dev_us, 1e-9):.2f}x;"
+         f"compile_us={comp_us:.0f};n={n_pl};W={sl.width};B={Bq}")
     dense_mib = g.ell_in_dense_nbytes() / 2**20
     sliced_mib = sl.nbytes / 2**20
     emit("kernels/ell_peak_mib", sliced_mib * 1e3,   # milli-MiB for precision
@@ -113,3 +139,9 @@ def run() -> None:
     err = float(jnp.abs(pal - refo).max())
     emit("kernels/walk_endpoint_gather", us,
          f"maxerr={err:.2e};n={n_wi};W={W_wi};B={Bq}")
+    gather_fn = jax.jit(
+        lambda a, b, c, d: ops.walk_endpoint_gather(a, b, c, d))
+    _, dev_us, comp_us = timed_aot(gather_fn, endpoints, budget, starts,
+                                   w_lanes)
+    emit("kernels/walk_endpoint_gather_dev", dev_us,
+         f"compile_us={comp_us:.0f};n={n_wi};W={W_wi};B={Bq}")

@@ -242,6 +242,45 @@ class CacheAwareCostModel:
         d = self.time_discount()
         return stats if d == 1.0 else stats.scaled(d)
 
+    @classmethod
+    def seeded_from_tuning(cls, cache, *, backend: str | None = None,
+                           bucket: str | None = None,
+                           **kwargs) -> "CacheAwareCostModel":
+        """Seed ``walk_share`` from measured kernel device times
+        (DESIGN.md §15) instead of the 0.5 guess.
+
+        ``cache`` is a ``kernels.autotune.TuningCache`` (or None). For every
+        shape bucket (or just ``bucket``) that has BOTH a push entry
+        (layout 'sliced' or 'dense') and a 'walk' entry on ``backend``,
+        walk_share = walk_us / (walk_us + push_us); buckets average. Steady-
+        state ``device_us`` only — ``compile_us`` never prices a query. An
+        empty/cold cache returns the default model unchanged, and an
+        explicit ``walk_share`` kwarg always wins (caller knows best)."""
+        if cache is None or "walk_share" in kwargs:
+            return cls(**kwargs)
+        from ..kernels import autotune
+
+        backend = backend or autotune.current_backend()
+        pushes: dict[str, float] = {}
+        walks: dict[str, float] = {}
+        for key, cfg in cache.entries.items():
+            be, layout, bkt = key.split("|", 2)
+            if be != backend or (bucket is not None and bkt != bucket):
+                continue
+            if cfg.device_us <= 0.0:
+                continue
+            if layout in ("sliced", "dense"):
+                # keep the faster push config if a bucket has both layouts
+                pushes[bkt] = min(pushes.get(bkt, float("inf")),
+                                  cfg.device_us)
+            elif layout == "walk":
+                walks[bkt] = cfg.device_us
+        shares = [walks[b] / (walks[b] + pushes[b])
+                  for b in pushes.keys() & walks.keys()]
+        if shares:
+            kwargs["walk_share"] = sum(shares) / len(shares)
+        return cls(**kwargs)
+
 
 @dataclass(frozen=True)
 class RooflineTerms:

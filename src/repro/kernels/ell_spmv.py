@@ -25,10 +25,14 @@ applies front/spread selection in-register instead of materialising
 ``ell_spmm_sliced_pallas`` is the power-law-safe variant (DESIGN.md §8): the
 same kernel body runs over *virtual* rows of a sliced ELL table (high-degree
 rows split into width-<=W slices by ``Graph.ell_in_sliced``), and the slice
-partials are folded back onto real rows with a sorted ``segment_sum`` over
-``row_map``. Gather indices are global node ids, so the resident source
-vector, the fused threshold semantics and the kernel body are identical to
-the dense variant — only the row axis is virtualised.
+partials are folded back onto real rows INSIDE the kernel (DESIGN.md §15):
+``row_map`` is sorted ascending, so a sequential per-row accumulate over the
+grid's virtual-row blocks is the same ascending left-fold a sorted
+``segment_sum`` performs — bit-identical to the former host-side fold, with
+no (n_virtual, B) partial frame ever materialised in HBM. Gather indices are
+global node ids, so the resident source vector, the fused threshold
+semantics and the partial computation are identical to the dense variant —
+only the row axis is virtualised.
 
 Also used by the GNN SpMM regime (GCN's \\hat{A} X when X is a vector batch).
 Validated in interpret mode against ref.ell_spmv_ref / ref.ell_spmm_ref.
@@ -100,8 +104,11 @@ def ell_spmv_pallas(neighbors, mask, weights, x, *, block_n: int = 256,
     return y[:n]
 
 
-def _ell_spmm_kernel(nbr_ref, mask_ref, w_ref, xT_ref, thr_ref, yT_ref, *,
-                     k_chunks: int, chunk: int, fuse_threshold: bool):
+def _spmm_partials(nbr_ref, mask_ref, w_ref, xT_ref, thr_ref, *,
+                   k_chunks: int, chunk: int, fuse_threshold: bool):
+    """(bn, B) per-row partial sums — the shared SpMM body. Bit-identical
+    between the dense and sliced-fold kernels by construction (DESIGN.md §15:
+    the in-kernel fold only changes where partials land, never their value)."""
     nbr = nbr_ref[...]                                # (bn, Kp) int32
     msk = mask_ref[...]                               # (bn, Kp) bool
     xT = xT_ref[...]                                  # (n, B) f32, B on lanes
@@ -119,7 +126,14 @@ def _ell_spmm_kernel(nbr_ref, mask_ref, w_ref, xT_ref, thr_ref, yT_ref, *,
         return acc + jnp.sum(vals * wts[..., None], axis=1)
 
     acc0 = jnp.zeros((nbr.shape[0], xT.shape[1]), jnp.float32)
-    yT_ref[...] = jax.lax.fori_loop(0, k_chunks, body, acc0)
+    return jax.lax.fori_loop(0, k_chunks, body, acc0)
+
+
+def _ell_spmm_kernel(nbr_ref, mask_ref, w_ref, xT_ref, thr_ref, yT_ref, *,
+                     k_chunks: int, chunk: int, fuse_threshold: bool):
+    yT_ref[...] = _spmm_partials(nbr_ref, mask_ref, w_ref, xT_ref, thr_ref,
+                                 k_chunks=k_chunks, chunk=chunk,
+                                 fuse_threshold=fuse_threshold)
 
 
 @functools.partial(jax.jit,
@@ -183,23 +197,96 @@ def _spmm_virtual_rows(neighbors, mask, weights, x, threshold, *,
       x.astype(jnp.float32).T, threshold.astype(jnp.float32))
 
 
+def _ell_spmm_fold_kernel(nbr_ref, mask_ref, w_ref, rm_ref, xT_ref, thr_ref,
+                          yT_ref, *, k_chunks: int, chunk: int,
+                          fuse_threshold: bool, bn: int):
+    """Sliced-ELL SpMM with the virtual-row fold fused in (DESIGN.md §15).
+
+    The (n+1, B) output block has a constant index map, so it stays resident
+    across the sequential grid steps: step 0 zeroes it, every step adds its
+    block's per-virtual-row partials onto real rows one virtual row at a
+    time, in ascending virtual-row order. ``row_map`` is sorted ascending,
+    so this is the exact f32 left-fold a sorted ``segment_sum`` performs —
+    bit-identical to the former host-side fold. Padded virtual rows carry
+    row_map == n and land on the dump row the wrapper slices off.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _zero():
+        yT_ref[...] = jnp.zeros(yT_ref.shape, jnp.float32)
+
+    partial = _spmm_partials(nbr_ref, mask_ref, w_ref, xT_ref, thr_ref,
+                             k_chunks=k_chunks, chunk=chunk,
+                             fuse_threshold=fuse_threshold)
+    rm = rm_ref[...]                                  # (bn,) int32 ascending
+
+    def fold(j, carry):
+        row = rm[j]
+        cur = pl.load(yT_ref, (pl.dslice(row, 1), slice(None)))
+        pl.store(yT_ref, (pl.dslice(row, 1), slice(None)),
+                 cur + partial[j][None, :])
+        return carry
+
+    jax.lax.fori_loop(0, bn, fold, 0)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_n", "interpret"))
 def ell_spmm_sliced_pallas(neighbors, mask, weights, row_map, x,
                            threshold=None, *, block_n: int = 256,
                            interpret: bool = True):
-    """Sliced-ELL pull-form SpMM (DESIGN.md §8).
+    """Sliced-ELL pull-form SpMM with in-kernel fold (DESIGN.md §8, §15).
 
     neighbors/mask/weights: (n_virtual, W) — virtual rows from
     ``Graph.ell_in_sliced``; ``row_map`` (n_virtual,) int32 (ascending) maps
     each virtual row to its real row; x: (B, n). The kernel computes per-
-    virtual-row partials exactly like :func:`ell_spmm_pallas`, then folds
-    them onto real rows with a sorted ``segment_sum``. Returns (B, n).
+    virtual-row partials exactly like :func:`ell_spmm_pallas` and folds them
+    onto real rows in-register, accumulating into an output block kept
+    resident across grid steps — no (n_virtual, B) partial frame in HBM and
+    no separate ``segment_sum`` pass. Bit-identical to the former
+    partials-then-host-``segment_sum`` path (pinned by tests); parity with
+    the jnp oracle ``ref.ell_spmm_sliced_ref`` is allclose, as for every
+    Pallas kernel (chunked f32 reduction order differs). Returns (B, n).
     """
-    n_virtual = neighbors.shape[0]
+    n_virtual, K = neighbors.shape
     n = x.shape[1]
-    yT = _spmm_virtual_rows(neighbors, mask, weights, x, threshold,
-                            block_n=block_n, interpret=interpret)
-    folded = jax.ops.segment_sum(yT[:n_virtual], row_map, num_segments=n,
-                                 indices_are_sorted=True)
-    return folded.T
+    B = x.shape[0]
+    chunk = 128
+    Kp = -(-K // chunk) * chunk
+    bn = min(block_n, n_virtual)
+    nb = -(-n_virtual // bn)
+    n_pad = nb * bn - n_virtual
+    if Kp != K:
+        neighbors = jnp.pad(neighbors, ((0, 0), (0, Kp - K)))
+        mask = jnp.pad(mask, ((0, 0), (0, Kp - K)))
+        weights = jnp.pad(weights, ((0, 0), (0, Kp - K)))
+    if n_pad:
+        neighbors = jnp.pad(neighbors, ((0, n_pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, n_pad), (0, 0)))
+        weights = jnp.pad(weights, ((0, n_pad), (0, 0)))
+        row_map = jnp.pad(row_map, (0, n_pad), constant_values=n)  # dump row
+
+    fuse = threshold is not None
+    if not fuse:
+        threshold = jnp.zeros((n,), jnp.float32)
+    kernel = functools.partial(_ell_spmm_fold_kernel, k_chunks=Kp // chunk,
+                               chunk=chunk, fuse_threshold=fuse, bn=bn)
+    yT = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bn, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((bn, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((bn, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),      # row_map block
+            pl.BlockSpec((n, B), lambda i: (0, 0)),   # x^T resident per step
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        # constant index map: the accumulator block is revisited (stays
+        # resident) across every sequential grid step; row n is the dump row
+        out_specs=pl.BlockSpec((n + 1, B), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + 1, B), jnp.float32),
+        interpret=interpret,
+    )(neighbors, mask, weights.astype(jnp.float32),
+      row_map.astype(jnp.int32), x.astype(jnp.float32).T,
+      threshold.astype(jnp.float32))
+    return yT[:n].T

@@ -42,31 +42,37 @@ def ell_spmv(neighbors, mask, weights, x, *, force: str | None = None):
 
 
 def ell_spmm(neighbors, mask, weights, x, *, threshold=None,
-             force: str | None = None):
+             force: str | None = None, block_n: int = 256):
     """Batched (B, n) pull-form SpMM; ``threshold`` fuses FORA's push
-    condition into the gather (see ell_spmv.ell_spmm_pallas)."""
+    condition into the gather (see ell_spmv.ell_spmm_pallas). ``block_n``
+    is the Pallas row-tile (autotunable, numerics-neutral — DESIGN.md §15);
+    the jnp oracle ignores it."""
     use_pallas = force == "pallas" or (force is None and _on_tpu())
     if use_pallas:
         return ell_spmm_pallas(neighbors, mask, weights, x, threshold,
-                               interpret=not _on_tpu())
+                               block_n=block_n, interpret=not _on_tpu())
     return ref.ell_spmm_ref(neighbors, mask, x, weights, threshold)
 
 
 def ell_spmm_sliced(neighbors, mask, weights, row_map, x, *, threshold=None,
-                    force: str | None = None):
-    """Sliced-ELL batched SpMM: virtual rows (n_virtual, W) + ``row_map``
-    fold-back (DESIGN.md §8); drop-in for :func:`ell_spmm` on graphs whose
-    dense (n, k_max) table would not fit memory."""
+                    force: str | None = None, block_n: int = 256):
+    """Sliced-ELL batched SpMM: virtual rows (n_virtual, W) with the
+    ``row_map`` fold fused in-kernel (DESIGN.md §8, §15); drop-in for
+    :func:`ell_spmm` on graphs whose dense (n, k_max) table would not fit
+    memory. ``block_n`` tiles virtual rows (autotunable, numerics-neutral);
+    the jnp oracle ignores it."""
     use_pallas = force == "pallas" or (force is None and _on_tpu())
     if use_pallas:
         return ell_spmm_sliced_pallas(neighbors, mask, weights, row_map, x,
-                                      threshold, interpret=not _on_tpu())
+                                      threshold, block_n=block_n,
+                                      interpret=not _on_tpu())
     return ref.ell_spmm_sliced_ref(neighbors, mask, x, weights, threshold,
                                    row_map)
 
 
 def ell_spmm_shard(neighbors, mask, weights, x, *, axis_name: str,
-                   threshold=None, force: str | None = None):
+                   threshold=None, force: str | None = None,
+                   block_n: int = 256):
     """Per-shard dense SpMM under ``shard_map`` (DESIGN.md §9): each shard
     holds a contiguous block of destination rows; gather indices are global
     node ids and ``x``/``threshold`` are replicated, so the local block is a
@@ -74,20 +80,21 @@ def ell_spmm_shard(neighbors, mask, weights, x, *, axis_name: str,
     order with one tiled all-gather — returns (B, num_shards * rows_local);
     the caller slices off any row padding."""
     local = ell_spmm(neighbors, mask, weights, x, threshold=threshold,
-                     force=force)
+                     force=force, block_n=block_n)
     return jax.lax.all_gather(local, axis_name, axis=1, tiled=True)
 
 
 def ell_spmm_sliced_shard(neighbors, mask, weights, row_map, x, *,
                           axis_name: str, threshold=None,
-                          force: str | None = None):
+                          force: str | None = None, block_n: int = 256):
     """Per-shard sliced SpMM under ``shard_map`` (DESIGN.md §9): the table is
     sharded by *virtual* row, so each shard folds its local slice partials
-    onto the full (B, n) frame through its local ``row_map`` segment sum
+    onto the full (B, n) frame through its local ``row_map`` in-kernel fold
     (:func:`ell_spmm_sliced` unchanged — ids are global), and the partial
     frames combine with one ``psum`` all-reduce. Returns (B, n)."""
     partial = ell_spmm_sliced(neighbors, mask, weights, row_map, x,
-                              threshold=threshold, force=force)
+                              threshold=threshold, force=force,
+                              block_n=block_n)
     return jax.lax.psum(partial, axis_name)
 
 

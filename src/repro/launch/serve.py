@@ -185,7 +185,9 @@ def _build_daemon_runtime(args):
     cfg = ServingConfig(scaling_factor=args.d, sample_frac=args.sample_frac,
                         graph_version=args.graph_version,
                         stragglers=args.stragglers,
-                        engine=engine, lane_pool=args.lane_pool)
+                        engine=engine, lane_pool=args.lane_pool,
+                        cold_compile_s=getattr(args, "cold_compile", 0.0),
+                        warm_start=bool(getattr(args, "warm_start", False)))
     pool = CorePool.of(args.max_cores,
                        lanes_per_device=max(1, args.max_lanes or 1),
                        spares_fraction=args.spares_fraction)
@@ -199,8 +201,15 @@ def _build_daemon_runtime(args):
     heartbeat = _daemon_heartbeat(args, args.max_cores)
     controller = ElasticController(allocator=pool.allocator,
                                    heartbeat=heartbeat)
+    # an active tuning cache seeds the cost model's walk share from measured
+    # kernel device times (DESIGN.md §15); cold cache -> the default model
+    from ..core.estimator import CacheAwareCostModel
+    from ..kernels import autotune
+
+    model = CacheAwareCostModel.seeded_from_tuning(
+        autotune.get_cache(), index_coverage=cfg.index_coverage)
     rt = ServingRuntime(pool, factory, cfg, controller=controller,
-                        cache=cache)
+                        cache=cache, cost_model=model)
     if args.wal_dir:
         rt.attach_wal(WriteAheadLog(args.wal_dir),
                       snapshot_every=args.snapshot_every,
@@ -467,7 +476,54 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--spares-fraction", type=float, default=0.0,
                     help="daemon: fraction of healthy devices held back "
                          "as re-issue spares (paper's fluctuation margin)")
+    ap.add_argument("--compilation-cache", default="", metavar="DIR",
+                    help="persistent XLA compilation cache directory "
+                         "(DESIGN.md §15): the daemon's second cold start "
+                         "reloads executables instead of recompiling, so "
+                         "the compile surcharge stops being billed against "
+                         "the first jobs' deadlines")
+    ap.add_argument("--autotune-cache", default="", metavar="PATH",
+                    help="kernel tuning-cache JSON from "
+                         "`python -m repro.kernels.autotune` — consulted at "
+                         "residency build for block_n/pad_multiple/width and "
+                         "to seed the cost model's walk share")
+    ap.add_argument("--cold-compile", type=float, default=0.0,
+                    help="daemon: compile surcharge (seconds) billed into "
+                         "the first admitted job's c-core preprocess "
+                         "reservation — waived under --warm-start")
+    ap.add_argument("--warm-start", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="treat the compilation cache as warm (waive "
+                         "--cold-compile); default auto-detects: warm iff "
+                         "--compilation-cache names a non-empty directory")
     return ap
+
+
+def _enable_compilation_cache(path: str) -> bool:
+    """Point JAX's persistent compilation cache at ``path``; returns True
+    when the directory already held entries (a warm start). Thresholds are
+    dropped to zero so even the CPU daemon's small executables persist —
+    the default min-compile-time gate would skip exactly the executables
+    this repo serves."""
+    import os
+
+    entries = (os.path.isdir(path)
+               and any(True for _ in os.scandir(path)))
+    import jax
+
+    try:
+        from jax.experimental.compilation_cache import compilation_cache as cc
+
+        cc.set_cache_dir(path)
+    except Exception:          # noqa: BLE001 — older/newer jax spellings
+        jax.config.update("jax_compilation_cache_dir", path)
+    for opt, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                     ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(opt, val)
+        except Exception:      # noqa: BLE001 — knob absent in this jax
+            pass
+    return bool(entries)
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -476,6 +532,22 @@ def main(argv: list[str] | None = None) -> None:
         import jax
 
         jax.config.update("jax_platform_name", args.platform)
+    if args.compilation_cache:
+        warm = _enable_compilation_cache(args.compilation_cache)
+        if args.warm_start is None:
+            args.warm_start = warm
+    if args.warm_start is None:
+        args.warm_start = False
+    if args.autotune_cache:
+        from pathlib import Path as _Path
+
+        from ..kernels import autotune
+
+        if _Path(args.autotune_cache).exists():
+            autotune.set_cache(autotune.TuningCache.load(args.autotune_cache))
+        else:
+            print(f"autotune cache {args.autotune_cache} not found — "
+                  "running with cold defaults")
     if args.daemon:
         serve_daemon(args)
     elif args.workload == "ppr":

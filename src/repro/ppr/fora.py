@@ -142,7 +142,7 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
                      force: str | None = None,
                      shard_axis: str | None = None, num_shards: int = 1,
                      index_lanes: int = 0, index_partial: bool = False,
-                     bulk_rng: bool | None = None):
+                     bulk_rng: bool | None = None, block_n: int = 256):
     """The whole FORA query block as ONE executable: seed construction,
     frontier push (pull-form ELL SpMM, dense or sliced view), pow2
     walk-budget quantisation and the residual walks all stay on device.
@@ -181,7 +181,7 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
     push = forward_push(in_neighbors, in_mask, in_weights, out_degree, seeds,
                         alpha=alpha, rmax=rmax, n=n,
                         max_iters=max_push_iters, row_map=in_row_map,
-                        force=force, shard_axis=shard_axis)
+                        force=force, shard_axis=shard_axis, block_n=block_n)
     r_sum = push.r.sum(axis=1)                               # (B,)
     # FORA budget ceil(r_sum * omega), quantised UP to the next power of two
     # on device (mirrors the host-side quantisation of fora()) and clipped to
@@ -249,7 +249,7 @@ def _fora_fused_impl(in_neighbors, in_mask, in_weights, in_row_map, edge_dst,
 
 _FUSED_STATICS = ("alpha", "rmax", "omega", "n", "num_walks", "num_steps",
                   "max_push_iters", "force", "shard_axis", "num_shards",
-                  "index_lanes", "index_partial", "bulk_rng")
+                  "index_lanes", "index_partial", "bulk_rng", "block_n")
 _fora_fused = jax.jit(_fora_fused_impl, static_argnames=_FUSED_STATICS)
 # On TPU the (B,) sources buffer is donated (it aliases the int32
 # walks_effective output). On CPU donation is a measured ~1.7 ms/call
@@ -266,14 +266,20 @@ def _fora_fused_sharded_exe(mesh, axis: str, num_shards: int, sliced: bool,
                             omega: float, n: int,
                             num_walks: int, num_steps: int,
                             max_push_iters: int, force: str | None,
-                            bulk_rng: bool | None):
+                            bulk_rng: bool | None, block_n: int = 256,
+                            donate: bool = False):
     """Build (and cache per mesh/statics) the shard_map'd fused executable.
 
     The whole fused body runs per-shard: in_specs shard the push table by
     (virtual) row along ``axis`` and replicate everything else; out_specs are
     replicated because the body's collectives (all-gather / psum) already
     leave every output identical on all shards. ``seeded`` adds the
-    replicated per-query ``query_seeds`` input (fold_in key derivation)."""
+    replicated per-query ``query_seeds`` input (fold_in key derivation).
+
+    ``donate`` aliases the replicated (B,) ``sources`` buffer into the int32
+    ``walks_effective`` output — the same TPU-only policy as the
+    single-device ``_fora_fused_donating`` (on CPU XLA's defensive copy
+    makes donation a pessimisation); callers must pass a copy they own."""
     from jax.sharding import PartitionSpec as P
 
     from ..distributed.ctx import shard_map_compat
@@ -281,7 +287,8 @@ def _fora_fused_sharded_exe(mesh, axis: str, num_shards: int, sliced: bool,
     kwargs = dict(alpha=alpha, rmax=rmax, omega=omega, n=n,
                   num_walks=num_walks, num_steps=num_steps,
                   max_push_iters=max_push_iters, force=force,
-                  shard_axis=axis, num_shards=num_shards, bulk_rng=bulk_rng)
+                  shard_axis=axis, num_shards=num_shards, bulk_rng=bulk_rng,
+                  block_n=block_n)
     row = P(axis, None)
     repl = P()
     if sliced:
@@ -292,6 +299,7 @@ def _fora_fused_sharded_exe(mesh, axis: str, num_shards: int, sliced: bool,
                                     None, None, None,
                                     qseeds[0] if qseeds else None, **kwargs)
         in_specs = (row, row, row, P(axis), repl, repl, repl, repl, repl)
+        sources_pos = 7
     else:
         def fn(nbr, msk, wts, edge_dst, out_offsets, out_degree,
                sources, key, *qseeds):
@@ -300,10 +308,13 @@ def _fora_fused_sharded_exe(mesh, axis: str, num_shards: int, sliced: bool,
                                     None, None, None,
                                     qseeds[0] if qseeds else None, **kwargs)
         in_specs = (row, row, row, repl, repl, repl, repl, repl)
+        sources_pos = 6
     if seeded:
         in_specs = in_specs + (repl,)
     mapped = shard_map_compat(fn, mesh=mesh, in_specs=in_specs,
                               out_specs=(repl, repl, repl, repl))
+    if donate:
+        return jax.jit(mapped, donate_argnums=(sources_pos,))
     return jax.jit(mapped)
 
 
@@ -321,11 +332,17 @@ def _fora_fused_sharded(dg: ShardedDeviceGraph, sources, rp: ResolvedFora,
     # single device would sample.
     num_walks = _pow2_ceil_host(num_walks)
     num_walks = -(-num_walks // dg.num_shards) * dg.num_shards
-    sources = jnp.asarray(sources).astype(jnp.int32).reshape(-1)
+    # TPU-only donation, mirroring the single-device policy: the caller's
+    # sources buffer is copied first so donation invalidates only our copy
+    donate = jax.default_backend() == "tpu"
+    if donate:
+        sources = jnp.array(sources, jnp.int32, copy=True).reshape(-1)
+    else:
+        sources = jnp.asarray(sources).astype(jnp.int32).reshape(-1)
     exe = _fora_fused_sharded_exe(
         dg.mesh, dg.axis, dg.num_shards, dg.in_row_map is not None,
         query_seeds is not None, rp.alpha, rp.rmax, rp.omega, dg.n,
-        num_walks, steps, 10_000, force, bulk_rng)
+        num_walks, steps, 10_000, force, bulk_rng, dg.block_n, donate)
     table = (dg.in_neighbors, dg.in_mask, dg.in_weights)
     if dg.in_row_map is not None:
         table = table + (dg.in_row_map,)
@@ -413,7 +430,7 @@ def fora_fused(dg: "DeviceGraph | ShardedDeviceGraph", sources,
         alpha=rp.alpha, rmax=rp.rmax, omega=rp.omega, n=dg.n,
         num_walks=num_walks, num_steps=steps, max_push_iters=10_000,
         force=force, index_lanes=index_lanes, index_partial=index_partial,
-        bulk_rng=bulk_rng)
+        bulk_rng=bulk_rng, block_n=dg.block_n)
     return FusedForaResult(pi=pi, residual_mass=r_sum, push_iters=iters,
                            walks_effective=w_eff, walks_budget=num_walks)
 

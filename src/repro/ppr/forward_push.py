@@ -59,14 +59,16 @@ class PushResult(NamedTuple):
     iters: jax.Array     # () number of frontier sweeps executed
 
 
-@partial(jax.jit, static_argnames=("n", "max_iters", "force", "shard_axis"))
+@partial(jax.jit, static_argnames=("n", "max_iters", "force", "shard_axis",
+                                   "block_n"))
 def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
                  in_weights: jax.Array, out_degree: jax.Array,
                  seeds: jax.Array, *, alpha: float, rmax: float, n: int,
                  max_iters: int = 10_000, row_map: jax.Array | None = None,
                  force: str | None = None,
                  shard_axis: str | None = None,
-                 pi0: jax.Array | None = None) -> PushResult:
+                 pi0: jax.Array | None = None,
+                 block_n: int = 256) -> PushResult:
     """Batched frontier push over the pull-form ELL view.
 
     ``in_neighbors``/``in_mask``/``in_weights`` are the (n, K) padded
@@ -89,6 +91,11 @@ def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
     serving engine resume a bounded push (``max_iters`` = sweeps per engine
     step) bit-identically to one uninterrupted run: chaining while_loop
     executions of the SAME body is the same left-fold as one long loop.
+
+    ``block_n`` is the Pallas row tile forwarded to the SpMM kernels —
+    autotuned per backend/shape via ``kernels.autotune`` and carried on
+    :class:`~repro.ppr.graph.DeviceGraph`; numerics-neutral (per-virtual-row
+    partials and fold order are independent of the tiling, DESIGN.md §15).
     """
     deg = out_degree.astype(jnp.float32)
     deg_safe = jnp.maximum(deg, 1.0)
@@ -107,20 +114,22 @@ def forward_push(in_neighbors: jax.Array, in_mask: jax.Array,
             if shard_axis is None:
                 moved = ops.ell_spmm(in_neighbors, in_mask, in_weights,
                                      state.r, threshold=threshold,
-                                     force=force)
+                                     force=force, block_n=block_n)
             else:
                 moved = ops.ell_spmm_shard(
                     in_neighbors, in_mask, in_weights, state.r,
                     axis_name=shard_axis, threshold=threshold,
-                    force=force)[:, :n]              # drop row padding
+                    force=force, block_n=block_n)[:, :n]  # drop row padding
         elif shard_axis is None:
             moved = ops.ell_spmm_sliced(in_neighbors, in_mask, in_weights,
                                         row_map, state.r,
-                                        threshold=threshold, force=force)
+                                        threshold=threshold, force=force,
+                                        block_n=block_n)
         else:
             moved = ops.ell_spmm_sliced_shard(
                 in_neighbors, in_mask, in_weights, row_map, state.r,
-                axis_name=shard_axis, threshold=threshold, force=force)
+                axis_name=shard_axis, threshold=threshold, force=force,
+                block_n=block_n)
         moved = (1.0 - alpha) * moved
         r = state.r * (1.0 - front) + moved
         return PushState(pi=pi, r=r, iters=state.iters + 1)

@@ -239,7 +239,16 @@ class Graph:
         the smaller W (less VMEM per row block). ``pad_multiple=None``
         resolves the backend-appropriate lane floor
         (:func:`_default_pad_multiple`): 128 on real TPU, 8 elsewhere.
+
+        With an active ``kernels.autotune`` tuning cache and no pinned
+        ``pad_multiple``, a measured width for this backend/shape-bucket
+        overrides the area heuristic (DESIGN.md §15) — cold cache keeps the
+        heuristic bit-for-bit.
         """
+        if pad_multiple is None:
+            tuned = _tuned_push_config(self, "sliced")
+            if tuned is not None and tuned.width is not None:
+                return tuned.width
         return self._sliced_width_cells(pad_multiple)[0]
 
     def ell_in_sliced(self, width: int | None = None,
@@ -387,6 +396,7 @@ class DeviceGraph:
     in_weights: Any
     in_row_map: Any = None     # (n_virtual,) int32 on device, or None (dense)
     ell_width: int = 0         # K of the resident table (dense or sliced)
+    block_n: int = 256         # Pallas row tile for the push SpMM (autotuned)
 
     uploads: ClassVar[int] = 0
     AUTO_SLICE_RATIO: ClassVar[float] = 4.0
@@ -406,10 +416,12 @@ class DeviceGraph:
     @classmethod
     def from_graph(cls, graph: Graph, *, layout: str = "auto",
                    width: int | None = None,
-                   pad_multiple: int | None = None) -> "DeviceGraph":
+                   pad_multiple: int | None = None,
+                   block_n: int | None = None) -> "DeviceGraph":
         import jax.numpy as jnp  # deferred: graph.py stays importable sans jax
 
-        lay = _resolve_push_layout(graph, layout, width, pad_multiple)
+        lay = _resolve_push_layout(graph, layout, width, pad_multiple,
+                                   block_n=block_n)
         DeviceGraph.uploads += 1
         return cls(
             n=graph.n, m=graph.m,
@@ -422,6 +434,7 @@ class DeviceGraph:
             in_weights=jnp.asarray(lay.weights),
             in_row_map=None if lay.row_map is None else jnp.asarray(lay.row_map),
             ell_width=lay.width,
+            block_n=lay.block_n,
         )
 
 
@@ -435,12 +448,34 @@ class _PushLayout(NamedTuple):
     weights: np.ndarray     # (rows, K) f32
     row_map: np.ndarray | None   # (rows,) int32 ascending, None when dense
     width: int              # K of the resident table
+    block_n: int = 256      # Pallas row tile (autotuned, numerics-neutral)
+
+
+def _tuned_push_config(graph: Graph, layout: str):
+    """Tuning-cache lookup for this graph's shape bucket (DESIGN.md §15).
+
+    Called exclusively at residency-build time — host-side, before the
+    arrays go to the device — so an active cache never adds a lookup (or
+    any host sync) to the fused serving loop. Returns None when the cache
+    is cold or jax is unavailable."""
+    try:
+        from ..kernels import autotune
+    except Exception:          # noqa: BLE001 — layout must work sans jax
+        return None
+    cache = autotune.get_cache()
+    if cache is None:
+        return None
+    return cache.lookup(autotune.current_backend(), layout,
+                        autotune.shape_bucket(graph.n, graph.m))
 
 
 def _resolve_push_layout(graph: Graph, layout: str, width: int | None,
-                         pad_multiple: int | None) -> _PushLayout:
+                         pad_multiple: int | None,
+                         block_n: int | None = None) -> _PushLayout:
     if layout not in ("auto", "dense", "sliced"):
         raise ValueError(f"layout must be auto|dense|sliced, got {layout!r}")
+    pinned_pm = pad_multiple is not None
+    pinned_w = width is not None
     if pad_multiple is None:
         pad_multiple = _default_pad_multiple()
     if layout == "auto":
@@ -451,14 +486,29 @@ def _resolve_push_layout(graph: Graph, layout: str, width: int | None,
             max(1, sliced_cells) else "dense"
         if width is None:
             width = sl_width              # reuse the scan's answer
+    # measured config, if any, refines whatever the caller did NOT pin;
+    # a cold cache leaves every value — and thus the residency — bit-identical
+    tuned = _tuned_push_config(graph, layout)
+    if tuned is not None:
+        if block_n is None:
+            block_n = tuned.block_n
+        if layout == "sliced" and not pinned_w and not pinned_pm \
+                and tuned.width is not None:
+            width = tuned.width
+            if tuned.pad_multiple is not None:
+                pad_multiple = tuned.pad_multiple
+    if block_n is None:
+        block_n = 256
     if layout == "sliced":
         sl = graph.ell_in_sliced(width=width, pad_multiple=pad_multiple)
         return _PushLayout(layout="sliced", neighbors=sl.neighbors,
                            mask=sl.mask, weights=sl.weights,
-                           row_map=sl.row_map, width=sl.width)
+                           row_map=sl.row_map, width=sl.width,
+                           block_n=block_n)
     nbr, mask, weights = graph.ell_in(pad_multiple=pad_multiple)
     return _PushLayout(layout="dense", neighbors=nbr, mask=mask,
-                       weights=weights, row_map=None, width=int(nbr.shape[1]))
+                       weights=weights, row_map=None, width=int(nbr.shape[1]),
+                       block_n=block_n)
 
 
 @dataclass(frozen=True, eq=False)
@@ -499,6 +549,7 @@ class ShardedDeviceGraph:
     in_weights: Any
     in_row_map: Any = None     # (rows_pad,) int32, P(axis), or None (dense)
     ell_width: int = 0
+    block_n: int = 256         # Pallas row tile for the push SpMM (autotuned)
 
     uploads: ClassVar[int] = 0
 
@@ -527,7 +578,8 @@ class ShardedDeviceGraph:
     @classmethod
     def from_graph(cls, graph: Graph, mesh: Any, *, axis: str = "shard",
                    layout: str = "auto", width: int | None = None,
-                   pad_multiple: int | None = None) -> "ShardedDeviceGraph":
+                   pad_multiple: int | None = None,
+                   block_n: int | None = None) -> "ShardedDeviceGraph":
         import jax  # deferred: graph.py stays importable sans jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -535,7 +587,8 @@ class ShardedDeviceGraph:
             raise ValueError(f"mesh has no axis {axis!r} "
                              f"(axes: {mesh.axis_names})")
         k = int(mesh.shape[axis])
-        lay = _resolve_push_layout(graph, layout, width, pad_multiple)
+        lay = _resolve_push_layout(graph, layout, width, pad_multiple,
+                                   block_n=block_n)
         nbr, mask, weights = lay.neighbors, lay.mask, lay.weights
         row_map = lay.row_map
         rows = int(nbr.shape[0])
@@ -565,4 +618,5 @@ class ShardedDeviceGraph:
             in_row_map=None if row_map is None else jax.device_put(
                 row_map, NamedSharding(mesh, P(axis))),
             ell_width=lay.width,
+            block_n=lay.block_n,
         )

@@ -95,6 +95,14 @@ class ServingConfig:
     #                                    free lanes take the EDF-earliest
     #                                    admitted query from ANY job
     lane_pool: int = 0                 # engine lane count (0 = pool.total)
+    cold_compile_s: float = 0.0        # daemon cold-start compile surcharge
+    #                                    billed into the FIRST admitted job's
+    #                                    preprocess reservation (DESIGN.md §15
+    #                                    — the Alg.-2 c-core term the
+    #                                    persistent compilation cache shrinks)
+    warm_start: bool = False           # compilation cache already populated:
+    #                                    the cold_compile_s surcharge is
+    #                                    waived (second daemon start)
 
     def __post_init__(self) -> None:
         if not 0.0 < self.scaling_factor <= 1.0:
@@ -105,6 +113,8 @@ class ServingConfig:
             raise ValueError("preprocess_cores must be >= 1")
         if self.lane_pool < 0:
             raise ValueError("lane_pool must be >= 0")
+        if self.cold_compile_s < 0.0:
+            raise ValueError("cold_compile_s must be >= 0")
 
 
 @dataclass(frozen=True)
@@ -265,6 +275,10 @@ class ServingRuntime:
         self._mute_wal = False             # recovery rebuild: don't re-log
         self.replay_pre_core_s = 0.0       # preprocess core-s re-billed by
         #                                    the last recovery's replay
+        self.pre_core_s = 0.0              # total preprocess core-seconds
+        #                                    billed (DESIGN.md §15 — the
+        #                                    warm-cold-start metric)
+        self._compile_billed = False       # cold_compile_s surcharge applied
 
     # -- durability (DESIGN.md §12) ----------------------------------------
     def attach_wal(self, wal: WriteAheadLog, snapshot_every: int = 0,
@@ -662,6 +676,8 @@ class ServingRuntime:
             "lemma2": [[j, v] for j, v in sorted(self._lemma2_cs.items())],
             "waiting": [j.job_id for j in self._waiting],
             "model": {"ewma": self.model._ewma},
+            "pre_core_s": self.pre_core_s,
+            "compile_billed": self._compile_billed,
             "controller": {
                 "rescale_events": list(self.controller.rescale_events),
                 "straggler_events": list(self.controller.straggler_events),
@@ -704,6 +720,9 @@ class ServingRuntime:
         self._lemma2_cs = {int(j): float(v) for j, v in state["lemma2"]}
         self._waiting = [self.jobs[int(i)] for i in state["waiting"]]
         self.model._ewma = state["model"]["ewma"]
+        # .get: snapshots from before the cold-start accounting load cleanly
+        self.pre_core_s = float(state.get("pre_core_s", 0.0))
+        self._compile_billed = bool(state.get("compile_billed", False))
         self.controller.rescale_events[:] = state["controller"][
             "rescale_events"]
         self.controller.straggler_events[:] = state["controller"][
@@ -976,11 +995,20 @@ class ServingRuntime:
         stats = job.executor(sample_ids)
         job.stats = stats
         job.t_pre = stats.t_pre_on(c)
+        # cold-start compile surcharge (DESIGN.md §15): the daemon's first
+        # admitted job eats the fused-executable compile inside its c-core
+        # preprocess reservation — unless a warm persistent compilation
+        # cache waives it. Billed once per runtime lifetime either way.
+        if self.cfg.cold_compile_s > 0.0 and not self._compile_billed:
+            self._compile_billed = True
+            if not self.cfg.warm_start:
+                job.t_pre += self.cfg.cold_compile_s
         # preprocessing cost is real core time even though c is tiny; the
         # c cores are additionally RESERVED in the pool over the preprocess
         # window below (ROADMAP follow-up — they used to be assumed free),
         # and the slot grant acquired below is charged from NOW too
         job.core_seconds += c * job.t_pre
+        self.pre_core_s += c * job.t_pre
         if self._in_replay:
             # recovery re-executes this preprocessing — real cores burned
             # twice for the same sample, surfaced by the daemon's recovery

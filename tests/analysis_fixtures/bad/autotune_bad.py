@@ -1,0 +1,18 @@
+"""Bad fixture: a sweep harness that times and reports from INSIDE the
+traced candidate — wall-clock reads, a printed tracer and a float() sync all
+land in the jit closure, so the "measurement" is trace-time noise and every
+steady-state call pays the sync (host-sync must flag each)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def candidate(x):
+    t0 = time.perf_counter()             # wall clock inside traced code
+    y = jnp.tanh(x) @ x.T
+    elapsed = time.perf_counter() - t0   # measures tracing, not the kernel
+    print("candidate took", elapsed, y)  # prints a tracer, syncs every call
+    return y * float(jnp.max(y))         # device->host sync in the hot loop

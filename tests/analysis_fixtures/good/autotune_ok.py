@@ -1,0 +1,27 @@
+"""Good fixture: the autotune sweep pattern done right — the candidate is a
+pure traced function; compilation, wall-clock timing, block_until_ready and
+the float() readout all live in the HOST-side harness, which is not
+reachable from any jit root (host-sync must stay quiet)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def candidate(x):
+    return jnp.tanh(x) @ x.T
+
+
+def measure(x, repeats=3):
+    # sanctioned harness: compile outside the timed region, sync explicitly
+    compiled = jax.jit(lambda a: candidate(a)).lower(x).compile()
+    compiled(x).block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = compiled(x)
+        out.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return float(jnp.max(out)), best * 1e6

@@ -46,6 +46,7 @@ def test_good_fixtures_are_clean():
 @pytest.mark.parametrize("rule,path,min_findings", [
     ("host-sync", "bad/sync_bad.py", 4),
     ("host-sync", "bad/engine_bad.py", 3),
+    ("host-sync", "bad/autotune_bad.py", 4),
     ("prng-discipline", "bad/prng_bad.py", 5),
     ("replay-determinism", "bad/serving/clock.py", 6),
     ("pool-accounting", "bad/pool_bad.py", 3),
@@ -57,6 +58,16 @@ def test_rule_coverage_per_fixture(rule, path, min_findings):
     mine = [f for f in report.findings if f.rule == rule]
     assert len(mine) >= min_findings, \
         f"{rule} found only {len(mine)} on {path}"
+
+
+def test_autotune_harness_is_host_sync_clean():
+    """The sweep harness times/syncs by design — but all of it must live
+    host-side, outside any traced root (the good/bad autotune fixture pair
+    pins the pattern; this pins the real module)."""
+    report = run_analysis([str(REPO_ROOT / "src" / "repro" / "kernels" /
+                               "autotune.py")],
+                          rules=["host-sync"], root=REPO_ROOT)
+    assert report.findings == []
 
 
 def test_orphan_pallas_call_is_flagged():

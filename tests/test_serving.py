@@ -353,6 +353,64 @@ def test_runtime_accounting_consistency():
     assert rt.pool.used == 0                              # everything released
 
 
+def test_cold_compile_billed_once_against_first_job():
+    """cold_compile_s lands on the FIRST admitted job's preprocess time and
+    never again — modelling the daemon's one-off XLA compile (DESIGN.md §15).
+    A warm_start runtime (persistent compilation cache hit) skips the
+    surcharge and is bit-identical to a zero-surcharge run."""
+    def run(cold, warm):
+        rt = ServingRuntime(CorePool.of(16), _sim_factory(),
+                            ServingConfig(scaling_factor=0.9,
+                                          cold_compile_s=cold,
+                                          warm_start=warm))
+        rt.submit_poisson(4, rate=1.0, queries=(60, 120),
+                          deadline=(5.0, 8.0), seed=3)
+        return rt, rt.run()
+
+    rt0, rep0 = run(0.0, False)
+    rt_c, rep_c = run(2.0, False)
+    rt_w, rep_w = run(2.0, True)
+
+    # warm start == no surcharge, bit-for-bit
+    assert [r.__dict__ for r in rep_w.records] \
+        == [r.__dict__ for r in rep0.records]
+    assert rt_w.pre_core_s == rt0.pre_core_s
+    # cold start bills the compile exactly once: the preprocess core-seconds
+    # delta equals cores x surcharge for the first job's grant
+    extra = rt_c.pre_core_s - rt0.pre_core_s
+    assert extra == pytest.approx(
+        rt_c.cfg.preprocess_cores * rt_c.cfg.cold_compile_s, rel=1e-9)
+    # only job 0 pays: every later record matches the baseline
+    for rec_c, rec_0 in zip(rep_c.records[1:], rep0.records[1:]):
+        assert rec_c.core_seconds == rec_0.core_seconds
+
+
+def test_cold_compile_survives_wal_snapshot_round_trip(tmp_path):
+    """The billed-once flag is recovery-state: a crash after job 0 must not
+    re-bill the compile on the restarted runtime."""
+    cfg = ServingConfig(scaling_factor=0.9, cold_compile_s=2.0)
+    rt = ServingRuntime(CorePool.of(16), _sim_factory(), cfg)
+    state = rt._state_dict()
+    assert state["compile_billed"] is False and state["pre_core_s"] == 0.0
+    rt._compile_billed = True
+    rt.pre_core_s = 12.5
+    rt2 = ServingRuntime(CorePool.of(16), _sim_factory(), cfg)
+    rt2._load_state(rt._state_dict())
+    assert rt2._compile_billed is True
+    assert rt2.pre_core_s == 12.5
+    # legacy snapshots (pre-PR-9) load with the defaults
+    legacy = {k: v for k, v in rt._state_dict().items()
+              if k not in ("compile_billed", "pre_core_s")}
+    rt3 = ServingRuntime(CorePool.of(16), _sim_factory(), cfg)
+    rt3._load_state(legacy)
+    assert rt3._compile_billed is False and rt3.pre_core_s == 0.0
+
+
+def test_negative_cold_compile_rejected():
+    with pytest.raises(ValueError):
+        ServingConfig(cold_compile_s=-1.0)
+
+
 def test_runtime_drives_fora_executor_via_run_chunk():
     """End-to-end with the real PPR engine: each slot is ONE fused device
     step through ForaExecutor.run_chunk (the chunked API), sampling stays on

@@ -21,7 +21,12 @@ Flags, inside that closure:
   a ``jnp.``/``jax.`` call.
 
 Host-side ``np.*`` arithmetic on *static* shapes (Pallas grid math) is
-legal at trace time and deliberately not flagged.
+legal at trace time and deliberately not flagged. The same split is what
+keeps the autotune sweep harness (``repro.kernels.autotune``) legal: its
+wall-clock reads, ``block_until_ready`` and ``float()`` readouts live in
+host functions that take the compiled executable as a value and are never
+reachable from a traced root — the good/bad ``autotune_*`` fixtures pin
+both sides of that line.
 """
 
 from __future__ import annotations

@@ -16,14 +16,18 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# every leg below runs through tools/run.sh so allocator / XLA topology /
+# log-level hygiene is identical across legs (DESIGN.md §15)
+RUN=tools/run.sh
+
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # dnalint (DESIGN.md §13): the repo's invariant analyzer is a HARD gate —
 # src/ must be clean modulo the committed (empty) baseline, and the seeded
 # bad fixtures must still be caught (a lint that stops firing is a lint
 # that silently rotted)
-python -m tools.analysis --baseline tools/analysis/baseline.json
-if python -m tools.analysis tests/analysis_fixtures/bad > /dev/null 2>&1
+$RUN python -m tools.analysis --baseline tools/analysis/baseline.json
+if $RUN python -m tools.analysis tests/analysis_fixtures/bad > /dev/null 2>&1
 then
     echo "dnalint failed to flag the seeded bad fixtures" >&2
     exit 1
@@ -40,48 +44,58 @@ fi
 
 # the forced-8-device leg below covers the sharded subprocess test directly,
 # so the main run skips the redundant inner relaunch
-REPRO_SHARDED_SUBPROCESS=skip python -m pytest -x -q
+REPRO_SHARDED_SUBPROCESS=skip $RUN python -m pytest -x -q
 
 # multi-device PPR: sharded-vs-single parity, transfer guard, executor
 # devices=k — on a host platform forced to 8 devices (DESIGN.md §9)
-XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-    python -m pytest -x -q tests/test_sharded.py -k "not subprocess"
+REPRO_HOST_DEVICES=8 $RUN python -m pytest -x -q tests/test_sharded.py \
+    -k "not subprocess"
+
+# autotune smoke (DESIGN.md §15): tiny sweep populates a throwaway tuning
+# cache, then a second invocation must HIT it (exercises the atomic JSON
+# round-trip + shape-bucket key stability end to end)
+at_dir=$(mktemp -d)
+trap 'rm -rf "$at_dir"' EXIT
+$RUN python -m repro.kernels.autotune --smoke --cache "$at_dir/tune.json"
+$RUN python -m repro.kernels.autotune --smoke --cache "$at_dir/tune.json" \
+    --expect-hit
+rm -rf "$at_dir"
 
 # serving-runtime smoke (DESIGN.md §10): deterministic seeded replay,
 # >= 95% deadline hit-rate, core-hours strictly below static Lemma-2, and
 # the failure-injection run completing via readmission (no job loss)
-python -m benchmarks.serving_sim --check
+$RUN python -m benchmarks.serving_sim --check
 
 # continuous-batching engine smoke (DESIGN.md §14): same burst trace
 # through the chunked and engine paths — engine must be deterministic,
 # keep the 100% SLA hit-rate, and deliver >= 1.5x queries/sec
-python -m benchmarks.serving_sim --check --engine
+$RUN python -m benchmarks.serving_sim --check --engine
 
 # warm-cache smoke (DESIGN.md §11): cold leg bit-for-bit equal to the
 # uncached serving path, warm leg >= 30% core-hours reduction at 100% SLA
-python -m benchmarks.index_cache --check
+$RUN python -m benchmarks.index_cache --check
 
 # chaos smoke (DESIGN.md §12): WAL-attached run with device failure, lane
 # slowdowns and two process crashes — recovery must be crash-transparent
 # (records bit-identical to the uncrashed run) with zero job loss
-python -m benchmarks.serving_sim --chaos
+$RUN python -m benchmarks.serving_sim --chaos
 
 # engine-mode chaos smoke (DESIGN.md §14): the same fault schedule through
 # the continuous-batching path — crash-transparent, zero job loss, with
 # lane-occupancy accounting surviving recovery
-python -m benchmarks.serving_sim --chaos --engine
+$RUN python -m benchmarks.serving_sim --chaos --engine
 
 trap 'rm -f BENCH_kernels.committed.json BENCH_kernels.fresh1.json \
             BENCH_kernels.fresh2.json BENCH_kernels.merged.json' EXIT
-python -m benchmarks.run --only kernels,fora_hot,serving,index --json BENCH_kernels.fresh1.json
-python -m benchmarks.run --only kernels,fora_hot,serving,index --json BENCH_kernels.fresh2.json
+$RUN python -m benchmarks.run --only kernels,fora_hot,serving,index --json BENCH_kernels.fresh1.json
+$RUN python -m benchmarks.run --only kernels,fora_hot,serving,index --json BENCH_kernels.fresh2.json
 
 baseline=BENCH_kernels.json
 if git show HEAD:BENCH_kernels.json > BENCH_kernels.committed.json 2>/dev/null
 then
     baseline=BENCH_kernels.committed.json
 fi
-python tools/bench_compare.py "$baseline" \
+$RUN python tools/bench_compare.py "$baseline" \
     BENCH_kernels.fresh1.json BENCH_kernels.fresh2.json \
     --tol "${BENCH_TOL:-2.0}" --merged-out BENCH_kernels.merged.json
 mv BENCH_kernels.merged.json BENCH_kernels.json

@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Environment-hygiene launcher (DESIGN.md §15): every CI leg and every
+# benchmark invocation goes through ONE wrapper so the process environment —
+# allocator, XLA device topology, log noise, import path — is identical
+# across legs and across machines. Usage:
+#
+#     tools/run.sh python -m benchmarks.run --only kernels
+#     REPRO_HOST_DEVICES=8 tools/run.sh python -m pytest tests/test_sharded.py
+#
+# Knobs (all optional, all overridable by the caller's environment):
+#   REPRO_HOST_DEVICES=N   force N host-platform XLA devices (appends
+#                          --xla_force_host_platform_device_count=N to
+#                          XLA_FLAGS; caller-set XLA_FLAGS are preserved)
+#   REPRO_NO_TCMALLOC=1    skip the tcmalloc LD_PRELOAD even when present
+#
+# tcmalloc: page-level allocator churn dominates host-side graph builds on
+# glibc malloc; when the container ships libtcmalloc we preload it. Guarded —
+# missing library means we silently run on the default allocator rather than
+# crashing the leg (the bench gate compares against a baseline measured the
+# same way, so the choice only needs to be CONSISTENT, which routing every
+# leg through this script guarantees).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${REPRO_NO_TCMALLOC:-0}" != "1" && -z "${LD_PRELOAD:-}" ]]; then
+    for _tc in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+               /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+               /usr/lib/libtcmalloc.so.4; do
+        if [[ -r "$_tc" ]]; then
+            export LD_PRELOAD="$_tc"
+            break
+        fi
+    done
+fi
+
+# XLA's C++ logging defaults to spamming absl INFO lines into benchmark
+# stdout; keep CSV rows parseable unless the caller asks for the noise
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+if [[ -n "${REPRO_HOST_DEVICES:-}" ]]; then
+    export XLA_FLAGS="--xla_force_host_platform_device_count=${REPRO_HOST_DEVICES}${XLA_FLAGS:+ $XLA_FLAGS}"
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec "$@"
