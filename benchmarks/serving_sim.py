@@ -25,6 +25,10 @@ stays gateable (tools/bench_compare.py skips rows with baseline <= 0):
   daemon first start (compile surcharge inside the c-core reservation)
 * ``serving/warm_start_pre_core_s`` — same trace with a warm persistent
   compilation cache (surcharge waived) — the gap is the cold-start saving
+* ``serving/churn_miss_rate_pct_p1`` — miss rate under the seeded
+  graph-mutation stream + 1 (must match the failure-free anchor)
+* ``serving/churn_refresh_vs_rebuild_pct`` — incremental-refresh core-s as
+  a percentage of the counterfactual full-rebuild core-s (DESIGN.md §16)
 
 ``--check`` mode (the CI smoke leg) re-runs the same seeded scenario twice
 and asserts: deterministic replay, >= 95% deadline hit-rate, total
@@ -36,6 +40,11 @@ staying bit-identical to a run that never had a compile surcharge.
 ``--check --engine`` drives the burst trace through both paths and asserts
 the engine headline: deterministic replay, 100% SLA hit-rate preserved,
 and >= 1.5x queries/sec over the chunked path (ISSUE 8).
+``--check --mutation-rate R`` drives the anchor workload under a seeded
+mutation stream at R batches/s and asserts the churn gate (ISSUE 10):
+deterministic replay, the anchor SLA hit-rate fully sustained, incremental
+refresh below 25% of the full-rebuild core-seconds, and the cache TTL
+auto-tuned from the observed update cadence.
 ``--chaos`` mode (DESIGN.md §12) drives the WAL-attached chaos scenario —
 device failure + lane slowdowns + process crashes with recovery — and
 asserts: deterministic replay, crash-transparency (records bit-identical
@@ -55,6 +64,7 @@ import tempfile
 import time
 
 from repro.ft.chaos import ChaosSchedule, ChaosSpec, drive_with_crashes
+from repro.index import ResultCache
 from repro.serving import (CorePool, ServingConfig, ServingReport,
                            ServingRuntime, SimJobExecutor, WriteAheadLog)
 
@@ -94,9 +104,19 @@ CHAOS_CRASH_AT = (25, 60)
 ENGINE_JOBS = 16
 ENGINE_RATE = 3.0
 # daemon cold-start scenario (DESIGN.md §15): the first admitted job eats
-# the fused-executable compile inside its c-core preprocess reservation; a
+# the fused-executable compile inside its c-core reservation; a
 # warm persistent compilation cache (second daemon start) waives it
 COLD_COMPILE_S = 2.0
+# churn scenario (DESIGN.md §16): the anchor workload under a seeded
+# graph-mutation stream — each batch bumps graph_version, feeds the cache's
+# TTL tuner and books incremental-refresh vs full-rebuild core-seconds
+CHURN_MUTATIONS = 10
+CHURN_RATE = 0.5           # mutation batches/second
+CHURN_GRAPH_N = 4000
+CHURN_AFFECTED_FRAC = 0.02
+CHURN_BUDGET = 60          # per-batch refresh budget (nodes)
+CHURN_NODE_COST = 0.002    # core-seconds per redrawn node
+CHURN_TTL_FACTOR = 4.0     # cache TTL = factor x observed update cadence
 
 
 def _drive(pool_cores: int, *, failures: dict | None = None,
@@ -149,6 +169,27 @@ def _lane_utilisation(events: list[dict], end_time: float) -> float:
     util += (last["busy"] / max(1, last["lanes"])
              * max(0.0, end_time - last["t"]))
     return util / end_time
+
+
+def _drive_churn(mutation_rate: float = CHURN_RATE
+                 ) -> tuple[ServingReport, ServingRuntime]:
+    """The anchor workload plus a seeded mutation stream (DESIGN.md §16):
+    graph updates arrive as heap events interleaved with the jobs, each
+    bumping the live graph_version and booking the incremental-invalidation
+    ledgers the churn gate reads."""
+    rt = ServingRuntime(
+        CorePool.of(POOL_CORES),
+        lambda job_id, nq, sd: SimJobExecutor(mean=0.05, cv=0.3, seed=sd),
+        ServingConfig(scaling_factor=0.9, sample_frac=0.05),
+        cache=ResultCache(4096, ttl_update_factor=CHURN_TTL_FACTOR))
+    rt.submit_poisson(NUM_JOBS, RATE, queries=QUERIES, deadline=DEADLINE,
+                      seed=SEED)
+    rt.schedule_mutations(CHURN_MUTATIONS, mutation_rate, seed=SEED + 1,
+                          graph_n=CHURN_GRAPH_N,
+                          affected_frac=CHURN_AFFECTED_FRAC,
+                          refresh_budget=CHURN_BUDGET,
+                          node_cost=CHURN_NODE_COST)
+    return rt.run(), rt
 
 
 def _drive_failure_run() -> ServingReport:
@@ -257,6 +298,20 @@ def run() -> None:
          f"busy_frac={util:.3f};lanes={ert.engine.lanes};"
          f"samples={len(ert.controller.occupancy_events)}")
 
+    churn_rep, churn_rt = _drive_churn()
+    churn_miss = 100.0 * (1.0 - churn_rep.hit_rate)
+    refresh_pct = (100.0 * churn_rt.refresh_core_s
+                   / max(churn_rt.rebuild_core_s, 1e-12))
+    emit("serving/churn_miss_rate_pct_p1", churn_miss + 1.0,
+         f"hit_rate={churn_rep.hit_rate:.3f};"
+         f"mutations={churn_rt.mutations_applied};"
+         f"graph_v={churn_rt.graph_version}")
+    emit("serving/churn_refresh_vs_rebuild_pct", refresh_pct,
+         f"refresh_core_s={churn_rt.refresh_core_s:.2f};"
+         f"rebuild_core_s={churn_rt.rebuild_core_s:.2f};"
+         f"pending={churn_rt.pending_refresh};"
+         f"auto_ttl={churn_rt.cache.ttl:.2f}")
+
     # daemon cold start vs warm compilation cache (DESIGN.md §15): identical
     # trace, only the compile surcharge waiver differs — the gap is exactly
     # what the persistent compilation cache stops billing against deadlines
@@ -338,6 +393,40 @@ def check_engine() -> None:
           f"hit_rate={erep.hit_rate:.3f}, busy_frac={util:.3f}")
 
 
+def check_churn(mutation_rate: float = CHURN_RATE) -> None:
+    """CI churn smoke (ISSUE 10): the anchor workload under a live seeded
+    mutation stream — deterministic replay, the anchor SLA hit-rate fully
+    sustained, incremental refresh < 25% of full-rebuild core-seconds, and
+    the cache TTL actually tuned from the observed update cadence."""
+    anchor = _drive(POOL_CORES)
+    rep_a, rt_a = _drive_churn(mutation_rate)
+    rep_b, rt_b = _drive_churn(mutation_rate)
+    assert rep_a == rep_b and rt_a.refresh_core_s == rt_b.refresh_core_s, \
+        "churn serving sim is not replay-deterministic"
+    assert rt_a.mutations_applied == CHURN_MUTATIONS, (
+        f"only {rt_a.mutations_applied}/{CHURN_MUTATIONS} mutation batches "
+        "fired — the stream outlived the trace; lower CHURN_RATE")
+    assert rt_a.graph_version == CHURN_MUTATIONS
+    assert rep_a.hit_rate >= anchor.hit_rate, (
+        f"churn hit-rate {rep_a.hit_rate:.3f} below the failure-free "
+        f"anchor {anchor.hit_rate:.3f} — incremental invalidation must "
+        "not cost SLA")
+    assert rt_a.rebuild_core_s > 0.0
+    ratio = rt_a.refresh_core_s / rt_a.rebuild_core_s
+    assert ratio < 0.25, (
+        f"incremental refresh spent {100 * ratio:.1f}% of the full-rebuild "
+        "core-seconds — >= 25% defeats the point of deltas")
+    assert rt_a.cache.ttl is not None, (
+        "cache TTL never auto-tuned — note_update is not wired into the "
+        "mutation path")
+    print(f"serving_sim --check --mutation-rate OK: "
+          f"hit_rate={rep_a.hit_rate:.3f} >= anchor {anchor.hit_rate:.3f}; "
+          f"{rt_a.mutations_applied} batches -> graph v{rt_a.graph_version}; "
+          f"refresh/rebuild = {100 * ratio:.1f}% < 25%; "
+          f"auto_ttl={rt_a.cache.ttl:.2f}s "
+          f"(pending_refresh={rt_a.pending_refresh})")
+
+
 def check_chaos(engine: bool = False) -> None:
     """CI chaos smoke (ISSUE 6): crash-transparency + no job loss. With
     ``engine=True`` (ISSUE 8) the same fault schedule drives the
@@ -388,9 +477,15 @@ if __name__ == "__main__":
                     help="with --check: assert the engine >= 1.5x QPS "
                          "headline; with --chaos: drive the chaos scenario "
                          "through the engine path")
+    ap.add_argument("--mutation-rate", type=float, default=0.0,
+                    help="with --check: assert the churn-leg criteria "
+                         "(anchor SLA sustained, refresh < 25% of rebuild) "
+                         "under a mutation stream at this rate (batches/s)")
     args = ap.parse_args()
     if args.check and args.engine:
         check_engine()
+    elif args.check and args.mutation_rate > 0:
+        check_churn(args.mutation_rate)
     elif args.check:
         check()
     elif args.chaos:

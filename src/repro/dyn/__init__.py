@@ -1,0 +1,16 @@
+"""Dynamic-graph subsystem: streaming edge updates with device-side deltas
+and incremental invalidation (DESIGN.md §16).
+
+``MutationLog`` is the durable record — seeded, WAL-loggable batches of
+``add_edge``/``remove_edge`` pairs with monotonically assigned
+``graph_version``s. ``DynamicGraph`` applies those batches **device-side**
+to a live sliced-ELL residency (delta virtual rows + weight-zeroing
+tombstones; the table is never re-uploaded between compactions) and its
+``compact()`` re-slices bit-identically to rebuilding the graph from
+scratch at the same version.
+"""
+
+from .dynamic_graph import ApplyInfo, DynamicGraph
+from .mutation_log import EdgeBatch, MutationLog
+
+__all__ = ["ApplyInfo", "DynamicGraph", "EdgeBatch", "MutationLog"]

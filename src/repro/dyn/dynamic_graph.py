@@ -1,0 +1,347 @@
+"""Device-side dynamic-graph residency: streaming edge updates without
+re-upload, plus compaction bit-identical to a fresh build (DESIGN.md §16).
+
+``DynamicGraph`` owns three synchronized pieces of state:
+
+* a **host mirror** — the live non-self-loop edge set plus per-node real
+  out-degrees. Every batch is normalised here into the *residency diff*:
+  the effective adds/removes after dedup/symmetrisation PLUS the dangling
+  self-loop toggles ``Graph.from_edges`` would apply (a node losing its
+  last real out-edge gains a self-loop; a node gaining its first loses
+  it). The mirror is what makes ``compact()`` an identity: it holds
+  exactly the edge set ``from_edges`` would be called with.
+* a **device push table** — the sliced-ELL pull residency with spare
+  capacity rows (sentinel ``row_map == n``, numerically inert). Batches
+  are applied by :func:`repro.kernels.ops.push_delta_apply`: removals
+  weight-zero their cells, additions append <= W-wide virtual rows, a
+  stable device re-sort keeps ``row_map`` ascending (the contract every
+  sliced-SpMM consumer assumes), and weights are re-derived from the
+  resident inverse-out-degree vector with the same gather-multiply the
+  fresh numpy builder runs — unchanged cells keep their exact bits.
+* a **device walk view** — CSR arrays with tombstoned removals, re-sorted
+  per batch by :func:`repro.kernels.ops.walk_delta_apply` so the live
+  prefix is bit-identical to a fresh host build (uniform out-neighbor
+  sampling draws the same walks a rebuild would).
+
+Only the small per-batch delta arrays cross the host->device boundary
+(padded to fixed caps, so repeat batches hit the jit cache); the O(table)
+rewrite happens on device and nothing syncs back — the zero-host-sync
+serving contract survives delta-resident execution (pinned by
+tests/test_dyn.py's transfer-guard test).
+
+``compact()`` rebuilds host-side through ``Graph.from_edges`` ->
+``DeviceGraph.from_graph`` — the *same code path* a from-scratch build
+takes, so the compacted residency is bit-identical to one built fresh at
+the same version, and spare/tombstone capacity is reclaimed.
+
+Out of scope (documented follow-up): node additions (the node universe is
+fixed at ``n``) and the sharded residency (``ShardedDeviceGraph`` row
+partitions would need delta rows routed per shard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ops import push_delta_apply, walk_delta_apply
+from ..ppr.graph import DeviceGraph, Graph, inverse_out_degree
+from .mutation_log import EdgeBatch, MutationLog
+
+# per-jit-call delta caps: fixed so every chunk reuses one cached trace
+_APPLY_ROWS = 64        # push virtual rows per call
+_APPLY_EDGES = 256      # walk edges / removals / degree scatters per call
+
+
+def _pow2_at_least(x: int, floor: int = 256) -> int:
+    cap = floor
+    while cap < x:
+        cap *= 2
+    return cap
+
+
+def _chunks(seq: list, size: int):
+    for lo in range(0, len(seq), size):
+        yield seq[lo:lo + size]
+
+
+@dataclass(frozen=True)
+class ApplyInfo:
+    """What one batch did — the serving runtime's invalidation input."""
+
+    version: int
+    affected: np.ndarray      # sorted unique sources whose out-nbhd changed
+    adds_applied: int         # residency edge insertions (incl. loop toggles)
+    removes_applied: int      # residency edge tombstones (incl. loop toggles)
+    push_rows: int            # delta virtual rows appended to the push table
+    live_edges: int           # residency edge count after the batch
+
+
+class DynamicGraph:
+    """Mutable device residency over a fixed ``n``-node universe."""
+
+    def __init__(self, graph: Graph, *, width: int | None = None,
+                 pad_multiple: int | None = None, block_n: int | None = None,
+                 base_version: int = 0):
+        canon = Graph.from_edges(graph.n, graph.edge_src, graph.edge_dst,
+                                 directed=graph.directed, name=graph.name)
+        if not (np.array_equal(canon.edge_src, graph.edge_src)
+                and np.array_equal(canon.edge_dst, graph.edge_dst)):
+            raise ValueError(
+                "DynamicGraph requires a from_edges-normalised graph "
+                "(self-loops only on dangling nodes, deduped, src-sorted) — "
+                "rebuild it through Graph.from_edges first")
+        self._graph = graph
+        self._build_args = dict(width=width, pad_multiple=pad_multiple,
+                                block_n=block_n)
+        self.version = int(base_version)
+        self.log = MutationLog(base_version=base_version)
+        # host mirror: real (non-self-loop) edges + real out-degrees
+        self._edges = {(int(u), int(v))
+                       for u, v in zip(graph.edge_src, graph.edge_dst)
+                       if u != v}
+        self._deg = np.zeros(graph.n, dtype=np.int64)
+        for u, _ in self._edges:
+            self._deg[u] += 1
+        self._attach(DeviceGraph.from_graph(graph, layout="sliced",
+                                            **self._build_args))
+
+    # -- residency attach (init + compact share it) ------------------------
+    def _attach(self, dg: DeviceGraph) -> None:
+        n = dg.n
+        nv = int(dg.in_neighbors.shape[0])
+        cap = _pow2_at_least(nv + _APPLY_ROWS)
+        self._push_nbr = jnp.pad(dg.in_neighbors, ((0, cap - nv), (0, 0)))
+        self._push_mask = jnp.pad(dg.in_mask, ((0, cap - nv), (0, 0)))
+        self._push_rm = jnp.pad(dg.in_row_map, (0, cap - nv),
+                                constant_values=n)
+        self._push_used = nv
+        m = int(dg.edge_src.shape[0])
+        ecap = _pow2_at_least(m + _APPLY_EDGES)
+        self._walk_src = jnp.pad(dg.edge_src, (0, ecap - m),
+                                 constant_values=n)
+        self._walk_dst = jnp.pad(dg.edge_dst, (0, ecap - m))
+        self._walk_alive = jnp.pad(jnp.ones((m,), bool), (0, ecap - m))
+        self._walk_live = m
+        self._walk_off = dg.out_offsets
+        self._walk_deg = dg.out_degree
+        self._inv_out = jnp.asarray(inverse_out_degree(
+            np.asarray(dg.out_degree)))
+        self._push_w = jnp.pad(dg.in_weights, ((0, cap - nv), (0, 0)))
+        self.dg = dg
+
+    # -- views -------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self._graph.n
+
+    @property
+    def width(self) -> int:
+        return self.dg.ell_width
+
+    @property
+    def live_edges(self) -> int:
+        return self._walk_live
+
+    def graph(self) -> Graph:
+        """Host graph at the CURRENT version, rebuilt from the mirror
+        through the canonical ``from_edges`` path (dangling self-loops
+        re-derived there)."""
+        pairs = sorted(self._edges)
+        src = np.asarray([u for u, _ in pairs], dtype=np.int64)
+        dst = np.asarray([v for _, v in pairs], dtype=np.int64)
+        return Graph.from_edges(self._graph.n, src, dst,
+                                directed=self._graph.directed,
+                                name=self._graph.name)
+
+    # -- batch normalisation ----------------------------------------------
+    def _normalise(self, pairs: np.ndarray) -> set:
+        n = self._graph.n
+        if pairs.size and (pairs.min() < 0 or pairs.max() >= n):
+            raise ValueError("edge endpoints out of range (the node "
+                             "universe is fixed at construction)")
+        out = {(int(u), int(v)) for u, v in pairs if u != v}
+        if not self._graph.directed:
+            out |= {(v, u) for u, v in sorted(out)}
+        return out
+
+    # -- apply -------------------------------------------------------------
+    def mutate(self, adds=(), removes=()) -> ApplyInfo:
+        """Log and apply one batch (the one-stop local-driver entry)."""
+        return self.apply(self.log.append(adds, removes))
+
+    def apply_record(self, rec: dict) -> ApplyInfo:
+        """Apply a WAL-replayed batch record (serving recovery path)."""
+        return self.apply(EdgeBatch.from_record(rec))
+
+    def apply(self, batch: EdgeBatch) -> ApplyInfo:
+        """Apply one ``EdgeBatch`` device-side; returns the invalidation
+        summary. Batches must arrive in version order."""
+        if batch.version != self.version + 1:
+            raise ValueError(f"batch version {batch.version} does not "
+                             f"follow current version {self.version}")
+        adds_n = self._normalise(batch.adds)
+        removes_n = self._normalise(batch.removes)
+        E = self._edges
+        adds_eff = sorted(e for e in adds_n if e not in E)
+        rem_eff = sorted(e for e in removes_n
+                         if e in E and e not in adds_n)
+        # dangling self-loop toggles: residency-degree transitions
+        delta = {}
+        for u, _ in adds_eff:
+            delta[u] = delta.get(u, 0) + 1
+        for u, _ in rem_eff:
+            delta[u] = delta.get(u, 0) - 1
+        loop_adds, loop_removes, changed = [], [], {}
+        for u, d in sorted(delta.items()):
+            old, new = int(self._deg[u]), int(self._deg[u]) + d
+            if old == 0 and new > 0:
+                loop_removes.append((u, u))
+            elif old > 0 and new == 0:
+                loop_adds.append((u, u))
+            if max(old, 1) != max(new, 1):
+                changed[u] = max(new, 1)
+        adds_res = sorted(adds_eff + loop_adds)
+        removes_res = sorted(rem_eff + loop_removes)
+        affected = np.unique(np.asarray(
+            [u for u, _ in adds_res] + [u for u, _ in removes_res],
+            dtype=np.int32))
+        push_rows = self._apply_device(adds_res, removes_res, changed)
+        # commit the mirror
+        for e in rem_eff:
+            E.discard(e)
+        for e in adds_eff:
+            E.add(e)
+        for u, d in delta.items():
+            self._deg[u] += d
+        self._walk_live += len(adds_res) - len(removes_res)
+        self._push_used += push_rows
+        self.version = batch.version
+        if self.log.version < batch.version:      # externally-built batch
+            self.log.record(batch)
+        self.dg = dataclasses.replace(
+            self.dg, m=self._walk_live, edge_src=self._walk_src,
+            edge_dst=self._walk_dst, out_offsets=self._walk_off,
+            out_degree=self._walk_deg, in_neighbors=self._push_nbr,
+            in_mask=self._push_mask, in_weights=self._push_w,
+            in_row_map=self._push_rm)
+        return ApplyInfo(version=self.version, affected=affected,
+                         adds_applied=len(adds_res),
+                         removes_applied=len(removes_res),
+                         push_rows=push_rows, live_edges=self._walk_live)
+
+    def _apply_device(self, adds_res, removes_res, changed) -> int:
+        """Chunk the residency diff through the two delta ops. Everything
+        the device sees is padded to the fixed ``_APPLY_*`` caps, so steady
+        churn reuses two cached traces."""
+        n, W = self._graph.n, self.width
+        # pack added cells into <= W-wide virtual rows, grouped by dst row
+        by_dst: dict[int, list[int]] = {}
+        for u, v in adds_res:                     # cell (row v, source u)
+            by_dst.setdefault(v, []).append(u)
+        rows = []
+        for v in sorted(by_dst):
+            srcs = by_dst[v]
+            for lo in range(0, len(srcs), W):
+                rows.append((v, srcs[lo:lo + W]))
+        total_rows = len(rows)
+        # grow push capacity so every chunk's (cursor + _APPLY_ROWS) fits
+        cap = int(self._push_rm.shape[0])
+        need = self._push_used + total_rows + _APPLY_ROWS
+        if need > cap:
+            grow = _pow2_at_least(need, floor=cap)
+            self._push_nbr = jnp.pad(self._push_nbr,
+                                     ((0, grow - cap), (0, 0)))
+            self._push_mask = jnp.pad(self._push_mask,
+                                      ((0, grow - cap), (0, 0)))
+            self._push_rm = jnp.pad(self._push_rm, (0, grow - cap),
+                                    constant_values=n)
+        # grow walk capacity (tombstones are recycled each sort, so live +
+        # one padded add block is all a batch can need)
+        ecap = int(self._walk_src.shape[0])
+        eneed = self._walk_live + len(adds_res) + _APPLY_EDGES
+        if eneed > ecap:
+            egrow = _pow2_at_least(eneed, floor=ecap)
+            self._walk_src = jnp.pad(self._walk_src, (0, egrow - ecap),
+                                     constant_values=n)
+            self._walk_dst = jnp.pad(self._walk_dst, (0, egrow - ecap))
+            self._walk_alive = jnp.pad(self._walk_alive, (0, egrow - ecap))
+
+        deg_items = sorted(changed.items())
+        row_chunks = list(_chunks(rows, _APPLY_ROWS)) or [[]]
+        rem_chunks = list(_chunks(removes_res, _APPLY_EDGES)) or [[]]
+        deg_chunks = list(_chunks(deg_items, _APPLY_EDGES)) or [[]]
+        n_calls = max(len(row_chunks), len(rem_chunks), len(deg_chunks))
+        cursor = self._push_used
+        for i in range(n_calls):
+            rc = row_chunks[i] if i < len(row_chunks) else []
+            mc = rem_chunks[i] if i < len(rem_chunks) else []
+            dc = deg_chunks[i] if i < len(deg_chunks) else []
+            add_nbr = np.zeros((_APPLY_ROWS, W), np.int32)
+            add_mask = np.zeros((_APPLY_ROWS, W), bool)
+            add_rm = np.full(_APPLY_ROWS, n, np.int32)
+            for j, (v, srcs) in enumerate(rc):
+                add_nbr[j, :len(srcs)] = srcs
+                add_mask[j, :len(srcs)] = True
+                add_rm[j] = v
+            rem_src = np.full(_APPLY_EDGES, -1, np.int32)
+            rem_dst = np.full(_APPLY_EDGES, -1, np.int32)
+            for j, (u, v) in enumerate(mc):
+                rem_src[j], rem_dst[j] = u, v
+            deg_nodes = np.full(_APPLY_EDGES, n, np.int32)
+            deg_inv = np.zeros(_APPLY_EDGES, np.float32)
+            if dc:
+                nodes = np.asarray([u for u, _ in dc], np.int32)
+                degs = np.asarray([d for _, d in dc], np.int64)
+                deg_nodes[:len(dc)] = nodes
+                deg_inv[:len(dc)] = inverse_out_degree(degs)
+            (self._push_nbr, self._push_mask, self._push_w,
+             self._push_rm, self._inv_out) = push_delta_apply(
+                self._push_nbr, self._push_mask, self._push_rm,
+                self._inv_out, jnp.asarray(add_nbr), jnp.asarray(add_mask),
+                jnp.asarray(add_rm), jnp.asarray(rem_src),
+                jnp.asarray(rem_dst), jnp.asarray(deg_nodes),
+                jnp.asarray(deg_inv), jnp.int32(cursor))
+            cursor += len(rc)
+        # walk view: tombstone removals + append additions + device re-sort
+        add_chunks = list(_chunks(adds_res, _APPLY_EDGES)) or [[]]
+        n_calls = max(len(add_chunks), len(rem_chunks))
+        live = self._walk_live
+        for i in range(n_calls):
+            ac = add_chunks[i] if i < len(add_chunks) else []
+            mc = rem_chunks[i] if i < len(rem_chunks) else []
+            add_src = np.full(_APPLY_EDGES, n, np.int32)
+            add_dst = np.zeros(_APPLY_EDGES, np.int32)
+            add_alive = np.zeros(_APPLY_EDGES, bool)
+            for j, (u, v) in enumerate(ac):
+                add_src[j], add_dst[j], add_alive[j] = u, v, True
+            rem_src = np.full(_APPLY_EDGES, -1, np.int32)
+            rem_dst = np.full(_APPLY_EDGES, -1, np.int32)
+            for j, (u, v) in enumerate(mc):
+                rem_src[j], rem_dst[j] = u, v
+            (self._walk_src, self._walk_dst, self._walk_alive,
+             self._walk_off, self._walk_deg) = walk_delta_apply(
+                self._walk_src, self._walk_dst, self._walk_alive,
+                jnp.asarray(add_src), jnp.asarray(add_dst),
+                jnp.asarray(add_alive), jnp.asarray(rem_src),
+                jnp.asarray(rem_dst), jnp.int32(live), n=n)
+            live += len(ac) - len(mc)
+        return total_rows
+
+    # -- compaction --------------------------------------------------------
+    def compact(self) -> DeviceGraph:
+        """Re-slice from scratch at the current version and reclaim delta
+        capacity. Rebuilds through ``Graph.from_edges`` ->
+        ``DeviceGraph.from_graph`` with the construction-time layout args —
+        the identical code path a cold build takes, so the result is
+        bit-identical to ``DeviceGraph.from_graph(fresh_graph,
+        layout="sliced", ...)`` at the same version (the property
+        tests/test_dyn.py pins)."""
+        self._graph = self.graph()
+        dg = DeviceGraph.from_graph(self._graph, layout="sliced",
+                                    **self._build_args)
+        self._attach(dg)
+        return dg

@@ -15,6 +15,7 @@ from __future__ import annotations
 import time
 from collections.abc import Callable
 from dataclasses import dataclass, field
+from typing import Any
 
 import numpy as np
 
@@ -51,6 +52,17 @@ class ElasticController:
     rescale_events: list[dict] = field(default_factory=list)
     straggler_events: list[dict] = field(default_factory=list)
     occupancy_events: list[dict] = field(default_factory=list)
+    # structured metrics sink (repro.serving.metrics) — a PURE OBSERVER:
+    # every note_* hook mirrors its event row to the sink, nothing is read
+    # back, so attaching one cannot perturb a replay. None = detached.
+    # metrics_muted is flipped by the serving runtime around WAL-replayed
+    # events so a recovered run does not re-emit rows it already emitted.
+    metrics: Any = None
+    metrics_muted: bool = False
+
+    def _emit(self, kind: str, **fields: Any) -> None:
+        if self.metrics is not None and not self.metrics_muted:
+            self.metrics.emit(kind, **fields)
 
     def tick(self, step: int, stats: RuntimeStats | None = None,
              queries_left: int = 0, deadline_left: float = 0.0) -> bool:
@@ -77,6 +89,7 @@ class ElasticController:
                                     "extended": adm.extended,
                                     "feasible": adm.feasible}
         self.rescale_events.append(event)
+        self._emit("rescale", **event)
         if self.on_rescale is not None:
             self.on_rescale(len(self.allocator.healthy))
         return True
@@ -99,6 +112,7 @@ class ElasticController:
             {"step": None, "failed": list(silent),
              "missed_heartbeat": list(silent),
              "healthy": len(self.allocator.healthy)})
+        self._emit("rescale", **self.rescale_events[-1])
         if self.on_rescale is not None:
             self.on_rescale(len(self.allocator.healthy))
         return silent
@@ -111,6 +125,9 @@ class ElasticController:
         self.occupancy_events.append(
             {"t": float(t), "busy": int(busy), "lanes": int(lanes),
              "pending": int(pending)})
+        self._emit("occupancy", t=float(t), busy=int(busy), lanes=int(lanes),
+                   pending=int(pending),
+                   utilisation=float(busy) / lanes if lanes else 0.0)
 
     def note_stragglers(self, step: int, job_id: int, lanes: list[int],
                         makespan_before: float,
@@ -121,6 +138,9 @@ class ElasticController:
             {"step": step, "job": job_id, "lanes": list(lanes),
              "makespan_before": float(makespan_before),
              "makespan_after": float(makespan_after)})
+        self._emit("straggler", step=step, job=job_id, lanes=list(lanes),
+                   makespan_before=float(makespan_before),
+                   makespan_after=float(makespan_after))
 
 
 def run_with_straggler_mitigation(

@@ -80,13 +80,23 @@ class ResultCache:
     dropped) — the switch the cold-regression benchmark leg uses.
     """
 
-    def __init__(self, capacity: int, ttl: float | None = None):
+    def __init__(self, capacity: int, ttl: float | None = None, *,
+                 ttl_update_factor: float | None = None):
         if capacity < 0:
             raise ValueError("capacity must be >= 0")
         if ttl is not None and ttl <= 0:
             raise ValueError("ttl must be > 0 (or None)")
+        if ttl_update_factor is not None and ttl_update_factor <= 0:
+            raise ValueError("ttl_update_factor must be > 0 (or None)")
         self.capacity = capacity
         self.ttl = ttl
+        # TTL auto-tune (DESIGN.md §16): with a factor set, every observed
+        # graph update retunes ttl = factor x EWMA inter-update gap — a fast-
+        # churning graph shortens the freshness window, a quiet one relaxes
+        # it, with no constant to hand-pick
+        self.ttl_update_factor = ttl_update_factor
+        self._last_update: float | None = None
+        self._update_gap_ewma: float | None = None
         self._entries: OrderedDict[Hashable, CacheEntry] = OrderedDict()
         self.stats = CacheStats()
 
@@ -151,10 +161,53 @@ class ResultCache:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
 
+    # -- graph-update cadence (DESIGN.md §16) ------------------------------
+    def note_update(self, now: float) -> None:
+        """Observe a graph-update arrival at virtual time ``now``. Tracks an
+        EWMA of the inter-update gap; with ``ttl_update_factor`` set, the
+        TTL is retuned to ``factor x EWMA`` so entries outlive roughly that
+        many update periods. Deterministic (pure arithmetic on the virtual
+        clock) — safe on the WAL replay path."""
+        if self._last_update is not None:
+            gap = max(float(now) - self._last_update, 1e-9)
+            self._update_gap_ewma = gap if self._update_gap_ewma is None \
+                else 0.5 * self._update_gap_ewma + 0.5 * gap
+            if self.ttl_update_factor is not None:
+                self.ttl = self.ttl_update_factor * self._update_gap_ewma
+        self._last_update = float(now)
+
+    @property
+    def update_cadence(self) -> float | None:
+        """EWMA inter-update gap in virtual seconds (None before two
+        updates have been observed)."""
+        return self._update_gap_ewma
+
+    def cadence_state(self) -> dict:
+        """JSON-able cadence/TTL tuner state (snapshot leaf)."""
+        return {"ttl": self.ttl, "last_update": self._last_update,
+                "gap_ewma": self._update_gap_ewma}
+
+    def load_cadence_state(self, state: dict) -> None:
+        self.ttl = state.get("ttl")
+        self._last_update = state.get("last_update")
+        self._update_gap_ewma = state.get("gap_ewma")
+
     # -- reporting ---------------------------------------------------------
     @property
     def hit_rate(self) -> float:
         return self.stats.hit_rate
+
+    def source_heat(self) -> dict[int, float]:
+        """Per-source heat: hits + saved core-seconds summed over that
+        source's live entries (all epsilons/versions). The ranking signal
+        ``WalkIndex.refresh_hottest`` consumes — saved-cost dominates for
+        expensive sources, the hit count keeps cheap-but-hot sources above
+        never-hit ones."""
+        heat: dict[int, float] = {}
+        for key, e in self._entries.items():
+            src = key[0] if isinstance(key, tuple) and key else key
+            heat[src] = heat.get(src, 0.0) + e.hits + e.saved
+        return heat
 
     def top_keys(self, k: int = 10) -> list[tuple[Hashable, int, float]]:
         """The k hottest keys as (key, hits, core-seconds saved) — the

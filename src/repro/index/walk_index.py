@@ -150,6 +150,41 @@ class WalkIndex:
         return min(1.0, self.width / num_walks)
 
     # -- maintenance -------------------------------------------------------
+    def rebind(self, dg: Any, graph_version: int | None = None) -> None:
+        """Swap the bound CSR walk arrays for a mutated residency
+        (DESIGN.md §16): subsequent :meth:`refresh` draws walk the NEW
+        structure. Stored endpoints for un-retired rows keep serving — they
+        are fair draws on the PREVIOUS structure, the staleness the
+        incremental-invalidation protocol accepts between retire/refresh
+        passes (retire the affected sources to force live draws instead).
+        """
+        if dg.n != self.n:
+            raise ValueError(f"residency has n={dg.n}, index has n={self.n} "
+                             "— node additions need a rebuilt index")
+        self.graph_arrays = (dg.edge_dst, dg.out_offsets, dg.out_degree)
+        if graph_version is not None:
+            self.graph_version = int(graph_version)
+
+    def refresh_hottest(self, nodes: np.ndarray, budget: int,
+                        heat: dict | None = None) -> np.ndarray:
+        """Refresh up to ``budget`` of ``nodes``, hottest first — the
+        hit-accounting-driven incremental refresh (DESIGN.md §16): ``heat``
+        maps node -> score (``ResultCache.source_heat()``: per-source hits +
+        saved core-seconds), so the redraw budget goes to the sources whose
+        cached answers earn the most. Unranked nodes score 0 and tie-break
+        by node id (deterministic). Returns the refreshed nodes; the
+        remainder stays retired (live-draw fallback) until a later pass.
+        """
+        nodes = np.unique(np.asarray(nodes, dtype=np.int32))
+        if budget <= 0 or nodes.size == 0:
+            return np.zeros(0, np.int32)
+        heat = heat or {}
+        ranked = sorted(nodes.tolist(),
+                        key=lambda v: (-float(heat.get(int(v), 0.0)), v))
+        picked = np.asarray(ranked[:budget], dtype=np.int32)
+        self.refresh(picked)
+        return picked
+
     def retire(self, nodes: np.ndarray, budget: int = 0) -> None:
         """Lower the stored budget of ``nodes`` (staleness after an edge
         update touching them, or memory pressure): their lanes beyond

@@ -6,7 +6,10 @@ Call sites use these; the backend decision happens once at trace time.
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .ell_spmv import (ell_spmm_pallas, ell_spmm_sliced_pallas,
@@ -118,3 +121,94 @@ def embedding_bag(table, ids, weights, *, force: str | None = None):
         return embedding_bag_pallas(table, ids, weights,
                                     interpret=not _on_tpu())
     return ref.embedding_bag_ref(table, ids, weights)
+
+
+# ---------------------------------------------------------------------------
+# dynamic-graph delta application (DESIGN.md §16)
+#
+# Both ops below run entirely device-side: the host uploads only the small
+# per-batch delta arrays (padded to fixed caps so repeat batches hit the jit
+# cache) and the O(table) rewrite happens on device — the residency is never
+# re-uploaded between compactions. Free/padding slots carry the sentinel
+# row_map/src value ``n``: the sliced SpMM's segment fold drops ids >= n
+# (ref path: out-of-range segment ids are dropped; Pallas path: they land in
+# the (n+1)-row dump block), so spare capacity is numerically inert.
+
+
+@jax.jit
+def push_delta_apply(neighbors, mask, row_map, inv_out,
+                     add_nbr, add_mask, add_rm,
+                     rem_src, rem_dst, deg_nodes, deg_inv, cursor):
+    """Apply one edge-update batch to the sliced pull-form push table.
+
+    State (capacity C >= used rows, ascending ``row_map`` with sentinel-``n``
+    free rows at the tail): ``neighbors``/``mask`` (C, W), ``row_map`` (C,),
+    ``inv_out`` (n,) f32 = 1/max(deg_out, 1) per node. Delta (fixed caps):
+    ``add_*`` (A, W)/(A,) new virtual rows written at ``cursor`` (padding
+    rows: mask False, row_map n); ``rem_src``/``rem_dst`` (R,) removed edges
+    (padding -1, never matches); ``deg_nodes``/``deg_inv`` (R2,) scatter of
+    host-recomputed inverse out-degrees (padding index n, dropped).
+
+    Removals weight-zero their cells (mask off), additions append virtual
+    rows, then a stable re-sort by ``row_map`` restores the ascending
+    contract every sliced-SpMM consumer assumes, and the full weight table
+    is re-derived as ``inv_out[neighbors] * mask`` — the same gather-multiply
+    ``Graph.ell_in_sliced`` runs in numpy, so unchanged cells keep their
+    fresh-build bits exactly.
+    """
+    inv_out = inv_out.at[deg_nodes].set(deg_inv, mode="drop")
+
+    def drop_one(k, m):
+        hit = (row_map == rem_dst[k])[:, None] & (neighbors == rem_src[k])
+        return m & ~hit
+
+    mask = jax.lax.fori_loop(0, rem_src.shape[0], drop_one, mask)
+    neighbors = jax.lax.dynamic_update_slice(neighbors, add_nbr, (cursor, 0))
+    mask = jax.lax.dynamic_update_slice(mask, add_mask, (cursor, 0))
+    row_map = jax.lax.dynamic_update_slice(row_map, add_rm, (cursor,))
+    order = jnp.argsort(row_map, stable=True)
+    neighbors = neighbors[order]
+    mask = mask[order]
+    row_map = row_map[order]
+    weights = inv_out[neighbors] * mask
+    return neighbors, mask, weights, row_map, inv_out
+
+
+@partial(jax.jit, static_argnames=("n",))
+def walk_delta_apply(edge_src, edge_dst, alive,
+                     add_src, add_dst, add_alive,
+                     rem_src, rem_dst, cursor, *, n: int):
+    """Apply one edge-update batch to the CSR walk view, device-side.
+
+    State (capacity E >= live edges): ``edge_src``/``edge_dst`` (E,) int32
+    with an ``alive`` (E,) mask — removed edges are tombstoned in place,
+    additions written at ``cursor`` (padding slots: src n, alive False).
+    A two-pass stable argsort (by dst, then by src-with-dead-keyed-to-``n``)
+    re-groups the LIVE edges exactly as ``Graph.from_edges`` lays them out:
+    grouped by source, destination-ascending within each group, dead and
+    spare slots pushed past the live prefix. Because the live (src, dst)
+    pairs are duplicate-free, that order is unique — the live prefix of
+    ``edge_dst`` is bit-identical to a fresh host build, so uniform
+    out-neighbor sampling (``edge_dst[offsets[v] + u % deg(v)]``) draws the
+    SAME walks a rebuilt-from-scratch graph would.
+
+    Returns (edge_src, edge_dst, alive, out_offsets (n+1,), out_degree (n,)).
+    """
+    hit = ((edge_src[:, None] == rem_src[None, :]) &
+           (edge_dst[:, None] == rem_dst[None, :]))
+    alive = alive & ~hit.any(axis=1)
+    edge_src = jax.lax.dynamic_update_slice(edge_src, add_src, (cursor,))
+    edge_dst = jax.lax.dynamic_update_slice(edge_dst, add_dst, (cursor,))
+    alive = jax.lax.dynamic_update_slice(alive, add_alive, (cursor,))
+    key_src = jnp.where(alive, edge_src, n)
+    o1 = jnp.argsort(edge_dst, stable=True)
+    o2 = jnp.argsort(key_src[o1], stable=True)
+    order = o1[o2]
+    edge_src = edge_src[order]
+    edge_dst = edge_dst[order]
+    alive = alive[order]
+    out_degree = jnp.zeros((n,), jnp.int32).at[edge_src].add(
+        alive.astype(jnp.int32), mode="drop")
+    out_offsets = jnp.zeros((n + 1,), jnp.int32).at[1:].set(
+        jnp.cumsum(out_degree))
+    return edge_src, edge_dst, alive, out_offsets, out_degree

@@ -196,11 +196,14 @@ def _build_daemon_runtime(args):
         from ..index import ResultCache
 
         cache = ResultCache(capacity=args.cache_size,
-                            ttl=args.cache_ttl or None)
+                            ttl=args.cache_ttl or None,
+                            ttl_update_factor=args.cache_ttl_factor or None)
     factory = _daemon_factory(args)
     heartbeat = _daemon_heartbeat(args, args.max_cores)
+    from ..serving.metrics import open_sink
     controller = ElasticController(allocator=pool.allocator,
-                                   heartbeat=heartbeat)
+                                   heartbeat=heartbeat,
+                                   metrics=open_sink(args.metrics))
     # an active tuning cache seeds the cost model's walk share from measured
     # kernel device times (DESIGN.md §15); cold cache -> the default model
     from ..core.estimator import CacheAwareCostModel
@@ -214,7 +217,47 @@ def _build_daemon_runtime(args):
         rt.attach_wal(WriteAheadLog(args.wal_dir),
                       snapshot_every=args.snapshot_every,
                       compact_keep=args.wal_compact_keep)
+    if args.mutation_rate > 0:
+        _wire_mutations(args, rt)
     return rt, factory, heartbeat
+
+
+def _wire_mutations(args, rt) -> None:
+    """Attach the streaming-update arm (DESIGN.md §16): seeded mutation
+    arrivals as heap events, WAL-logged and replay-deterministic. For the
+    PPR workload the events apply REAL delta batches to a
+    :class:`repro.dyn.DynamicGraph` over the serving dataset — at the
+    event-loop boundary, which IS the engine's safe step boundary (no
+    device step is ever in flight between heap events) — and the affected
+    sets flow from the actual residency diff; the sim workloads model the
+    affected-set sizes instead. ``rt.graph_version`` then advances from the
+    mutation log, not from the static ``--graph-version`` flag."""
+    graph_n = 0
+    on_mutate = None
+    if args.workload == "ppr":
+        from ..dyn import DynamicGraph, MutationLog
+        from ..ppr import load
+
+        graph = load(args.dataset, scale=args.scale)
+        dyn = DynamicGraph(graph, base_version=args.graph_version)
+        mlog = MutationLog.seeded(graph, args.mutations,
+                                  seed=args.seed + 1,
+                                  batch_edges=args.mutation_edges,
+                                  base_version=args.graph_version)
+        graph_n = graph.n
+
+        def on_mutate(ordinal: int, t: float):
+            return dyn.apply(mlog[ordinal])
+
+        rt.dynamic_graph = dyn        # operator/debug handle
+    else:
+        graph_n = args.queries        # sim: model the structure size
+    rt.schedule_mutations(args.mutations, args.mutation_rate,
+                          seed=args.seed + 1, graph_n=graph_n,
+                          affected_frac=args.affected_frac,
+                          refresh_budget=args.refresh_budget,
+                          node_cost=args.step_time,
+                          on_mutate=on_mutate)
 
 
 def _lint_self(rules: tuple[str, ...] = ("replay-determinism",)):
@@ -234,7 +277,8 @@ def _lint_self(rules: tuple[str, ...] = ("replay-determinism",)):
         sys.path.insert(0, str(repo_root))
     from tools.analysis import run_analysis
 
-    paths = [str(pkg_root / d) for d in ("serving", "ft", "checkpoint")
+    paths = [str(pkg_root / d) for d in ("serving", "ft", "checkpoint",
+                                         "dyn")
              if (pkg_root / d).is_dir()]
     report = run_analysis(paths, rules=list(rules), root=repo_root)
     return report.findings
@@ -297,6 +341,8 @@ def serve_daemon(args) -> None:
         heartbeat = _daemon_heartbeat(args, args.max_cores)
         rt, info = ServingRuntime.recover(args.wal_dir, factory,
                                           heartbeat=heartbeat)
+        from ..serving.metrics import open_sink
+        rt.controller.metrics = open_sink(args.metrics)
         src = (f"recovered from {args.wal_dir} (snapshot step "
                f"{info.snapshot_step}, {info.replayed_events} of "
                f"{info.logged_events} logged events to replay)")
@@ -352,7 +398,24 @@ def serve_daemon(args) -> None:
         print(f"  cache              : {len(cache)} entries "
               f"hit_rate={cache.hit_rate:.3f} "
               f"saved_core_s={cache.stats.saved_cost:.1f}")
+        if cache.update_cadence is not None:
+            print(f"  update cadence     : {cache.update_cadence:.3f}s "
+                  f"(auto-TTL={cache.ttl})")
+    if rt.mutations_applied:
+        ratio = (100.0 * rt.refresh_core_s / rt.rebuild_core_s
+                 if rt.rebuild_core_s else 0.0)
+        print(f"  mutations          : {rt.mutations_applied} applied "
+              f"(graph v{rt.graph_version}) "
+              f"pending_refresh={rt.pending_refresh} "
+              f"refresh/rebuild core-s={ratio:.1f}%")
     _print_occupancy(rt)
+    metrics = getattr(rt.controller, "metrics", None)
+    if metrics is not None:
+        rows = getattr(metrics, "rows_emitted", None)
+        if rows:
+            print(f"  metrics            : {rows} rows -> "
+                  f"{getattr(metrics, 'path', 'stdout')}")
+        metrics.close()
     if args.record_trace:
         records = rt.trace_records()
         with open(args.record_trace, "w") as f:
@@ -434,8 +497,33 @@ def build_parser() -> argparse.ArgumentParser:
                     help="daemon: result-cache TTL in virtual seconds "
                          "(0 = no expiry)")
     ap.add_argument("--graph-version", type=int, default=0,
-                    help="structure snapshot tag for cache keys — bump on "
-                         "graph updates to cold-start the cache")
+                    help="BASE structure version for cache keys; with "
+                         "--mutation-rate the live version advances from "
+                         "the mutation log instead of this static tag")
+    ap.add_argument("--mutation-rate", type=float, default=0.0,
+                    help="daemon: streaming edge-update arrival rate "
+                         "(batches/second, DESIGN.md §16); 0 = static "
+                         "graph. PPR workload applies real device-side "
+                         "delta batches; sim workloads model the churn")
+    ap.add_argument("--mutations", type=int, default=8,
+                    help="daemon: number of mutation batches to stream")
+    ap.add_argument("--mutation-edges", type=int, default=8,
+                    help="daemon: edges added/removed per mutation batch")
+    ap.add_argument("--affected-frac", type=float, default=0.05,
+                    help="daemon: modelled affected-source fraction per "
+                         "batch for sim workloads (PPR uses the real "
+                         "residency diff)")
+    ap.add_argument("--refresh-budget", type=int, default=0,
+                    help="daemon: walk-index rows refreshed per mutation "
+                         "batch, hottest first (0 = refresh everything "
+                         "immediately)")
+    ap.add_argument("--cache-ttl-factor", type=float, default=0.0,
+                    help="daemon: auto-tune the cache TTL to this multiple "
+                         "of the observed update cadence (0 = static TTL)")
+    ap.add_argument("--metrics", default="", metavar="PATH",
+                    help="daemon: structured metrics sink (DESIGN.md §16) "
+                         "— JSONL rows of occupancy/cache/mutation/"
+                         "straggler telemetry; '-' = stdout, empty = off")
     ap.add_argument("--wal-dir", default="",
                     help="daemon: write-ahead log directory (DESIGN.md "
                          "§12) — every input and event is logged so a "

@@ -49,6 +49,15 @@ def _round_up(v: int, multiple: int) -> int:
     return max(multiple, ((v + multiple - 1) // multiple) * multiple)
 
 
+def inverse_out_degree(out_degree: np.ndarray) -> np.ndarray:
+    """FORA's spread factor 1/max(deg_out, 1) as float32 — the ONE weight
+    formula shared by the fresh residency builders (``ell_in`` /
+    ``ell_in_sliced``) and the dynamic-graph delta path (``repro.dyn``).
+    Both must produce the same bits per node or apply-then-compact stops
+    being an identity (DESIGN.md §16)."""
+    return 1.0 / np.maximum(out_degree, 1).astype(np.float32)
+
+
 def _default_pad_multiple() -> int:
     """Lane-alignment floor for the sliced push table: a real TPU chunks the
     lane axis in 128s (DESIGN.md §8), so widths below 128 only add fold
@@ -196,7 +205,7 @@ class Graph:
         pos = np.arange(self.m, dtype=np.int64) - off[dst_s]
         neighbors[dst_s, pos] = src_s
         mask[dst_s, pos] = True
-        inv_deg = 1.0 / np.maximum(self.out_degree, 1).astype(np.float32)
+        inv_deg = inverse_out_degree(self.out_degree)
         weights = inv_deg[neighbors] * mask
         return neighbors, mask, weights.astype(np.float32)
 
@@ -288,7 +297,7 @@ class Graph:
         mask = np.zeros((n_virtual, W), dtype=bool)
         neighbors[vrow, vpos] = src_s
         mask[vrow, vpos] = True
-        inv_deg = 1.0 / np.maximum(self.out_degree, 1).astype(np.float32)
+        inv_deg = inverse_out_degree(self.out_degree)
         weights = (inv_deg[neighbors] * mask).astype(np.float32)
         return SlicedEll(neighbors=neighbors, mask=mask, weights=weights,
                          row_map=row_map, width=W, n=self.n)

@@ -10,6 +10,7 @@ Public API:
     SimLaneEngine, LaneTask          virtual-time lane pool (engine mode)
     run_single_job                   one-shot path (dna_real, bit-for-bit)
     WriteAheadLog, RecoveryInfo      durable serving state (DESIGN.md §12)
+    MetricsSink, open_sink, ...      structured metrics sinks (DESIGN.md §16)
 
 The device-side continuous-batching engine (``QueryEngine``) lives in
 :mod:`repro.serving.engine`; import it from there — it pulls in jax, which
@@ -18,13 +19,16 @@ the event-loop modules above deliberately do not.
 
 from .job import Job, JobRecord, JobState
 from .lanes import LaneTask, SimLaneEngine
+from .metrics import (JsonlSink, MetricsSink, NullSink, StdoutSink,
+                      open_sink)
 from .pool import CorePool, LaneLedger
 from .runtime import (ServingConfig, ServingReport, ServingRuntime,
                       SimJobExecutor, run_single_job)
 from .wal import RecoveryInfo, WriteAheadLog
 
 __all__ = [
-    "CorePool", "Job", "JobRecord", "JobState", "LaneLedger", "LaneTask",
-    "RecoveryInfo", "ServingConfig", "ServingReport", "ServingRuntime",
-    "SimJobExecutor", "SimLaneEngine", "WriteAheadLog", "run_single_job",
+    "CorePool", "Job", "JobRecord", "JobState", "JsonlSink", "LaneLedger",
+    "LaneTask", "MetricsSink", "NullSink", "RecoveryInfo", "ServingConfig",
+    "ServingReport", "ServingRuntime", "SimJobExecutor", "SimLaneEngine",
+    "StdoutSink", "WriteAheadLog", "open_sink", "run_single_job",
 ]

@@ -252,6 +252,20 @@ class ServingRuntime:
         self.model = cost_model or CacheAwareCostModel(
             index_coverage=config.index_coverage)
         self.clock = 0.0
+        # live structure version (DESIGN.md §16): seeded from the config but
+        # MUTABLE — each applied mutation batch bumps it, so cache keys made
+        # after an update stop matching pre-update answers without any sweep
+        self.graph_version = config.graph_version
+        # mutation stream state (schedule_mutations): per-ordinal batch
+        # descriptors plus the refresh-vs-rebuild core-second ledgers the
+        # churn bench gates on
+        self._mutation_batches: list[dict] = []
+        self._mutation_cfg: dict | None = None
+        self._on_mutate: Callable[[int, float], Any] | None = None
+        self.mutations_applied = 0
+        self.pending_refresh = 0
+        self.refresh_core_s = 0.0
+        self.rebuild_core_s = 0.0
         self.jobs: list[Job] = []
         self._heap: list[tuple[float, int, str, Any]] = []
         self._seq = 0
@@ -306,7 +320,8 @@ class ServingRuntime:
             cache = None
             if self.cache is not None:
                 cache = {"capacity": self.cache.capacity,
-                         "ttl": self.cache.ttl}
+                         "ttl": self.cache.ttl,
+                         "ttl_update_factor": self.cache.ttl_update_factor}
             wal.append({
                 "type": "init",
                 "config": asdict(self.cfg),
@@ -433,6 +448,59 @@ class ServingRuntime:
         for t in times:
             self._push(t, "slow", float(schedule[t]))
 
+    def schedule_mutations(self, num: int, rate: float, *, seed: int = 0,
+                           graph_n: int = 0, affected_frac: float = 0.05,
+                           refresh_budget: int = 0, node_cost: float = 0.0,
+                           on_mutate: Callable[[int, float], Any] | None
+                           = None) -> list[dict]:
+        """Schedule a seeded stream of graph-update arrivals (DESIGN.md §16):
+        ``num`` mutation batches with exponential inter-arrival gaps at
+        ``rate`` batches/second. Each fired batch bumps ``graph_version``
+        (cache keys roll over), notes the update cadence to the cache's TTL
+        tuner, and books the incremental-invalidation accounting: a batch
+        touches ``~affected_frac * graph_n`` sources, of which up to
+        ``refresh_budget`` are refreshed immediately (the rest join the
+        ``pending_refresh`` backlog); ``node_cost`` core-seconds per
+        refreshed node accrue to ``refresh_core_s`` while the counterfactual
+        full rebuild (every node) accrues to ``rebuild_core_s`` — the
+        refresh-vs-rebuild ratio the churn bench gates.
+
+        ``on_mutate(ordinal, t)`` is the daemon's hook to apply a REAL
+        :class:`repro.dyn.DynamicGraph` batch (returning its ``ApplyInfo``
+        overrides the simulated affected count). The hook is NOT recovered
+        from the WAL — recovery replays the simulated accounting only, and
+        a daemon re-attaches its own hook after :meth:`recover` — so it
+        must not influence event ordering.
+
+        The full spec is one WAL ``mutations`` input record; batch times
+        and affected counts are drawn HERE (seeded), so recovery's
+        re-dispatch reproduces the identical event stream.
+        """
+        if num < 0 or (num > 0 and rate <= 0):
+            raise ValueError("num >= 0 and rate > 0 required")
+        if self._mutation_cfg is not None:
+            raise ValueError("mutation stream already scheduled")
+        if self.wal is not None and not self._mute_wal:
+            self.wal.append({"type": "mutations", "num": int(num),
+                             "rate": float(rate), "seed": int(seed),
+                             "graph_n": int(graph_n),
+                             "affected_frac": float(affected_frac),
+                             "refresh_budget": int(refresh_budget),
+                             "node_cost": float(node_cost)})
+        self._mutation_cfg = {"graph_n": int(graph_n),
+                              "refresh_budget": int(refresh_budget),
+                              "node_cost": float(node_cost)}
+        self._on_mutate = on_mutate
+        rng = np.random.default_rng(seed)
+        t = 0.0
+        mean_affected = max(1.0, affected_frac * graph_n)
+        for ordinal in range(num):
+            t += float(rng.exponential(1.0 / rate))
+            affected = int(1 + rng.poisson(mean_affected - 1.0))
+            self._mutation_batches.append({"at": t, "affected": affected})
+            self._push(t, "mutate", ordinal)
+        return list(self._mutation_batches)
+
     # -- event loop --------------------------------------------------------
     def _push(self, t: float, kind: str, payload: Any) -> None:
         heapq.heappush(self._heap, (t, self._seq, kind, payload))
@@ -480,6 +548,8 @@ class ServingRuntime:
                 self._handle_failure(payload, self.clock)
             elif kind == "slow":
                 self._handle_slowdown(payload, self.clock)
+            elif kind == "mutate":
+                self._handle_mutation(payload, t)
             if self.controller.heartbeat is not None:
                 self._poll_heartbeat(self.clock)
             self._maybe_snapshot()
@@ -503,7 +573,7 @@ class ServingRuntime:
             # a list, not a tuple: the logged tag round-trips through JSON
             # and replay compares the deserialised value
             return [int(x) for x in payload]
-        if kind == "fail":
+        if kind in ("fail", "mutate"):
             return int(payload)
         if kind == "slow":
             return float(payload)
@@ -528,6 +598,7 @@ class ServingRuntime:
             self._in_replay = False
             self.wal.append({"type": "event", "n": self.events_processed,
                              "t": t, "kind": kind, "tag": tag})
+        self.controller.metrics_muted = self._in_replay
 
     def _maybe_snapshot(self) -> None:
         if (self.wal is None or self._snapshot_every <= 0 or self._in_replay
@@ -678,6 +749,11 @@ class ServingRuntime:
             "model": {"ewma": self.model._ewma},
             "pre_core_s": self.pre_core_s,
             "compile_billed": self._compile_billed,
+            "graph_version": self.graph_version,
+            "mutation": {"applied": self.mutations_applied,
+                         "pending_refresh": self.pending_refresh,
+                         "refresh_core_s": self.refresh_core_s,
+                         "rebuild_core_s": self.rebuild_core_s},
             "controller": {
                 "rescale_events": list(self.controller.rescale_events),
                 "straggler_events": list(self.controller.straggler_events),
@@ -690,7 +766,8 @@ class ServingRuntime:
             state["cache"] = {
                 "entries": [[list(k), e.cost, e.created, e.hits]
                             for k, e in self.cache._entries.items()],
-                "stats": asdict(self.cache.stats)}
+                "stats": asdict(self.cache.stats),
+                "cadence": self.cache.cadence_state()}
         return state
 
     def _load_state(self, state: dict) -> None:
@@ -723,6 +800,14 @@ class ServingRuntime:
         # .get: snapshots from before the cold-start accounting load cleanly
         self.pre_core_s = float(state.get("pre_core_s", 0.0))
         self._compile_billed = bool(state.get("compile_billed", False))
+        self.graph_version = int(state.get("graph_version",
+                                           self.cfg.graph_version))
+        mut = state.get("mutation")
+        if mut is not None:
+            self.mutations_applied = int(mut["applied"])
+            self.pending_refresh = int(mut["pending_refresh"])
+            self.refresh_core_s = float(mut["refresh_core_s"])
+            self.rebuild_core_s = float(mut["rebuild_core_s"])
         self.controller.rescale_events[:] = state["controller"][
             "rescale_events"]
         self.controller.straggler_events[:] = state["controller"][
@@ -739,6 +824,8 @@ class ServingRuntime:
                     value=None, cost=float(cost), created=float(created),
                     hits=int(hits))
             self.cache.stats = CacheStats(**state["cache"]["stats"])
+            if "cadence" in state["cache"]:
+                self.cache.load_cadence_state(state["cache"]["cadence"])
 
     # -- recovery -----------------------------------------------------------
     @classmethod
@@ -772,8 +859,9 @@ class ServingRuntime:
                            float(p["spares_fraction"]))
         cache = None
         if init.get("cache") is not None:
-            cache = ResultCache(int(init["cache"]["capacity"]),
-                                init["cache"]["ttl"])
+            cache = ResultCache(
+                int(init["cache"]["capacity"]), init["cache"]["ttl"],
+                ttl_update_factor=init["cache"].get("ttl_update_factor"))
         m = init["model"]
         model = CacheAwareCostModel(decay=m["decay"],
                                     max_trust=m["max_trust"],
@@ -803,6 +891,16 @@ class ServingRuntime:
                 elif rec["type"] == "slowdown":
                     rt.schedule_slowdowns(
                         {float(t): float(f) for t, f in rec["schedule"]})
+                elif rec["type"] == "mutations":
+                    # sim-accounting only: the daemon re-attaches its own
+                    # on_mutate hook after recover() returns
+                    rt.schedule_mutations(
+                        int(rec["num"]), float(rec["rate"]),
+                        seed=int(rec["seed"]),
+                        graph_n=int(rec["graph_n"]),
+                        affected_frac=float(rec["affected_frac"]),
+                        refresh_budget=int(rec["refresh_budget"]),
+                        node_cost=float(rec["node_cost"]))
         finally:
             rt._mute_wal = False
         events = [r for r in records if r["type"] == "event"]
@@ -904,7 +1002,7 @@ class ServingRuntime:
                 return None
             src = int(workload.source_of(qid))
         eps = getattr(getattr(job.executor, "params", None), "epsilon", None)
-        return ResultCache.make_key(src, eps, self.cfg.graph_version)
+        return ResultCache.make_key(src, eps, self.graph_version)
 
     def _cache_probe(self, job: Job, now: float, *,
                      count: bool) -> tuple[list[int], list[int]]:
@@ -1549,6 +1647,44 @@ class ServingRuntime:
             slowed += 1
             job.log.append(f"t={now:.3f} lanes slowed x{factor}")
         self._wal_note("slowdown_fired", factor=factor, jobs=slowed)
+
+    # -- graph mutations (DESIGN.md §16) ------------------------------------
+    def _handle_mutation(self, ordinal: int, t: float) -> None:
+        """One scheduled mutation batch fires: bump the live
+        ``graph_version`` (cache keys made from now on stop matching
+        pre-update answers — the §11 staleness rule, no sweep), apply the
+        real delta through the daemon's ``on_mutate`` hook when attached,
+        note the cadence to the cache's TTL tuner, and book the
+        incremental-refresh vs full-rebuild core-second ledgers."""
+        batch = self._mutation_batches[ordinal]
+        cfg = self._mutation_cfg
+        now = self.clock
+        self.graph_version += 1
+        affected = int(batch["affected"])
+        if self._on_mutate is not None:
+            info = self._on_mutate(ordinal, now)
+            if info is not None and hasattr(info, "affected"):
+                affected = int(np.asarray(info.affected).size)
+        if self.cache is not None:
+            self.cache.note_update(now)
+        budget = cfg["refresh_budget"]
+        refreshed = affected if budget <= 0 else min(affected, budget)
+        self.pending_refresh += affected - refreshed
+        self.refresh_core_s += cfg["node_cost"] * refreshed
+        self.rebuild_core_s += cfg["node_cost"] * cfg["graph_n"]
+        self.mutations_applied += 1
+        self._wal_note("mutation", ordinal=ordinal,
+                       version=self.graph_version, affected=affected,
+                       refreshed=refreshed, pending=self.pending_refresh)
+        self.controller._emit(
+            "mutation", t=now, ordinal=ordinal, version=self.graph_version,
+            affected=affected, refreshed=refreshed,
+            pending_refresh=self.pending_refresh,
+            apply_lag=now - batch["at"])
+        if self.cache is not None:
+            self.controller._emit(
+                "cache", t=now, hit_rate=self.cache.hit_rate,
+                size=len(self.cache), ttl=self.cache.ttl)
 
     def _poll_heartbeat(self, now: float) -> None:
         """Per-event liveness sweep when a HeartbeatMonitor is attached

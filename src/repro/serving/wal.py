@@ -3,9 +3,10 @@
 
 The serving loop is virtual-time and fully seeded, so its entire execution
 is a *deterministic function of its inputs*: the config/pool/cache shape,
-the submitted jobs, and the injected failure/slowdown schedules. The WAL
-records exactly those inputs (``init``/``submit``/``inject``/``slowdown``
-records), plus one ``event`` record per processed heap event — so recovery
+the submitted jobs, the injected failure/slowdown schedules, and the seeded
+mutation stream. The WAL records exactly those inputs (``init``/``submit``/
+``inject``/``slowdown``/``mutations`` records), plus one ``event`` record
+per processed heap event — so recovery
 is deterministic *re-execution*: rebuild the runtime from the inputs,
 replay to the crash position, and verify every replayed event against the
 log (a divergence means the replay is not the run that crashed, and raises
@@ -79,8 +80,8 @@ class WriteAheadLog:
         Retains the newest ``keep`` *restorable* snapshots (manifest present
         on disk); the oldest retained step becomes the cover point: event
         records at or before it are dropped, input records (init/submit/
-        inject/slowdown) are always kept (recovery rebuilds the runtime from
-        them), and a ``compact`` marker records how far the prefix was
+        inject/slowdown/mutations) are always kept (recovery rebuilds the
+        runtime from them), and a ``compact`` marker records how far the prefix was
         truncated so recovery can refuse a replay-from-zero it can no longer
         perform. The rewrite is atomic (tmp + rename, same as checkpoint
         dirs); snapshot directories are deleted only *after* the shortened
@@ -121,7 +122,7 @@ class WriteAheadLog:
                              "v": WAL_VERSION})
             elif t == "compact":
                 continue                      # superseded by the new marker
-            elif t in ("submit", "inject", "slowdown"):
+            elif t in ("submit", "inject", "slowdown", "mutations"):
                 kept.append(r)
             elif t == "snapshot":
                 if int(r["step"]) in retained:

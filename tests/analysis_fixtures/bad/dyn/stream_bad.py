@@ -1,0 +1,27 @@
+"""Bad fixture: unseeded entropy and hash-order in a ``dyn/`` module path
+(replay-determinism must flag every construct — a mutation stream that
+recovery cannot replay is a corrupt graph after every crash)."""
+
+import time
+
+import numpy as np
+
+
+def stream(num, rate):
+    rng = np.random.default_rng()            # unseeded: OS entropy
+    out = []
+    for _ in range(num):
+        out.append(rng.exponential(1.0 / rate))
+    return out
+
+
+def stamp_batch(batch):
+    batch["applied_at"] = time.time()        # wall clock in replayed record
+    return batch
+
+
+def affected_sources(edges: set):
+    out = []
+    for u, v in edges:                       # set iteration order
+        out.append(u)
+    return out + list({1, 2})                # list(set) materializes order

@@ -1,0 +1,22 @@
+"""Bad fixture: delta application that host-syncs under the traced root —
+host-sync must flag each construct. The ``repro.dyn`` apply path promises
+zero device->host transfers between compaction points; every line here
+breaks that promise."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _count_live(mask):
+    return mask.sum().item()             # device->host sync in traced callee
+
+
+@jax.jit
+def delta_apply(neighbors, mask, row_map, add_rm, cursor):
+    row_map = jax.lax.dynamic_update_slice(row_map, add_rm, (cursor,))
+    print("rows:", row_map)              # prints a tracer, syncs every call
+    host_rm = np.asarray(row_map)        # silent device_get mid-trace
+    order = jnp.argsort(row_map, stable=True)
+    live = _count_live(mask)
+    return neighbors[order] * live + host_rm[0] + float(row_map[0])

@@ -1,0 +1,22 @@
+"""Good fixture: a seeded mutation stream in a ``dyn/`` module path —
+replay-determinism must stay quiet. Pins the DESIGN.md §16 contract: batch
+times and contents are functions of the logged seed, set mirrors are only
+iterated through ``sorted``, and membership tests are free."""
+
+import numpy as np
+
+
+def seeded_stream(num, rate, seed):
+    rng = np.random.default_rng(seed)        # seeded: WAL-replayable
+    t, batches = 0.0, []
+    for _ in range(num):
+        t += float(rng.exponential(1.0 / rate))
+        batches.append(t)
+    return batches
+
+
+def diff_mirror(live: set, adds, removes):
+    eff_adds = sorted(e for e in adds if e not in live)      # membership ok
+    eff_rem = sorted(e for e in removes if e in live)
+    affected = sorted({u for u, _ in eff_adds + eff_rem})    # order-free sum
+    return eff_adds, eff_rem, affected, len(live)

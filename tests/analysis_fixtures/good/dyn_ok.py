@@ -1,0 +1,34 @@
+"""Good fixture: device-side delta application (DESIGN.md §16) with every
+host sync OUTSIDE the traced root — host-sync must stay quiet.
+
+Pins the ``repro.dyn`` contract: batch normalisation and packing happen in
+host numpy BEFORE the jitted apply; the apply itself is pure scatter/
+dynamic_update_slice/argsort on device values; reading results back happens
+in an un-traced readout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_batch(pairs, cap):
+    """Host-side packing: plain numpy on host inputs, no tracers here."""
+    arr = np.asarray(pairs, dtype=np.int32).reshape(-1, 2)
+    out = np.full((cap, 2), -1, dtype=np.int32)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+@jax.jit
+def delta_apply(neighbors, mask, row_map, add_rm, cursor):
+    """Traced delta apply: append + stable re-sort, no host round-trips."""
+    row_map = jax.lax.dynamic_update_slice(row_map, add_rm, (cursor,))
+    order = jnp.argsort(row_map, stable=True)
+    return neighbors[order], mask[order], row_map[order]
+
+
+def apply_and_read(neighbors, mask, row_map, pairs):
+    # not reachable from any jit root: the sanctioned readout boundary
+    add_rm = jnp.asarray(pack_batch(pairs, 8)[:, 1])
+    nbr, msk, rm = delta_apply(neighbors, mask, row_map, add_rm, 0)
+    return np.asarray(jax.device_get(rm)), nbr, msk

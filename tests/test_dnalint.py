@@ -47,8 +47,10 @@ def test_good_fixtures_are_clean():
     ("host-sync", "bad/sync_bad.py", 4),
     ("host-sync", "bad/engine_bad.py", 3),
     ("host-sync", "bad/autotune_bad.py", 4),
+    ("host-sync", "bad/dyn_bad.py", 4),
     ("prng-discipline", "bad/prng_bad.py", 5),
     ("replay-determinism", "bad/serving/clock.py", 6),
+    ("replay-determinism", "bad/dyn/stream_bad.py", 4),
     ("pool-accounting", "bad/pool_bad.py", 3),
     ("kernel-registration", "bad/kernels", 2),
 ])

@@ -1,0 +1,490 @@
+"""Dynamic-graph subsystem (DESIGN.md §16): seeded WAL-loggable mutation
+batches, device-side delta application whose walk view stays bit-identical
+to a fresh build, compaction bit-identical to rebuilding from scratch,
+incremental invalidation (retire / hit-ranked refresh + cache-TTL
+auto-tuning), structured metrics sinks, and the serving integration's
+replay-deterministic mutation stream."""
+
+from __future__ import annotations
+
+import json
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.dyn import DynamicGraph, EdgeBatch, MutationLog
+from repro.index import ResultCache, WalkIndex
+from repro.ppr import DeviceGraph, ForaParams, Graph, fora_fused
+from repro.ppr.forward_push import forward_push
+from repro.serving import (CorePool, MetricsSink, NullSink, ServingConfig,
+                           ServingRuntime, SimJobExecutor, StdoutSink,
+                           WriteAheadLog, open_sink)
+from repro.serving.metrics import JsonlSink
+
+N, W = 30, 8
+BUILD = dict(width=W, pad_multiple=8)
+
+
+def _graph(n=N, m=120, seed=0):
+    rng = np.random.default_rng(seed)
+    pairs = rng.integers(0, n, size=(m, 2))
+    keep = pairs[:, 0] != pairs[:, 1]
+    return Graph.from_edges(n, pairs[keep, 0], pairs[keep, 1], directed=True)
+
+
+def _fresh(dyn):
+    """The from-scratch residency at dyn's CURRENT version — the compaction
+    identity target (same layout args the DynamicGraph was built with)."""
+    return DeviceGraph.from_graph(dyn.graph(), layout="sliced", **BUILD)
+
+
+def _assert_dg_identical(a, b):
+    assert a.n == b.n and a.m == b.m and a.ell_width == b.ell_width
+    for f in ("edge_src", "edge_dst", "out_offsets", "out_degree",
+              "in_neighbors", "in_mask", "in_weights", "in_row_map"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+def _push_pi(dg, sources=(0, 3, 7)):
+    import jax.numpy as jnp
+
+    seeds = jnp.zeros((len(sources), dg.n), jnp.float32)
+    seeds = seeds.at[jnp.arange(len(sources)),
+                     jnp.asarray(sources)].set(1.0)
+    res = forward_push(dg.in_neighbors, dg.in_mask, dg.in_weights,
+                       dg.out_degree, seeds, alpha=0.2, rmax=1e-3, n=dg.n,
+                       row_map=dg.in_row_map)
+    return np.asarray(res.pi)
+
+
+# ---------------------------------------------------------------------------
+# MutationLog: records, monotone versions, seeded determinism
+
+
+def test_edge_batch_and_log_record_roundtrip():
+    log = MutationLog(base_version=3)
+    b1 = log.append(adds=[(0, 1), (2, 3)], removes=[(4, 5)])
+    b2 = log.append(removes=[(0, 1)])
+    assert (b1.version, b2.version) == (4, 5)
+    assert b1.size == 3 and log.version == 5
+    back = MutationLog.from_records(log.to_records(), base_version=3)
+    assert len(back) == 2 and back.version == 5
+    np.testing.assert_array_equal(back[0].adds, b1.adds)
+    np.testing.assert_array_equal(back[1].removes, b2.removes)
+    rt = EdgeBatch.from_record(b1.to_record())
+    assert rt.version == 4 and rt.adds.dtype == np.int32
+
+
+def test_log_version_monotonicity_enforced():
+    log = MutationLog()
+    log.append(adds=[(0, 1)])
+    with pytest.raises(ValueError, match="does not follow"):
+        log.record(EdgeBatch(adds=np.zeros((0, 2), np.int32),
+                             removes=np.zeros((0, 2), np.int32), version=5))
+    recs = log.to_records()
+    recs[0]["version"] = 7
+    with pytest.raises(ValueError, match="corrupt"):
+        MutationLog.from_records(recs)
+    with pytest.raises(ValueError, match="\\(k, 2\\)"):
+        log.append(adds=[(0, 1, 2)])
+
+
+def test_seeded_log_is_deterministic_and_effective():
+    g = _graph()
+    a = MutationLog.seeded(g, 4, seed=11, batch_edges=8)
+    b = MutationLog.seeded(g, 4, seed=11, batch_edges=8)
+    assert a.to_records() == b.to_records()
+    assert MutationLog.seeded(g, 4, seed=12).to_records() != a.to_records()
+    # every batch is effective structural change, never self-loops
+    live = {(int(u), int(v)) for u, v in zip(g.edge_src, g.edge_dst)
+            if u != v}
+    touched = 0
+    for batch in a:
+        for u, v in batch.adds:
+            assert u != v and (int(u), int(v)) not in live
+            live.add((int(u), int(v)))
+        for u, v in batch.removes:
+            assert (int(u), int(v)) in live
+            live.discard((int(u), int(v)))
+        touched += batch.size
+    assert touched > 0
+
+
+# ---------------------------------------------------------------------------
+# DynamicGraph: delta application vs the from-scratch build
+
+
+def test_delta_walk_view_bit_identical_to_fresh_build():
+    g = _graph(seed=3)
+    dyn = DynamicGraph(g, **BUILD)
+    for batch in MutationLog.seeded(g, 4, seed=7):
+        dyn.apply(batch)
+    fresh = _fresh(dyn)
+    m = fresh.m
+    assert dyn.dg.m == m == dyn.live_edges
+    # live prefix of the CSR walk arrays: the exact bits a rebuild produces
+    np.testing.assert_array_equal(np.asarray(dyn.dg.edge_src)[:m],
+                                  np.asarray(fresh.edge_src))
+    np.testing.assert_array_equal(np.asarray(dyn.dg.edge_dst)[:m],
+                                  np.asarray(fresh.edge_dst))
+    np.testing.assert_array_equal(np.asarray(dyn.dg.out_offsets),
+                                  np.asarray(fresh.out_offsets))
+    np.testing.assert_array_equal(np.asarray(dyn.dg.out_degree),
+                                  np.asarray(fresh.out_degree))
+    # everything past the live prefix is dead capacity (sentinel rows plus
+    # recycled tombstones) — the alive mask is what walk draws respect
+    assert np.all(np.asarray(dyn._walk_alive)[:m])
+    assert not np.any(np.asarray(dyn._walk_alive)[m:])
+
+
+def test_delta_push_table_answers_match_fresh_build():
+    g = _graph(seed=3)
+    dyn = DynamicGraph(g, **BUILD)
+    for batch in MutationLog.seeded(g, 4, seed=7):
+        dyn.apply(batch)
+    fresh = _fresh(dyn)
+    np.testing.assert_allclose(_push_pi(dyn.dg), _push_pi(fresh),
+                               rtol=1e-5, atol=1e-7)
+    # delta rows kept row_map ascending (the sliced-SpMM contract) with the
+    # sentinel-n free rows sorted to the tail
+    rm = np.asarray(dyn.dg.in_row_map)
+    assert np.all(np.diff(rm) >= 0) and rm[-1] == g.n
+
+
+@pytest.mark.parametrize("seed,k", [(0, 1), (1, 3), (2, 6)])
+def test_apply_then_compact_bit_identity(seed, k):
+    """The tentpole property: compact() after k streamed batches returns a
+    residency bit-identical (all eight arrays) to building from scratch at
+    the same version."""
+    g = _graph(seed=seed)
+    dyn = DynamicGraph(g, **BUILD)
+    for batch in MutationLog.seeded(g, k, seed=seed + 10, batch_edges=8):
+        dyn.apply(batch)
+    fresh = _fresh(dyn)
+    compacted = dyn.compact()
+    _assert_dg_identical(compacted, fresh)
+    assert dyn.version == k
+    # compaction preserves the mirror: the stream continues at version k+1
+    info = dyn.mutate(adds=[(0, 9)])
+    assert info.version == k + 1 and dyn.version == k + 1
+
+
+def test_answers_invariant_to_compaction_timing():
+    """When compaction runs must not change what queries return: never,
+    mid-stream, or after every batch give the same FORA answers."""
+    g = _graph(seed=5)
+    log = MutationLog.seeded(g, 4, seed=3)
+    pis = []
+    for compact_after in ((), (2,), (1, 2, 3, 4)):
+        dyn = DynamicGraph(g, **BUILD)
+        for i, batch in enumerate(log, start=1):
+            dyn.apply_record(batch.to_record())     # WAL-replay entry
+            if i in compact_after:
+                dyn.compact()
+        res = fora_fused(dyn.dg, np.asarray([0, 4]), ForaParams(),
+                         jax.random.PRNGKey(2), num_walks=64)
+        pis.append(np.asarray(res.pi))
+    np.testing.assert_allclose(pis[1], pis[0], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(pis[2], pis[0], rtol=1e-4, atol=1e-6)
+
+
+def test_add_then_remove_restores_original_residency():
+    g = _graph(seed=6)
+    base = DeviceGraph.from_graph(g, layout="sliced", **BUILD)
+    dyn = DynamicGraph(g, **BUILD)
+    live = {(int(u), int(v)) for u, v in zip(g.edge_src, g.edge_dst)}
+    adds = [(u, v) for u in range(g.n) for v in range(g.n)
+            if u != v and (u, v) not in live][:3]
+    dyn.mutate(adds=adds)
+    dyn.mutate(removes=adds)
+    assert dyn.version == 2 and len(dyn.log) == 2
+    _assert_dg_identical(dyn.compact(), base)
+
+
+def test_apply_rejects_out_of_order_and_out_of_range():
+    g = _graph()
+    dyn = DynamicGraph(g, **BUILD)
+    batch = dyn.log.append(adds=[(0, 1)])
+    dyn.apply(batch)
+    with pytest.raises(ValueError, match="does not follow"):
+        dyn.apply(batch)                            # replayed twice
+    with pytest.raises(ValueError, match="out of range"):
+        dyn.mutate(adds=[(0, g.n)])
+    # a graph not in from_edges canonical form is rejected at construction
+    import dataclasses as dc
+    scrambled = dc.replace(g, edge_src=g.edge_src[::-1].copy(),
+                           edge_dst=g.edge_dst[::-1].copy())
+    with pytest.raises(ValueError, match="from_edges-normalised"):
+        DynamicGraph(scrambled, **BUILD)
+
+
+def test_capacity_growth_preserves_identity():
+    """Enough churn to outgrow the initial padded capacity: the device
+    tables re-pad transparently and the compaction identity still holds."""
+    g = _graph(seed=9, m=60)
+    dyn = DynamicGraph(g, **BUILD)
+    cap0 = int(dyn._push_rm.shape[0])
+    log = MutationLog.seeded(g, 24, seed=4, batch_edges=16, add_frac=0.8)
+    for batch in log:
+        dyn.apply(batch)
+    assert int(dyn._push_rm.shape[0]) > cap0        # growth actually fired
+    _assert_dg_identical(dyn.compact(), _fresh(dyn))
+
+
+def test_delta_apply_is_host_sync_free():
+    """The zero-host-sync serving contract survives delta-resident
+    execution: applying batches and running fused queries on the mutated
+    residency triggers no device->host transfer; the caller's readout is
+    the single sanctioned sync."""
+    g = _graph(seed=8)
+    dyn = DynamicGraph(g, **BUILD)
+    log = MutationLog.seeded(g, 3, seed=2)
+    with jax.transfer_guard_device_to_host("disallow"):
+        for batch in log:
+            dyn.apply(batch)
+        res = fora_fused(dyn.dg, np.asarray([0, 1]), ForaParams(),
+                         jax.random.PRNGKey(0), num_walks=32)
+    pi = np.asarray(res.pi)
+    assert pi.shape == (2, g.n) and np.isfinite(pi).all()
+
+
+# ---------------------------------------------------------------------------
+# incremental invalidation: index rebind/retire/refresh + cache TTL tuning
+
+
+def test_walk_index_rebind_and_refresh_hottest():
+    g = _graph(seed=2)
+    dyn = DynamicGraph(g, **BUILD)
+    idx = WalkIndex.build(dyn.dg, width=4, alpha=0.2, seed=1)
+    cache = ResultCache(capacity=32)
+    live = {(int(u), int(v)) for u, v in zip(g.edge_src, g.edge_dst)}
+    adds, used = [], set()
+    for u in range(g.n):                            # two fresh sources
+        for v in range(g.n):
+            if u != v and u not in used and (u, v) not in live:
+                adds.append((u, v))
+                used.add(u)
+                break
+        if len(adds) == 2:
+            break
+    info = dyn.mutate(adds=adds)
+    idx.rebind(dyn.dg, graph_version=info.version)
+    assert idx.graph_version == info.version
+    idx.retire(info.affected)
+    assert idx.partial and idx.coverage(64) == 0.0
+    affected = [int(v) for v in info.affected]
+    assert used <= set(affected)
+    hot = affected[-1]
+    cache.put((hot, 0.5, 0), value=None, cost=3.0)
+    assert cache.get((hot, 0.5, 0)) is not None     # 1 hit -> heat 4.0
+    picked = idx.refresh_hottest(info.affected, budget=1,
+                                 heat=cache.source_heat())
+    assert picked.tolist() == [hot]
+    budgets = np.asarray(idx.budget)
+    assert budgets[hot] == 4                        # refreshed to full
+    cold = [v for v in affected if v != hot]
+    assert all(budgets[v] == 0 for v in cold)       # remainder stays retired
+    assert idx.refresh_hottest(info.affected, budget=0).size == 0
+
+
+def test_walk_index_rebind_rejects_node_count_mismatch():
+    g = _graph()
+    idx = WalkIndex.build(DeviceGraph.from_graph(g, layout="sliced", **BUILD),
+                          width=2, alpha=0.2)
+    with pytest.raises(ValueError, match="node additions"):
+        idx.rebind(types.SimpleNamespace(n=g.n + 1))
+
+
+def test_result_cache_ttl_auto_tunes_from_update_cadence():
+    cache = ResultCache(4, ttl_update_factor=3.0)
+    assert cache.ttl is None and cache.update_cadence is None
+    cache.note_update(0.0)
+    assert cache.ttl is None                        # one update: no gap yet
+    cache.note_update(3.0)
+    assert cache.update_cadence == 3.0 and cache.ttl == 9.0
+    cache.note_update(6.0)
+    assert cache.ttl == 9.0                         # steady cadence: stable
+    cache.note_update(7.0)                          # faster churn: gap 1
+    assert cache.update_cadence == 2.0 and cache.ttl == 6.0
+    # cadence state survives a snapshot/recover round-trip
+    other = ResultCache(4, ttl_update_factor=3.0)
+    other.load_cadence_state(cache.cadence_state())
+    assert other.ttl == cache.ttl
+    other.note_update(9.0)
+    cache.note_update(9.0)
+    assert other.ttl == cache.ttl
+    with pytest.raises(ValueError):
+        ResultCache(4, ttl_update_factor=0.0)
+
+
+def test_result_cache_source_heat_aggregates_by_source():
+    cache = ResultCache(8)
+    cache.put((3, "a"), cost=2.0)
+    cache.put((3, "b"), cost=1.0)
+    cache.put((5, "c"), cost=1.0)
+    cache.get((3, "a"))
+    cache.get((3, "a"))
+    cache.get((3, "b"))
+    cache.get((5, "c"))
+    heat = cache.source_heat()
+    assert set(heat) == {3, 5}
+    assert heat[3] > heat[5] > 0.0                  # hits + saved core-s
+    cache.put(7, cost=0.0)                          # non-tuple keys work too
+    assert cache.source_heat()[7] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# metrics sinks
+
+
+def test_metrics_sinks_dispatch_and_jsonl_rows(tmp_path, capsys):
+    assert isinstance(open_sink(None), NullSink)
+    assert isinstance(open_sink(""), NullSink)
+    assert isinstance(open_sink("-"), StdoutSink)
+    NullSink().emit("anything", x=1)                # no-op by contract
+    path = tmp_path / "out" / "rows.jsonl"
+    with open_sink(str(path)) as sink:
+        assert isinstance(sink, JsonlSink)
+        sink.emit("occupancy", t=1.5, busy=3)
+        sink.emit("mutation", t=2.0, version=1)
+        assert sink.rows_emitted == 2
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    assert rows[0] == {"busy": 3, "kind": "occupancy", "t": 1.5}
+    assert [r["kind"] for r in rows] == ["occupancy", "mutation"]
+    stdout_sink = StdoutSink()
+    stdout_sink.emit("k", v=1)
+    assert json.loads(capsys.readouterr().out) == {"kind": "k", "v": 1}
+
+
+# ---------------------------------------------------------------------------
+# serving integration: seeded mutation stream, replay determinism
+
+
+def _factory(mean=0.05, cv=0.3):
+    return lambda job_id, nq, sd: SimJobExecutor(mean=mean, cv=cv, seed=sd)
+
+
+def _runtime(wal_dir=None, *, cache=None):
+    rt = ServingRuntime(
+        CorePool.of(4), _factory(),
+        ServingConfig(scaling_factor=0.9, sample_frac=0.05), cache=cache)
+    if wal_dir is not None:
+        rt.attach_wal(WriteAheadLog(wal_dir, fsync=False), snapshot_every=5)
+    return rt
+
+
+def _submit_small(rt):
+    rt.submit_poisson(4, 1.2, queries=(10, 25), deadline=(2.0, 4.0), seed=3)
+
+
+def _schedule(rt):
+    rt.schedule_mutations(5, 1.0, seed=9, graph_n=200, affected_frac=0.05,
+                          refresh_budget=4, node_cost=0.01)
+
+
+def _ledger(rt):
+    return (rt.mutations_applied, rt.pending_refresh, rt.refresh_core_s,
+            rt.rebuild_core_s, rt.graph_version)
+
+
+class _ListSink(MetricsSink):
+    def __init__(self):
+        self.rows = []
+
+    def emit(self, kind, **fields):
+        self.rows.append({"kind": kind, **fields})
+
+
+def _mutation_rows(sink):
+    return [r for r in sink.rows if r["kind"] == "mutation"]
+
+
+def test_serving_mutation_stream_is_deterministic():
+    def build():
+        rt = _runtime(cache=ResultCache(64, ttl_update_factor=4.0))
+        _submit_small(rt)
+        _schedule(rt)
+        return rt
+
+    a, b = build(), build()
+    ra, rb = a.run(), b.run()
+    assert ra.records == rb.records
+    assert _ledger(a) == _ledger(b)
+    assert a.mutations_applied == 5 and a.graph_version == 5
+    assert a.refresh_core_s < a.rebuild_core_s
+    assert a.cache.ttl is not None and a.cache.ttl == b.cache.ttl
+
+
+def test_schedule_mutations_validates():
+    rt = _runtime()
+    with pytest.raises(ValueError, match="rate"):
+        rt.schedule_mutations(3, 0.0)
+    rt.schedule_mutations(2, 1.0, seed=1)
+    with pytest.raises(ValueError, match="already"):
+        rt.schedule_mutations(2, 1.0, seed=1)
+
+
+def test_on_mutate_hook_applies_real_batches():
+    """The daemon wiring: on_mutate applies a real DynamicGraph batch and
+    its ApplyInfo.affected overrides the simulated affected count."""
+    g = _graph(seed=4)
+    dyn = DynamicGraph(g, **BUILD)
+    mlog = MutationLog.seeded(g, 3, seed=11, batch_edges=6)
+    infos = []
+
+    def on_mutate(ordinal, t):
+        info = dyn.apply(mlog[ordinal])
+        infos.append(info)
+        return info
+
+    rt = _runtime(cache=ResultCache(64, ttl_update_factor=2.0))
+    _submit_small(rt)
+    rt.schedule_mutations(3, 2.0, seed=5, graph_n=g.n, affected_frac=0.1,
+                          refresh_budget=2, node_cost=0.01,
+                          on_mutate=on_mutate)
+    rt.run()
+    assert rt.mutations_applied == 3 and dyn.version == 3
+    assert len(infos) == 3 and rt.graph_version == 3
+    affected = [int(np.asarray(i.affected).size) for i in infos]
+    assert rt.pending_refresh == sum(max(0, a - 2) for a in affected)
+    assert rt.refresh_core_s == pytest.approx(
+        0.01 * sum(min(a, 2) for a in affected))
+
+
+def test_mutation_recovery_and_replay_muted_metrics(tmp_path):
+    """Crash mid-stream, recover: records, graph_version, the refresh
+    ledgers and the auto-tuned TTL all match the uncrashed run — and
+    replayed mutation events re-emit NO metric rows (crash-portion rows
+    plus recovered-portion rows tile the stream exactly once)."""
+    ref = _runtime(cache=ResultCache(64, ttl_update_factor=4.0))
+    ref_sink = _ListSink()
+    ref.controller.metrics = ref_sink
+    _submit_small(ref)
+    _schedule(ref)
+    ref_res = ref.run()
+    assert len(_mutation_rows(ref_sink)) == 5
+    cache_rows = [r for r in ref_sink.rows if r["kind"] == "cache"]
+    assert len(cache_rows) == 5 and all("ttl" in r for r in cache_rows)
+    assert all("t" in r for r in ref_sink.rows)     # virtual time only
+
+    point = ref.events_processed // 2
+    rt = _runtime(tmp_path, cache=ResultCache(64, ttl_update_factor=4.0))
+    crash_sink = _ListSink()
+    rt.controller.metrics = crash_sink
+    _submit_small(rt)
+    _schedule(rt)
+    assert rt.run(max_events=point) is None
+
+    rt2, info = ServingRuntime.recover(tmp_path, _factory(), fsync=False)
+    assert info.logged_events == point
+    rec_sink = _ListSink()
+    rt2.controller.metrics = rec_sink
+    rep = rt2.run()
+    assert rep.records == ref_res.records
+    assert _ledger(rt2) == _ledger(ref)
+    assert rt2.cache.ttl == ref.cache.ttl
+    assert (len(_mutation_rows(crash_sink))
+            + len(_mutation_rows(rec_sink))) == 5

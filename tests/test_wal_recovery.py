@@ -202,6 +202,43 @@ def test_engine_crash_anywhere_never_loses_a_job(tmp_path):
         assert rt2.engine.busy == 0
 
 
+def test_mutation_crash_anywhere_matches_uncrashed(tmp_path):
+    """ISSUE-10: the crash-after-every-prefix property extended to runs
+    with scheduled graph-mutation events (DESIGN.md §16) — graph_version,
+    the incremental-refresh ledgers, and the cadence-tuned cache TTL must
+    recover bit-identically along with the records."""
+    def build(wal_dir=None):
+        rt = _runtime(wal_dir, pool_cores=4,
+                      cache=ResultCache(64, ttl_update_factor=4.0))
+        _submit_small(rt)
+        rt.schedule_mutations(5, 1.0, seed=9, graph_n=200,
+                              affected_frac=0.05, refresh_budget=4,
+                              node_cost=0.01)
+        return rt
+
+    ref_rt = build()
+    ref = ref_rt.run()
+    assert ref_rt.mutations_applied == 5 and ref_rt.graph_version == 5
+    assert ref_rt.cache.ttl is not None
+    total = ref_rt.events_processed
+    assert total > 10
+
+    for point in range(1, total):
+        wal_dir = tmp_path / f"mcrash_{point:03d}"
+        rt = build(wal_dir)
+        assert rt.run(max_events=point) is None
+        rt2, info = ServingRuntime.recover(wal_dir, _factory(), fsync=False)
+        assert info.logged_events == point
+        rep = rt2.run()
+        assert rep.records == ref.records, f"diverged after crash @ {point}"
+        assert rt2.graph_version == 5
+        assert rt2.mutations_applied == 5
+        assert rt2.pending_refresh == ref_rt.pending_refresh
+        assert rt2.refresh_core_s == ref_rt.refresh_core_s
+        assert rt2.rebuild_core_s == ref_rt.rebuild_core_s
+        assert rt2.cache.ttl == ref_rt.cache.ttl
+
+
 def test_recovery_determinism_with_failures_and_cache(tmp_path):
     """Crash-transparency through the full stack: device failures mid-
     trace, a shared result cache, and explicit sources. Admission logs and

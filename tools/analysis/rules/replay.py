@@ -3,8 +3,9 @@
 Recovery (DESIGN.md §12) is verified deterministic *re-execution*: the
 rebuilt runtime must retrace the crashed run bit-for-bit, so nothing in the
 modules whose state reaches the WAL (``serving/``, ``ft/``,
-``checkpoint/``) may depend on wall clocks, OS entropy, or unordered
-iteration. Flags, in those modules:
+``checkpoint/``, and the dynamic-graph subsystem ``dyn/`` whose mutation
+stream is WAL-replayed, DESIGN.md §16) may depend on wall clocks, OS
+entropy, or unordered iteration. Flags, in those modules:
 
 - any ``time.*`` clock use — calls *and* bare references (a
   ``clock=time.monotonic`` default smuggles the wall clock in),
@@ -31,7 +32,7 @@ from ..core import Finding, Project, rule
 from ._util import (NP_RANDOM_OK, is_np_random, module_aliases, np_aliases,
                     qualname_stack)
 
-SCOPE_DIRS = {"serving", "ft", "checkpoint"}
+SCOPE_DIRS = {"serving", "ft", "checkpoint", "dyn"}
 TIME_ATTRS = {"time", "monotonic", "perf_counter", "process_time",
               "time_ns", "monotonic_ns", "perf_counter_ns"}
 # (path suffix, enclosing qualname) pairs exempt from the time.* check

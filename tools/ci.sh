@@ -85,6 +85,11 @@ $RUN python -m benchmarks.serving_sim --chaos
 # lane-occupancy accounting surviving recovery
 $RUN python -m benchmarks.serving_sim --chaos --engine
 
+# churn smoke (DESIGN.md §16): the anchor workload under a seeded graph-
+# mutation stream — deterministic replay, anchor SLA hit-rate fully
+# sustained, incremental refresh < 25% of full-rebuild core-seconds
+$RUN python -m benchmarks.serving_sim --check --mutation-rate 0.5
+
 trap 'rm -f BENCH_kernels.committed.json BENCH_kernels.fresh1.json \
             BENCH_kernels.fresh2.json BENCH_kernels.merged.json' EXIT
 $RUN python -m benchmarks.run --only kernels,fora_hot,serving,index --json BENCH_kernels.fresh1.json
